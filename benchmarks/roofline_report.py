@@ -1,0 +1,91 @@
+"""Roofline table from the dry-run sweep JSON (results/dryrun_all.json).
+
+The dry-run itself must run in its own process (512 fake devices); this
+module only reads its JSON output and emits the per-(arch x shape x mesh)
+roofline rows for benchmarks/run.py and EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_all.json")
+
+
+def load_records(path: str = DEFAULT_PATH):
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def roofline_rows(path: str = DEFAULT_PATH):
+    rows = []
+    for rec in load_records(path):
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skip":
+            rows.append((name, 0.0, "SKIP:" + rec["reason"].split(";")[0][:80]))
+            continue
+        if rec["status"] != "ok":
+            rows.append((name, 0.0, "FAIL:" + rec.get("error", "?")[:80]))
+            continue
+        r = rec.get("roofline")
+        if not r:
+            rows.append((name, 0.0, f"compiled_ok;compile_s={rec['compile_s']}"))
+            continue
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        derived = (
+            f"dom={r['dominant']};compute={r['compute_s']:.4f};"
+            f"mem={r['memory_s']:.4f};coll={r['collective_s']:.4f}"
+        )
+        uf = r.get("useful_fraction")
+        if uf is not None:
+            derived += f";useful={uf:.3f}"
+        rows.append((name, step_s * 1e6, derived))
+    return rows
+
+
+def markdown_table(path: str = DEFAULT_PATH) -> str:
+    """EXPERIMENTS.md-ready table."""
+    recs = load_records(path)
+    lines = [
+        "| arch | shape | mesh | status | compute_s | memory_s | collective_s "
+        "| dominant | useful | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if rec["status"] == "skip":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | SKIP | — | — | — | — | — | — |"
+            )
+            continue
+        if rec["status"] != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | FAIL | — | — | — | — | — | — |"
+            )
+            continue
+        mem = rec.get("memory_analysis", {})
+        temp = (mem.get("temp_bytes") or 0) / 1e9
+        r = rec.get("roofline")
+        if r:
+            uf = r.get("useful_fraction")
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | ok "
+                f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+                f"| {r['dominant']} | {uf:.3f} | {temp:.2f} |"
+                if uf is not None else
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | ok "
+                f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+                f"| {r['dominant']} | — | {temp:.2f} |"
+            )
+        else:
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | ok (compile proof) "
+                f"| — | — | — | — | — | {temp:.2f} |"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

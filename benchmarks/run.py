@@ -1,0 +1,33 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   PYTHONPATH=src python -m benchmarks.run [--quick]
+#
+# Tables 1-4 mirror the paper's Tables 1-3 + Appendix B progression; the
+# roofline rows read the dry-run sweep JSON (produced separately by
+# ``python -m repro.launch.dryrun --arch all --shape all --both-meshes
+# --json results/dryrun_all.json`` — that entry point needs its own process
+# because it forces 512 host devices).
+import sys
+
+
+def main() -> None:
+    rows = []
+    from benchmarks import tables
+
+    for fn in tables.ALL_TABLES:
+        try:
+            rows.extend(fn())
+        except Exception as e:  # noqa: BLE001 — report per-table
+            rows.append((f"{fn.__name__}/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+
+    from benchmarks import roofline_report
+
+    rows.extend(roofline_report.roofline_rows())
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""FedNL-probe: the paper's technique as a first-class feature of the LM
+framework — federated Newton training of a logistic-regression head on top of
+a frozen assigned-architecture backbone (DESIGN.md §4).
+
+Each client holds private token sequences; the frozen backbone (here the
+reduced granite-3-2b for CPU speed) maps them to pooled features, and FedNL
+trains the binary classifier head with compressed Hessian communication.
+
+    PYTHONPATH=src python examples/fednl_probe.py [--arch granite-3-2b]
+"""
+
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import FedNLConfig, run_fednl
+from repro.models import init_lm_params
+from repro.models.lm import _run_blocks, COMPUTE_DTYPE
+from repro.data import partition_clients
+
+
+def backbone_features(params, cfg, tokens):
+    """Frozen-backbone mean-pooled features (B, d_model)."""
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    h = _run_blocks(x, params, cfg, jnp.arange(tokens.shape[1]))
+    return jnp.mean(h.astype(jnp.float64), axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--samples", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    print(f"backbone: {cfg.name} (reduced: {cfg.n_layers}L d={cfg.d_model})")
+
+    # synthetic private data: class decides token distribution
+    rng = np.random.default_rng(0)
+    n_total = args.clients * args.samples
+    labels = np.where(rng.random(n_total) < 0.5, 1.0, -1.0)
+    lo, hi = cfg.vocab // 4, 3 * cfg.vocab // 4
+    tokens = np.where(
+        (labels[:, None] > 0), rng.integers(0, lo, (n_total, 16)),
+        rng.integers(hi, cfg.vocab, (n_total, 16)),
+    ).astype(np.int32)
+
+    feats = np.asarray(backbone_features(params, cfg, jnp.asarray(tokens)))
+    feats = feats / (np.linalg.norm(feats, axis=1, keepdims=True) + 1e-9)
+
+    # federated logistic head on the features (the paper's exact problem class)
+    z = jnp.asarray(partition_clients(feats, labels, args.clients, args.samples,
+                                      seed=0, shuffle=False))
+    fed_cfg = FedNLConfig(compressor="toplek", k_multiplier=8.0, lam=1e-3)
+    res = run_fednl(z, fed_cfg, rounds=100, tol=1e-13)
+    print(f"FedNL(B)/toplek head: {res.rounds} rounds, "
+          f"||grad|| = {res.grad_norms[-1]:.2e}")
+
+    # train-set accuracy of the probe
+    margin = feats @ res.x * labels
+    acc = float((margin > 0).mean())
+    print(f"probe train accuracy: {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Re-measure the three decode records whose sweep pass ran with the (later
+reverted-to-conditional) q/k/v-dh constraint, and patch results/dryrun_all.json
+so the single-pod roofline table reflects the shipped configuration."""
+
+import json
+import sys
+
+from repro.launch.dryrun import run_one
+
+TARGETS = [("mixtral-8x22b", "mixtral-8x22b")]
+
+path = "results/dryrun_all.json"
+records = json.load(open(path))
+for arch, name in TARGETS:
+    rec = run_one(arch, "decode_32k", False, roofline_probes=True)
+    for i, old in enumerate(records):
+        if old["arch"] == name and old["shape"] == "decode_32k" and old["mesh"] == "16x16":
+            records[i] = rec
+            print("patched", name)
+            break
+with open(path, "w") as fh:
+    json.dump(records, fh, indent=2, default=float)
+print("done")

@@ -1,0 +1,3 @@
+from repro.baselines.numpy_reference import run_fednl_numpy_reference
+
+__all__ = ["run_fednl_numpy_reference"]

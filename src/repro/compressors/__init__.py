@@ -1,0 +1,25 @@
+from repro.compressors.core import (
+    Compressor,
+    CompressorSpec,
+    get_compressor,
+    COMPRESSORS,
+    topk,
+    randk,
+    randseqk,
+    toplek,
+    natural,
+    identity,
+)
+
+__all__ = [
+    "Compressor",
+    "CompressorSpec",
+    "get_compressor",
+    "COMPRESSORS",
+    "topk",
+    "randk",
+    "randseqk",
+    "toplek",
+    "natural",
+    "identity",
+]

@@ -1,0 +1,20 @@
+# The paper's primary contribution: the FedNL algorithm family in JAX.
+from repro.core.fednl import FedNLConfig, FedNLState, fednl_init, make_fednl_round
+from repro.core.fednl_ls import make_fednl_ls_round
+from repro.core.fednl_pp import FedNLPPState, fednl_pp_init, make_fednl_pp_round
+from repro.core.runner import run_fednl, newton_baseline, gd_baseline, eval_full
+
+__all__ = [
+    "FedNLConfig",
+    "FedNLState",
+    "fednl_init",
+    "make_fednl_round",
+    "make_fednl_ls_round",
+    "FedNLPPState",
+    "fednl_pp_init",
+    "make_fednl_pp_round",
+    "run_fednl",
+    "newton_baseline",
+    "gd_baseline",
+    "eval_full",
+]

@@ -1,0 +1,13 @@
+from repro.data.libsvm import parse_libsvm, write_libsvm
+from repro.data.synthetic import make_synthetic_logreg, DATASET_SHAPES
+from repro.data.partition import partition_clients, absorb_labels, add_intercept
+
+__all__ = [
+    "parse_libsvm",
+    "write_libsvm",
+    "make_synthetic_logreg",
+    "DATASET_SHAPES",
+    "partition_clients",
+    "absorb_labels",
+    "add_intercept",
+]

@@ -1,0 +1,13 @@
+from repro.distributed.fednl_shard import (
+    make_sharded_fednl_round,
+    make_sharded_fednl_step,
+    shard_problem,
+    sharded_fednl_init,
+)
+
+__all__ = [
+    "make_sharded_fednl_round",
+    "make_sharded_fednl_step",
+    "shard_problem",
+    "sharded_fednl_init",
+]

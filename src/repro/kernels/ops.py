@@ -1,0 +1,97 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On the CPU container the kernels execute in interpret mode (the kernel body
+runs as Python/jnp — bit-accurate vs the TPU semantics for these ops); on a
+TPU backend `interpret=False` compiles through Mosaic.  `_should_interpret`
+picks automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hessian_syrk import hessian_syrk_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "interpret"))
+def hessian_syrk(
+    z: jax.Array,
+    h: jax.Array,
+    *,
+    block_d: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """H = Z^T diag(h) Z via the upper-triangular Pallas SYRK kernel.
+
+    z: (n, d) design matrix, h: (n,) nonneg sample weights -> (d, d) symmetric.
+    Zero-pads to tile multiples (zero-weight rows are exact no-ops; padded
+    feature columns are sliced away), mirrors the strict-upper tiles.
+    """
+    n, d = z.shape
+    interp = _should_interpret() if interpret is None else interpret
+    zp = _pad_to(_pad_to(z, 0, block_n), 1, block_d)
+    hp = _pad_to(h, 0, block_n)
+    u = hessian_syrk_pallas(
+        zp, hp, block_d=block_d, block_n=block_n, interpret=interp
+    )
+    dp = zp.shape[1]
+    # mirror strict-upper block tiles; diagonal tiles are already full blocks
+    blk = jnp.arange(dp) // block_d
+    strict_upper = blk[None, :] > blk[:, None]
+    diag_block = blk[None, :] == blk[:, None]
+    us = jnp.where(strict_upper, u, 0.0)
+    full = us + us.T + jnp.where(diag_block, u, 0.0)
+    return full[:d, :d]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention, (seq, heads, head_dim) layout (matches ref.py).
+
+    Pads seq to block multiples (padded queries are discarded; padded keys are
+    masked out by causality/window because they sit at positions >= seq).
+    """
+    sq, hn, dh = q.shape
+    sk = k.shape[0]
+    interp = _should_interpret() if interpret is None else interpret
+    qt = _pad_to(jnp.swapaxes(q, 0, 1), 1, block_q)
+    kt = _pad_to(jnp.swapaxes(k, 0, 1), 1, block_k)
+    vt = _pad_to(jnp.swapaxes(v, 0, 1), 1, block_k)
+    out = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interp, kv_len=sk,
+    )
+    return jnp.swapaxes(out[:, :sq], 0, 1)

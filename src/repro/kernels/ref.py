@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the `ref.py` ground truth).
+
+Every kernel in this package is validated against these references across a
+shape/dtype sweep (tests/test_kernels.py) in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hessian_syrk_ref(z: jax.Array, h: jax.Array) -> jax.Array:
+    """H = Z^T diag(h) Z for Z: (n, d), h: (n,) -> (d, d) symmetric."""
+    return z.T @ (h[:, None] * z)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Dense attention reference.  q,k,v: (seq, heads, head_dim) single batch.
+
+    window: sliding-window size W — query t attends to keys in
+    [t - W + 1, t] (combined with causality).  None = full causal/bidir.
+    """
+    sq, hn, dh = q.shape
+    sk = k.shape[0]
+    s = 1.0 / jnp.sqrt(dh) if scale is None else scale
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * s
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("hqk,khd->qhd", p, v)

@@ -1,0 +1,241 @@
+"""Input specs + sharding assembly for the multi-pod dry-run.
+
+`build_dryrun(cfg, shape_name, mesh)` returns everything `.lower().compile()`
+needs for one (architecture x input-shape x mesh) combination:
+ShapeDtypeStruct stand-ins for every argument (weak-type-correct, shardable,
+zero device allocation — params/opt/cache come from `jax.eval_shape` over the
+real init functions) plus in/out shardings.
+
+Shapes (assigned):
+    train_4k     seq 4,096    global_batch 256   -> train_step
+    prefill_32k  seq 32,768   global_batch 32    -> prefill_step
+    decode_32k   seq 32,768   global_batch 128   -> serve_step (1 new token)
+    long_500k    seq 524,288  global_batch 1     -> serve_step; requires a
+                 sub-quadratic arch (SSM / hybrid / SWA) — others are skipped
+                 with a reason (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import data_axes
+from repro.models.encdec import (
+    encdec_cache_specs,
+    encdec_param_specs,
+    init_encdec_cache,
+    init_encdec_params,
+)
+from repro.models.lm import (
+    cache_specs,
+    init_decode_cache,
+    init_lm_params,
+    lm_param_specs,
+    padded_vocab,
+)
+from repro.train.optimizer import adamw_init
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec(4096, 256, "train"),
+    "prefill_32k": ShapeSpec(32768, 32, "prefill"),
+    "decode_32k": ShapeSpec(32768, 128, "decode"),
+    "long_500k": ShapeSpec(524288, 1, "decode"),
+}
+
+ENCDEC_DECODE_SRC = 4096  # cross-attention K/V length for decode shapes
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    step_fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    skip: str | None = None  # reason, when the combination is skipped
+    note: str = ""
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _abstract(f, *a, **kw):
+    return jax.eval_shape(lambda: f(*a, **kw))
+
+
+def _init_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return init_encdec_params, encdec_param_specs
+    return (lambda key, c: init_lm_params(key, c)), lm_param_specs
+
+
+def sanitize_specs(abstract_tree, spec_tree, sizes: dict[str, int]):
+    """Drop spec axes whose mesh size does not divide the dimension (the
+    per-dimension fallback `models.layers.constrain` applies to activations,
+    here applied to parameter/cache specs — e.g. chatglm's d_ff=13696 cannot
+    shard 256-ways under tp2d and falls back to its largest valid axis)."""
+
+    def fix(arr, spec):
+        out = []
+        for dim, entry in zip(arr.shape, tuple(spec) + (None,) * (len(arr.shape) - len(spec))):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            # greedily keep the prefix of axes that still divides
+            kept = []
+            n = 1
+            for a in axes:
+                if dim % (n * sizes[a]) == 0:
+                    kept.append(a)
+                    n *= sizes[a]
+            out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+        return P(*out)
+
+    return jax.tree.map(
+        fix, abstract_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or hasattr(x, "shape"),
+    )
+
+
+def param_abstract_and_shardings(cfg: ArchConfig, mesh: Mesh, serve: bool = False):
+    init, spec_fn = _init_fn(cfg)
+    params = _abstract(init, jax.random.PRNGKey(0), cfg)
+    tp2d = serve and cfg.serve_sharding == "tp2d"
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    specs = sanitize_specs(params, spec_fn(cfg, serve_tp2d=tp2d), sizes)
+    shardings = _ns(mesh, specs)
+    return params, shardings
+
+
+def opt_abstract_and_shardings(params, param_sh, mesh: Mesh):
+    opt = _abstract(adamw_init, params)
+    sh = {
+        "m": param_sh,
+        "v": param_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+    return opt, sh
+
+
+def _batch_abstract(cfg: ArchConfig, batch: int, seq: int, *, dp):
+    """Abstract training/prefill batch + shardings."""
+    specs: dict[str, Any] = {}
+    sh: dict[str, Any] = {}
+    if cfg.family == "encdec":
+        specs["src_embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.float32)
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        sh["src_embeds"] = P(dp, None, None)
+        sh["tokens"] = P(dp, None)
+        sh["labels"] = P(dp, None)
+        return specs, sh
+    text = seq - (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    specs["tokens"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+    sh["tokens"] = P(dp, None)
+    sh["labels"] = P(dp, None)
+    if cfg.family == "vlm":
+        specs["img_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32
+        )
+        sh["img_embeds"] = P(dp, None, None)
+    return specs, sh
+
+
+def build_dryrun(
+    cfg: ArchConfig, shape_name: str, mesh: Mesh, *, batch_override: int | None = None
+) -> DryRunSpec:
+    shape = SHAPES[shape_name]
+    if batch_override is not None:
+        shape = dataclasses.replace(shape, batch=batch_override)
+    dp = data_axes(mesh)
+    dp_size = 1
+    for ax in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh.shape[ax]
+
+    if shape.kind == "decode" and shape_name == "long_500k" and not cfg.sublquadratic:
+        return DryRunSpec(
+            step_fn=None, args=(), in_shardings=None, out_shardings=None,
+            skip=f"{cfg.name} is full-quadratic attention; long_500k needs "
+                 "a sub-quadratic arch (SSM/hybrid/SWA) — skipped per DESIGN.md §4",
+        )
+
+    params, param_sh = param_abstract_and_shardings(
+        cfg, mesh, serve=shape.kind == "decode"
+    )
+    if shape.kind == "decode" and cfg.serve_params_dtype == "bfloat16":
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+            ),
+            params,
+        )
+
+    if shape.kind == "train":
+        accum = max(1, min(cfg.accum_steps, shape.batch // dp_size))
+        cfg_run = dataclasses.replace(cfg, accum_steps=accum)
+        batch_abs, batch_sh = _batch_abstract(cfg_run, shape.batch, shape.seq, dp=dp)
+        opt, opt_sh = opt_abstract_and_shardings(params, param_sh, mesh)
+        step = make_train_step(cfg_run)
+        metrics_sh = {"loss": P(), "grad_norm": P()}
+        return DryRunSpec(
+            step_fn=step,
+            args=(params, opt, batch_abs),
+            in_shardings=(param_sh, opt_sh, _ns(mesh, batch_sh)),
+            out_shardings=(param_sh, opt_sh, _ns(mesh, metrics_sh)),
+            note=f"accum_steps={accum}",
+        )
+
+    if shape.kind == "prefill":
+        batch_abs, batch_sh = _batch_abstract(cfg, shape.batch, shape.seq, dp=dp)
+        step = make_prefill_step(cfg)
+        out_sh = NamedSharding(mesh, P(dp, None))  # (B, Vp) last-pos logits
+        return DryRunSpec(
+            step_fn=step,
+            args=(params, batch_abs),
+            in_shardings=(param_sh, _ns(mesh, batch_sh)),
+            out_shardings=out_sh,
+        )
+
+    # decode
+    batch_axis = dp if shape.batch >= dp_size else None
+    seq_axis = "data" if batch_axis is None else None
+    if cfg.family == "encdec":
+        cache = _abstract(
+            init_encdec_cache, cfg, shape.batch, shape.seq, ENCDEC_DECODE_SRC
+        )
+        cache_sh = _ns(mesh, encdec_cache_specs(cfg, batch_axis=batch_axis, seq_axis=seq_axis))
+    else:
+        cache = _abstract(init_decode_cache, cfg, shape.batch, shape.seq)
+        cache_sh = _ns(mesh, cache_specs(cfg, batch_axis=batch_axis, seq_axis=seq_axis))
+    tokens = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    tokens_sh = NamedSharding(mesh, P(batch_axis, None))
+    logits_sh = NamedSharding(mesh, P(batch_axis, None, None))
+    step = make_serve_step(cfg)
+    return DryRunSpec(
+        step_fn=step,
+        args=(params, cache, tokens),
+        in_shardings=(param_sh, cache_sh, tokens_sh),
+        out_shardings=(logits_sh, cache_sh),
+        note=f"cache_batch_axis={batch_axis} cache_seq_axis={seq_axis}",
+    )

@@ -1,0 +1,81 @@
+"""LM training launcher.
+
+On real hardware this drives the production mesh; in this container it runs
+reduced configs on the host device (or a fake-device mesh via
+XLA_FLAGS=--xla_force_host_platform_device_count=N set BEFORE launch).
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --reduced --steps 50 --batch 8 --seq 64
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import data_axes
+from repro.launch.specs import _ns
+from repro.models import init_lm_params
+from repro.models.encdec import init_encdec_params, encdec_param_specs
+from repro.models.lm import lm_param_specs
+from repro.models.layers import set_sharding_axes
+from repro.train import make_train_step, synthetic_token_stream, adamw_init
+from repro.train.checkpoint import save_checkpoint
+from repro.train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '4x2' -> (data, model) mesh over visible devices")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    init = init_encdec_params if cfg.family == "encdec" else init_lm_params
+    params = init(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = make_train_step(cfg, AdamWConfig(lr=args.lr))
+
+    if args.mesh:
+        dims = tuple(int(v) for v in args.mesh.split("x"))
+        mesh = jax.make_mesh(dims, ("data", "model"))
+        set_sharding_axes(data_axes(mesh), "model",
+                          dict(zip(mesh.axis_names, mesh.devices.shape)))
+        spec_fn = encdec_param_specs if cfg.family == "encdec" else lm_param_specs
+        psh = _ns(mesh, spec_fn(cfg))
+        osh = {"m": psh, "v": psh, "step": NamedSharding(mesh, P())}
+        params = jax.device_put(params, psh)
+        opt = jax.device_put(opt, osh)
+        step = jax.jit(step, in_shardings=(psh, osh, None),
+                       out_shardings=(psh, osh, None))
+    else:
+        step = jax.jit(step)
+
+    stream = synthetic_token_stream(cfg, args.batch, args.seq)
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt, m = step(params, opt, batch)
+        if i % max(1, args.steps // 10) == 0:
+            print(f"step {i:4d} loss {float(m['loss']):.4f}")
+    print(f"{args.steps} steps in {time.perf_counter() - t0:.1f}s")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params)
+        print(f"saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

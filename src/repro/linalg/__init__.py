@@ -1,0 +1,25 @@
+from repro.linalg.triu import (
+    triu_size,
+    triu_indices,
+    pack_triu,
+    unpack_triu,
+    frob_norm_from_packed,
+)
+from repro.linalg.solve import (
+    newton_solve_optionA,
+    newton_solve_optionB,
+    psd_project,
+    cholesky_solve,
+)
+
+__all__ = [
+    "triu_size",
+    "triu_indices",
+    "pack_triu",
+    "unpack_triu",
+    "frob_norm_from_packed",
+    "newton_solve_optionA",
+    "newton_solve_optionB",
+    "psd_project",
+    "cholesky_solve",
+]

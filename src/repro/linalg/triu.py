@@ -1,0 +1,77 @@
+"""Packed upper-triangular representation of symmetric matrices.
+
+The paper (§5.10, §5.13, Appendix C) exploits symmetry of the Hessian: only the
+upper triangle is computed, stored, compressed, and communicated.  We mirror that
+with a packed vector layout of size T = d(d+1)/2.  All FedNL compressors operate
+on this packed form; the dense matrix is only materialized where linear algebra
+needs it (Newton solve on the master).
+
+Layout: row-major upper triangle, i.e. element (i, j) with j >= i sits at
+    offset(i, j) = i*d - i*(i-1)//2 + (j - i)
+
+Frobenius norm of the symmetric matrix from packed form needs off-diagonal
+entries counted twice; `frob_norm_from_packed` handles that with a precomputed
+weight vector (cheap, reused every round — the paper's §5.8 "use symmetry during
+evaluating ||.||_F" trick).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def triu_size(d: int) -> int:
+    """Number of elements in the upper triangle (incl. diagonal) of a d x d matrix."""
+    return d * (d + 1) // 2
+
+
+@functools.lru_cache(maxsize=64)
+def triu_indices(d: int) -> tuple[np.ndarray, np.ndarray]:
+    """Static (rows, cols) index arrays for the packed layout.
+
+    Computed once per dimension and cached (paper §5.11: "computed and stored
+    indices for the upper triangular part once without recomputing").
+    """
+    rows, cols = np.triu_indices(d)
+    return rows.astype(np.int32), cols.astype(np.int32)
+
+
+@functools.lru_cache(maxsize=64)
+def _offdiag_weights(d: int) -> np.ndarray:
+    """Weight 1.0 on diagonal entries, 2.0 off-diagonal (for norms/inner products)."""
+    rows, cols = triu_indices(d)
+    return np.where(rows == cols, 1.0, 2.0)
+
+
+def pack_triu(m: jax.Array) -> jax.Array:
+    """Pack the upper triangle of a symmetric (d, d) matrix into a (T,) vector."""
+    d = m.shape[-1]
+    rows, cols = triu_indices(d)
+    return m[..., rows, cols]
+
+
+def unpack_triu(u: jax.Array, d: int) -> jax.Array:
+    """Unpack a (..., T) packed vector into the full symmetric (..., d, d) matrix."""
+    rows, cols = triu_indices(d)
+    out = jnp.zeros(u.shape[:-1] + (d, d), dtype=u.dtype)
+    out = out.at[..., rows, cols].set(u)
+    # mirror: add transpose, subtract the diagonal we double-counted
+    diag = jnp.diagonal(out, axis1=-2, axis2=-1)  # (..., d)
+    eye = jnp.eye(d, dtype=u.dtype)
+    return out + jnp.swapaxes(out, -1, -2) - diag[..., :, None] * eye
+
+
+def frob_norm_from_packed(u: jax.Array, d: int) -> jax.Array:
+    """||M||_F of the symmetric matrix represented by packed vector u."""
+    w = jnp.asarray(_offdiag_weights(d), dtype=u.dtype)
+    return jnp.sqrt(jnp.sum(w * u * u, axis=-1))
+
+
+def frob_inner_from_packed(u: jax.Array, v: jax.Array, d: int) -> jax.Array:
+    """<U, V>_F for two symmetric matrices in packed form."""
+    w = jnp.asarray(_offdiag_weights(d), dtype=u.dtype)
+    return jnp.sum(w * u * v, axis=-1)

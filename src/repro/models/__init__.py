@@ -1,0 +1,25 @@
+from repro.models.lm import (
+    init_lm_params,
+    lm_loss,
+    lm_forward,
+    init_decode_cache,
+    lm_decode_step,
+)
+from repro.models.encdec import (
+    init_encdec_params,
+    encdec_loss,
+    init_encdec_cache,
+    encdec_decode_step,
+)
+
+__all__ = [
+    "init_lm_params",
+    "lm_loss",
+    "lm_forward",
+    "init_decode_cache",
+    "lm_decode_step",
+    "init_encdec_params",
+    "encdec_loss",
+    "init_encdec_cache",
+    "encdec_decode_step",
+]

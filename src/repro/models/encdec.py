@@ -1,0 +1,292 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2, arXiv:2308.11596).
+
+Per the assignment carve-out, the audio frontend (mel-spectrogram + conv
+feature extractor) is a STUB: `input_specs` supplies precomputed frame
+embeddings (B, S_src, d_model); a learned adapter projection stands in for the
+modality bridge.  This module implements the transformer that consumes them:
+bidirectional encoder + causal decoder with cross-attention (both GQA-capable,
+both scanned/stacked/remat'd like the decoder-only LM).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    chunked_attention,
+    constrain,
+    decode_attention,
+    mlp_apply,
+    rms_norm,
+    rope,
+)
+from repro.models.lm import (
+    _attn_block_init,
+    _dense_init,
+    _mlp_block_init,
+    _norm_init,
+    padded_vocab,
+    _head_matrix,
+)
+
+
+def _enc_blocks_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": _norm_init(cfg.encoder_layers, cfg.d_model),
+        "ln2": _norm_init(cfg.encoder_layers, cfg.d_model),
+        "attn": {
+            k: v[: cfg.encoder_layers]
+            for k, v in _attn_block_init(ks[0], cfg).items()
+        },
+        "mlp": {
+            k: v[: cfg.encoder_layers]
+            for k, v in _mlp_block_init(ks[1], cfg).items()
+        },
+    }
+
+
+def init_encdec_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    vp = padded_vocab(cfg)
+    nl = cfg.n_layers
+    keys = jax.random.split(key, 8)
+    dec: dict[str, Any] = {
+        "ln1": _norm_init(nl, cfg.d_model),
+        "ln2": _norm_init(nl, cfg.d_model),
+        "lnc": _norm_init(nl, cfg.d_model),
+        "attn": _attn_block_init(keys[0], cfg),
+        "cross": _attn_block_init(keys[1], cfg),
+        "mlp": _mlp_block_init(keys[2], cfg),
+    }
+    return {
+        "embed": jax.random.normal(keys[3], (vp, cfg.d_model), dtype=jnp.float32)
+        * 0.02,
+        "frontend_proj": _dense_init(keys[4], 1, (cfg.d_model, cfg.d_model))[0],
+        "enc_blocks": _enc_blocks_init(keys[5], cfg),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype=jnp.float32),
+        "dec_blocks": dec,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype=jnp.float32),
+    }
+
+
+def encdec_param_specs(cfg: ArchConfig, serve_tp2d: bool = False) -> dict:
+    both = ("data", "model")
+    if serve_tp2d:
+        d2 = P(None, None, both)
+        d2t = P(None, both, None)
+        embed_spec = P(both, None)
+        fp = P(None, both)
+    else:
+        d2 = P(None, "data", "model")
+        d2t = P(None, "model", "data")
+        embed_spec = P("model", "data")
+        fp = P("data", "model")
+    attn_spec = {"wq": d2, "wk": d2, "wv": d2, "wo": d2t}
+    mlp_spec = {"w1": d2, "w2": d2t}
+    if cfg.activation == "silu_glu":
+        mlp_spec = dict(mlp_spec, w1g=d2)
+    return {
+        "embed": embed_spec,
+        "frontend_proj": fp,
+        "enc_blocks": {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "attn": dict(attn_spec),
+            "mlp": dict(mlp_spec),
+        },
+        "enc_norm": P(None),
+        "dec_blocks": {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "lnc": P(None, None),
+            "attn": dict(attn_spec),
+            "cross": dict(attn_spec),
+            "mlp": dict(mlp_spec),
+        },
+        "final_norm": P(None),
+    }
+
+
+def _proj_qkv(h, attn_p, cfg: ArchConfig, heads: int):
+    b, s, _ = h.shape
+    out = (h @ attn_p.astype(h.dtype)).reshape(b, s, heads, cfg.head_dim)
+    return constrain(out, "dp", None, None, "tp")
+
+
+def encode(params, cfg: ArchConfig, src_embeds):
+    """src_embeds: (B, S_src, D) frontend-stub frame embeddings."""
+    x = src_embeds.astype(COMPUTE_DTYPE) @ params["frontend_proj"].astype(
+        COMPUTE_DTYPE
+    )
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, bp):
+        def block(c):
+            c = constrain(c, "dp", None, None)
+            h = rms_norm(c, bp["ln1"], cfg.norm_eps)
+            q = _proj_qkv(h, bp["attn"]["wq"], cfg, cfg.n_heads)
+            k = _proj_qkv(h, bp["attn"]["wk"], cfg, cfg.n_kv)
+            v = _proj_qkv(h, bp["attn"]["wv"], cfg, cfg.n_kv)
+            q = rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+            o = chunked_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk, unroll=cfg.unroll_layers)
+            c = c + o.reshape(c.shape[0], c.shape[1], cfg.attn_dim) @ bp["attn"][
+                "wo"
+            ].astype(h.dtype)
+            return constrain(c + mlp_apply(
+                rms_norm(c, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg.activation
+            ), "dp", None, None)
+
+        return jax.checkpoint(block)(carry), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"], unroll=cfg.unroll_layers)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder_blocks(x, params, cfg: ArchConfig, enc_out, positions):
+    def body(carry, bp):
+        def block(c):
+            c = constrain(c, "dp", None, None)
+            # causal self-attention
+            h = rms_norm(c, bp["ln1"], cfg.norm_eps)
+            q = _proj_qkv(h, bp["attn"]["wq"], cfg, cfg.n_heads)
+            k = _proj_qkv(h, bp["attn"]["wk"], cfg, cfg.n_kv)
+            v = _proj_qkv(h, bp["attn"]["wv"], cfg, cfg.n_kv)
+            q = rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+            o = chunked_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk, unroll=cfg.unroll_layers)
+            c = c + o.reshape(c.shape[0], c.shape[1], cfg.attn_dim) @ bp["attn"][
+                "wo"
+            ].astype(h.dtype)
+            # cross-attention over encoder output
+            h = rms_norm(c, bp["lnc"], cfg.norm_eps)
+            q = _proj_qkv(h, bp["cross"]["wq"], cfg, cfg.n_heads)
+            k = _proj_qkv(enc_out, bp["cross"]["wk"], cfg, cfg.n_kv)
+            v = _proj_qkv(enc_out, bp["cross"]["wv"], cfg, cfg.n_kv)
+            o = chunked_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk, unroll=cfg.unroll_layers)
+            c = c + o.reshape(c.shape[0], c.shape[1], cfg.attn_dim) @ bp["cross"][
+                "wo"
+            ].astype(h.dtype)
+            return constrain(c + mlp_apply(
+                rms_norm(c, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg.activation
+            ), "dp", None, None)
+
+        return jax.checkpoint(block)(carry), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"], unroll=cfg.unroll_layers)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(params, cfg: ArchConfig, batch, *, loss_chunk: int = 1024):
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    positions = jnp.arange(x.shape[1])
+    h = _decoder_blocks(x, params, cfg, enc_out, positions)
+    head = _head_matrix(params).astype(h.dtype)
+
+    s = h.shape[1]
+    chunk = loss_chunk if s % loss_chunk == 0 else s
+
+    def chunk_loss(ci):
+        hs = jax.lax.dynamic_slice_in_dim(h, ci * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
+        logits = constrain(hs @ head.T, "dp", None, "tp").astype(jnp.float32)
+        lsf = jnp.where(ls < cfg.vocab, ls, -1)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lsf, 0)[..., None], axis=-1)[
+            ..., 0
+        ]
+        mask = (lsf >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    if s // chunk == 1:
+        num, den = chunk_loss(jnp.asarray(0))
+    else:
+        from repro.models.layers import chunked_map
+        nums, dens = chunked_map(chunk_loss, s // chunk, cfg.unroll_layers)
+        num, den = jnp.sum(nums), jnp.sum(dens)
+    return num / jnp.maximum(den, 1.0)
+
+
+def encdec_prefill(params, cfg: ArchConfig, src_embeds, tokens):
+    """Encode the source and run the decoder context; last-position logits."""
+    enc_out = encode(params, cfg, src_embeds)
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    positions = jnp.arange(x.shape[1])
+    h = _decoder_blocks(x, params, cfg, enc_out, positions)
+    return h[:, -1] @ _head_matrix(params).astype(h.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, seq_len: int, src_len: int):
+    nl = cfg.n_layers
+    return {
+        "pos": jnp.zeros((), dtype=jnp.int32),
+        "k": jnp.zeros((nl, batch, seq_len, cfg.n_kv, cfg.head_dim), COMPUTE_DTYPE),
+        "v": jnp.zeros((nl, batch, seq_len, cfg.n_kv, cfg.head_dim), COMPUTE_DTYPE),
+        # cross K/V are computed once from the encoder output at prefill
+        "ck": jnp.zeros((nl, batch, src_len, cfg.n_kv, cfg.head_dim), COMPUTE_DTYPE),
+        "cv": jnp.zeros((nl, batch, src_len, cfg.n_kv, cfg.head_dim), COMPUTE_DTYPE),
+    }
+
+
+def encdec_cache_specs(cfg: ArchConfig, *, batch_axis, seq_axis=None) -> dict:
+    return {
+        "pos": P(),
+        "k": P(None, batch_axis, seq_axis, None, "model"),
+        "v": P(None, batch_axis, seq_axis, None, "model"),
+        "ck": P(None, batch_axis, None, None, "model"),
+        "cv": P(None, batch_axis, None, None, "model"),
+    }
+
+
+def encdec_decode_step(params, cfg: ArchConfig, cache, tokens):
+    """One decoder token against cached self/cross K/V."""
+    pos = cache["pos"]
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    src_len = cache["ck"].shape[2]
+
+    def body(carry, scanned):
+        bp, kc, vc, ck, cv = scanned
+        b = carry.shape[0]
+        h = rms_norm(carry, bp["ln1"], cfg.norm_eps)
+        q = _proj_qkv(h, bp["attn"]["wq"], cfg, cfg.n_heads)
+        k = _proj_qkv(h, bp["attn"]["wk"], cfg, cfg.n_kv)
+        v = _proj_qkv(h, bp["attn"]["wv"], cfg, cfg.n_kv)
+        posv = jnp.full((1,), pos, dtype=jnp.int32)
+        q = rope(q, posv, cfg.rope_fraction, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_fraction, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+        o = decode_attention(q, kc, vc, pos + 1)
+        c = carry + o.reshape(b, 1, cfg.attn_dim) @ bp["attn"]["wo"].astype(h.dtype)
+
+        h = rms_norm(c, bp["lnc"], cfg.norm_eps)
+        q = _proj_qkv(h, bp["cross"]["wq"], cfg, cfg.n_heads)
+        o = decode_attention(q, ck, cv, jnp.asarray(src_len))
+        c = c + o.reshape(b, 1, cfg.attn_dim) @ bp["cross"]["wo"].astype(h.dtype)
+
+        c = c + mlp_apply(
+            rms_norm(c, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg.activation
+        )
+        return c, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body,
+        x,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["ck"], cache["cv"]),
+        unroll=cfg.unroll_layers,
+    )
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = h @ _head_matrix(params).astype(h.dtype).T
+    return logits, dict(cache, k=k_new, v=v_new, pos=pos + 1)

@@ -1,0 +1,253 @@
+"""Shared transformer building blocks (pure JAX, shape-polymorphic).
+
+Everything here works on (B, S, ...) activations in bf16 compute with f32
+params, takes explicit param dicts (no module framework — params are plain
+pytrees so pjit sharding specs can be zipped against them), and avoids
+materializing (S, S) score matrices: attention is computed with a query-chunked
+online pass (`chunked_attention`), which is the jnp twin of the Pallas flash
+kernel in repro.kernels (validated against the same reference).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------------------
+# activation-sharding constraints.  GSPMD propagation alone replicates large
+# intermediates ("involuntary full rematerialization" warnings, 30-75 GB/device
+# temp) — the launch layer registers the mesh axes and the model code pins the
+# canonical megatron-style activation shardings at block boundaries.
+# Single-device paths (smoke tests) leave this unset: constrain() is a no-op.
+# ---------------------------------------------------------------------------
+
+_MESH_AXES: dict | None = None
+
+
+def set_sharding_axes(dp, tp: str, sizes: dict[str, int]) -> None:
+    """dp: axis name (or tuple) for batch/FSDP; tp: tensor axis; sizes: name->size."""
+    global _MESH_AXES
+    dp_t = dp if isinstance(dp, tuple) else (dp,)
+    _MESH_AXES = {
+        "dp": dp,
+        "tp": tp,
+        "dp_size": int(np.prod([sizes[a] for a in dp_t])) if dp else 1,
+        "tp_size": sizes.get(tp, 1),
+    }
+
+
+def clear_sharding_axes() -> None:
+    global _MESH_AXES
+    _MESH_AXES = None
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint on logical axes 'dp'/'tp'/None per dimension.
+
+    Axes whose mesh size does not divide the dimension are dropped (e.g. the
+    batch=1 long-context decode cannot shard batch over 16 devices).
+    """
+    if _MESH_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        if a is None:
+            spec.append(None)
+        else:
+            size = _MESH_AXES[f"{a}_size"]
+            spec.append(_MESH_AXES[a] if size and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (full or fractional — chatglm applies RoPE to
+# half the head dims: rope_fraction = 0.5)
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, fraction: float = 1.0,
+         theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    d_rot = int(dh * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    half = d_rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]  # (1, S, 1, half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def chunked_map(f, n: int, unroll: bool = False):
+    """lax.map over range(n), or a fully-unrolled python loop.
+
+    The dry-run/roofline pass unrolls every loop: XLA's HLO cost analysis does
+    not multiply FLOPs/collective bytes by while-loop trip counts, so scanned
+    programs under-report.  Runtime paths keep the rolled loop (fast compiles).
+    """
+    if n == 1:
+        return jax.tree.map(lambda x: x[None], f(jnp.asarray(0)))
+    if unroll:
+        outs = [f(jnp.asarray(i)) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return jax.lax.map(f, jnp.arange(n))
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Kv, Dh) -> (B, S, Kv*n_rep, Dh) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, dh)).reshape(
+        b, s, kv * n_rep, dh
+    )
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Memory-bounded attention: q (B,Sq,H,Dh), k/v (B,Sk,Kv,Dh) -> (B,Sq,H,Dh).
+
+    Processes queries in chunks of q_chunk; never materializes (Sq, Sk).
+    GQA is handled by broadcasting kv heads.  For sliding-window attention the
+    key range per chunk is sliced to [chunk_start - window + 1, chunk_end],
+    so the work is O(Sq * (window + q_chunk)) instead of O(Sq * Sk).
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    n_rep = h // kv
+    scale = dh**-0.5
+    kf = _repeat_kv(k, n_rep)
+    vf = _repeat_kv(v, n_rep)
+
+    if sq % q_chunk:
+        q_chunk = sq  # fall back to a single chunk for odd lengths
+    n_chunks = sq // q_chunk
+
+    kpos_all = jnp.arange(sk)
+
+    def one_chunk(ci):
+        q_start = ci * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, q_start, q_chunk, axis=1)
+        qpos = q_start + jnp.arange(q_chunk)
+        if window is not None:
+            # only the last (window + q_chunk - 1) keys can be visible
+            span = min(sk, window + q_chunk - 1)
+            k_start = jnp.clip(q_start + q_chunk - span, 0, sk - span)
+            kc = jax.lax.dynamic_slice_in_dim(kf, k_start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vf, k_start, span, axis=1)
+            kpos = k_start + jnp.arange(span)
+        else:
+            kc, vc, kpos = kf, vf, kpos_all
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", qc, kc, preferred_element_type=jnp.float32
+        ) * scale
+        mask = jnp.ones((q_chunk, kpos.shape[0]), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vc).astype(q.dtype)
+
+    if n_chunks == 1:
+        return one_chunk(jnp.asarray(0))
+    out = chunked_map(one_chunk, n_chunks, unroll)  # (n, B, qc, H, Dh)
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, dh)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, Dh)
+    k_cache: jax.Array,  # (B, S_cache, Kv, Dh)
+    v_cache: jax.Array,
+    cur_len: jax.Array,  # scalar: number of valid cache entries
+    *,
+    ring: bool = False,  # True when the cache is a sliding-window ring buffer
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache."""
+    b, _, h, dh = q.shape
+    s_cache, kv = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kv
+    kf = _repeat_kv(k_cache, n_rep)
+    vf = _repeat_kv(v_cache, n_rep)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, kf, preferred_element_type=jnp.float32
+    ) * dh**-0.5
+    if ring:
+        # every slot is valid once the ring has wrapped
+        valid = jnp.arange(s_cache) < jnp.minimum(cur_len, s_cache)
+    else:
+        valid = jnp.arange(s_cache) < cur_len
+    logits = jnp.where(valid[None, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_apply(x: jax.Array, p: dict, activation: str) -> jax.Array:
+    """x: (B, S, D).  p: {"w1": (D,F), "w2": (F,D)[, "w1g": (D,F)]}."""
+    w1 = p["w1"].astype(x.dtype)
+    w2 = p["w2"].astype(x.dtype)
+    if activation == "silu_glu":
+        g = x @ p["w1g"].astype(x.dtype)
+        h = jax.nn.silu(x @ w1) * g
+    elif activation == "sq_relu":  # nemotron: squared ReLU
+        h = jnp.square(jax.nn.relu(x @ w1))
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ w1)
+    else:
+        raise ValueError(activation)
+    h = constrain(h, *(("dp",) + (None,) * (h.ndim - 2) + ("tp",)))
+    return h @ w2
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over positions with label >= 0 (negative labels are masked)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,574 @@
+"""Unified decoder LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Engineering choices (production-dry-run driven):
+  * layer params are STACKED with a leading n_layers axis and applied with
+    `jax.lax.scan` -> compile time is depth-independent (yi-34b's 60 layers
+    compile as fast as 2);
+  * each scan step is wrapped in `jax.checkpoint` (full remat) so the residual
+    stream is the only per-layer activation stash;
+  * the LM head + cross-entropy run in sequence chunks so (B, S, V) logits are
+    never materialized (vocab 256k x 4k seq would be GBs per device);
+  * params are f32, compute casts to bf16 (COMPUTE_DTYPE), losses in f32;
+  * `lm_param_specs` returns a parallel pytree of PartitionSpecs — the 2D
+    FSDP x TP scheme of DESIGN.md §5 (feature dims over "model", the other
+    large dim over "data"; vocab padded to a multiple of 256 so both mesh
+    axes divide it).
+
+Hybrid (RecurrentGemma) layers keep BOTH branch params per layer and select
+the branch with `lax.cond` on a static-per-layer type array — simple and
+scan-compatible at the cost of some unused weights (noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    chunked_attention,
+    constrain,
+    cross_entropy,
+    decode_attention,
+    mlp_apply,
+    rms_norm,
+    rope,
+)
+from repro.models.moe import moe_apply
+from repro.models.rglru import rglru_apply, rglru_decode_step
+from repro.models.ssm import ssd_apply, ssd_decode_step
+
+VOCAB_ALIGN = 256  # pad vocab so 16 (model) and 16 (data) both divide it
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return (cfg.vocab + VOCAB_ALIGN - 1) // VOCAB_ALIGN * VOCAB_ALIGN
+
+
+def layer_types(cfg: ArchConfig) -> np.ndarray:
+    """0 = attention layer, 1 = recurrent (rglru) layer."""
+    if cfg.family != "hybrid":
+        return np.zeros(cfg.n_layers, dtype=np.int32)
+    pat = cfg.hybrid.pattern
+    return np.asarray(
+        [0 if pat[i % len(pat)] == "attn" else 1 for i in range(cfg.n_layers)],
+        dtype=np.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(nl, d):
+    return jnp.zeros((nl, d), dtype=jnp.float32)
+
+
+def _dense_init(key, nl, shape, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = (1.0 / np.sqrt(fan_in)) if scale is None else scale
+    return jax.random.normal(key, (nl, *shape), dtype=jnp.float32) * s
+
+
+def _attn_block_init(key, cfg: ArchConfig, window_only: bool = False):
+    nl = cfg.n_layers
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], nl, (cfg.d_model, cfg.attn_dim)),
+        "wk": _dense_init(ks[1], nl, (cfg.d_model, cfg.kv_dim)),
+        "wv": _dense_init(ks[2], nl, (cfg.d_model, cfg.kv_dim)),
+        "wo": _dense_init(ks[3], nl, (cfg.attn_dim, cfg.d_model)),
+    }
+
+
+def _mlp_block_init(key, cfg: ArchConfig):
+    nl = cfg.n_layers
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": _dense_init(ks[0], nl, (cfg.d_model, cfg.d_ff)),
+        "w2": _dense_init(ks[1], nl, (cfg.d_ff, cfg.d_model)),
+    }
+    if cfg.activation == "silu_glu":
+        p["w1g"] = _dense_init(ks[2], nl, (cfg.d_model, cfg.d_ff))
+    return p
+
+
+def _moe_block_init(key, cfg: ArchConfig):
+    nl, m = cfg.n_layers, cfg.moe
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _dense_init(ks[0], nl, (cfg.d_model, m.n_experts)),
+        "w1": _dense_init(ks[1], nl, (m.n_experts, cfg.d_model, cfg.d_ff)),
+        "w2": _dense_init(ks[2], nl, (m.n_experts, cfg.d_ff, cfg.d_model)),
+    }
+    if cfg.activation == "silu_glu":
+        p["w1g"] = _dense_init(ks[3], nl, (m.n_experts, cfg.d_model, cfg.d_ff))
+    return p
+
+
+def _ssm_block_init(key, cfg: ArchConfig):
+    nl, s = cfg.n_layers, cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_dim = di + 2 * s.d_state
+    d_in = 2 * di + 2 * s.d_state + nh
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], nl, (cfg.d_model, d_in)),
+        "conv_w": _dense_init(ks[1], nl, (s.conv_width, conv_dim), scale=0.3),
+        "conv_b": jnp.zeros((nl, conv_dim), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((nl, nh), dtype=jnp.float32),
+        "A_log": jnp.zeros((nl, nh), dtype=jnp.float32),
+        "D": jnp.ones((nl, nh), dtype=jnp.float32),
+        "gate_norm": _norm_init(nl, di),
+        "out_proj": _dense_init(ks[2], nl, (di, cfg.d_model)),
+    }
+
+
+def _rglru_block_init(key, cfg: ArchConfig):
+    nl = cfg.n_layers
+    lru = cfg.hybrid.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": _dense_init(ks[0], nl, (cfg.d_model, lru)),
+        "w_gate": _dense_init(ks[1], nl, (cfg.d_model, lru)),
+        "conv_w": _dense_init(ks[2], nl, (4, lru), scale=0.3),
+        "conv_b": jnp.zeros((nl, lru), dtype=jnp.float32),
+        "w_r": _dense_init(ks[3], nl, (lru, lru)),
+        "b_r": jnp.zeros((nl, lru), dtype=jnp.float32),
+        "w_i": _dense_init(ks[4], nl, (lru, lru)),
+        "b_i": jnp.zeros((nl, lru), dtype=jnp.float32),
+        "lambda": jnp.full((nl, lru), 0.5, dtype=jnp.float32),
+        "w_out": _dense_init(ks[5], nl, (lru, cfg.d_model)),
+    }
+
+
+def init_lm_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    vp = padded_vocab(cfg)
+    nl = cfg.n_layers
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (vp, cfg.d_model), dtype=jnp.float32)
+        * 0.02,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype=jnp.float32),
+        "blocks": {"ln1": _norm_init(nl, cfg.d_model)},
+    }
+    blocks = params["blocks"]
+    if cfg.family == "ssm":
+        blocks["ssm"] = _ssm_block_init(keys[1], cfg)
+    else:
+        blocks["attn"] = _attn_block_init(keys[1], cfg)
+        blocks["ln2"] = _norm_init(nl, cfg.d_model)
+        if cfg.family == "moe":
+            blocks["moe"] = _moe_block_init(keys[2], cfg)
+        else:
+            blocks["mlp"] = _mlp_block_init(keys[2], cfg)
+        if cfg.family == "hybrid":
+            blocks["rglru"] = _rglru_block_init(keys[3], cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            jax.random.normal(keys[4], (vp, cfg.d_model), dtype=jnp.float32) * 0.02
+        )
+    if cfg.frontend == "vision":
+        params["img_proj"] = _dense_init(keys[5], 1, (cfg.d_model, cfg.d_model))[0]
+    return params
+
+
+def lm_param_specs(cfg: ArchConfig, serve_tp2d: bool = False) -> dict:
+    """PartitionSpec pytree matching init_lm_params (DESIGN.md §5 scheme).
+
+    serve_tp2d=True (decode-time, cfg.serve_sharding == "tp2d"): feature dims
+    shard over BOTH mesh axes and nothing shards over d_model, so per-layer
+    matmuls need no weight all-gathers — decode psums activations instead.
+    """
+    both = ("data", "model")
+    if serve_tp2d:
+        d2 = lambda: P(None, None, both)  # (L, D, F): F over 256 ways
+        d2t = lambda: P(None, both, None)  # (L, F, D): contract -> psum
+        vec = lambda: P(None, both)
+        embed_spec = P(both, None)  # padded vocab divides 256
+    else:
+        d2 = lambda: P(None, "data", "model")  # (L, D, F)-like
+        d2t = lambda: P(None, "model", "data")  # (L, F, D)-like
+        vec = lambda: P(None, "model")
+        embed_spec = P("model", "data")
+    specs: dict[str, Any] = {
+        "embed": embed_spec,
+        "final_norm": P(None),
+        "blocks": {"ln1": P(None, None)},
+    }
+    blocks = specs["blocks"]
+    if cfg.family == "ssm":
+        blocks["ssm"] = {
+            "in_proj": d2(),
+            "conv_w": P(None, None, both if serve_tp2d else "model"),
+            "conv_b": vec(),
+            "dt_bias": P(None, None),
+            "A_log": P(None, None),
+            "D": P(None, None),
+            "gate_norm": vec(),
+            "out_proj": d2t(),
+        }
+    else:
+        blocks["attn"] = {"wq": d2(), "wk": d2(), "wv": d2(), "wo": d2t()}
+        blocks["ln2"] = P(None, None)
+        if cfg.family == "moe":
+            moe_d2 = P(None, None, None, both) if serve_tp2d else P(None, None, "data", "model")
+            moe_d2t = P(None, None, both, None) if serve_tp2d else P(None, None, "model", "data")
+            blocks["moe"] = {
+                "router": P(None, None, None),
+                "w1": moe_d2,
+                "w2": moe_d2t,
+            }
+            if cfg.activation == "silu_glu":
+                blocks["moe"]["w1g"] = moe_d2
+        else:
+            blocks["mlp"] = {"w1": d2(), "w2": d2t()}
+            if cfg.activation == "silu_glu":
+                blocks["mlp"]["w1g"] = d2()
+        if cfg.family == "hybrid":
+            blocks["rglru"] = {
+                "w_x": d2(),
+                "w_gate": d2(),
+                "conv_w": P(None, None, both if serve_tp2d else "model"),
+                "conv_b": vec(),
+                "w_r": d2(),
+                "b_r": vec(),
+                "w_i": d2(),
+                "b_i": vec(),
+                "lambda": vec(),
+                "w_out": d2t(),
+            }
+    if not cfg.tie_embeddings:
+        specs["head"] = embed_spec
+    if cfg.frontend == "vision":
+        specs["img_proj"] = P(None, both) if serve_tp2d else P("data", "model")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence, teacher-forced)
+# ---------------------------------------------------------------------------
+
+def _attn_apply(x, bp, cfg: ArchConfig, positions, window):
+    b, s, _ = x.shape
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q = (h @ bp["attn"]["wq"].astype(h.dtype)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ bp["attn"]["wk"].astype(h.dtype)).reshape(b, s, cfg.n_kv, cfg.head_dim)
+    v = (h @ bp["attn"]["wv"].astype(h.dtype)).reshape(b, s, cfg.n_kv, cfg.head_dim)
+    # heads over tp where divisible (falls back per-dim inside constrain)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, None, "tp")
+    v = constrain(v, "dp", None, None, "tp")
+    q = rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=True, window=window, q_chunk=cfg.q_chunk, unroll=cfg.unroll_layers)
+    o = constrain(o, "dp", None, "tp", None)
+    return o.reshape(b, s, cfg.attn_dim) @ bp["attn"]["wo"].astype(h.dtype)
+
+
+def _ffn_apply(x, bp, cfg: ArchConfig):
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        if cfg.moe_dense_decode and x.shape[1] == 1:
+            from repro.models.moe import moe_apply_dense
+
+            return moe_apply_dense(
+                h, bp["moe"], n_experts=cfg.moe.n_experts,
+                top_k=cfg.moe.top_k, activation=cfg.activation,
+            )
+        return moe_apply(
+            h,
+            bp["moe"],
+            n_experts=cfg.moe.n_experts,
+            top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            activation=cfg.activation,
+        )
+    return mlp_apply(h, bp["mlp"], cfg.activation)
+
+
+def _block_apply(x, bp, layer_type, cfg: ArchConfig, positions):
+    """One transformer block; bp is the per-layer slice of the stacked params."""
+    if cfg.family == "ssm":
+        x = constrain(x, "dp", None, None)
+        return x + ssd_apply(
+            rms_norm(x, bp["ln1"], cfg.norm_eps),
+            bp["ssm"],
+            d_state=cfg.ssm.d_state,
+            head_dim=cfg.ssm.head_dim,
+            expand=cfg.ssm.expand,
+            chunk=cfg.ssm.chunk,
+            norm_eps=cfg.norm_eps,
+        )
+    if cfg.family == "hybrid":
+        def attn_branch(x):
+            return _attn_apply(x, bp, cfg, positions, cfg.hybrid.local_window)
+
+        def rec_branch(x):
+            return rglru_apply(rms_norm(x, bp["ln1"], cfg.norm_eps), bp["rglru"])
+
+        x = constrain(x, "dp", None, None)
+        mix = jax.lax.cond(layer_type == 0, attn_branch, rec_branch, x)
+        x = x + mix
+        return constrain(x + _ffn_apply(x, bp, cfg), "dp", None, None)
+    # dense / moe / vlm
+    x = constrain(x, "dp", None, None)
+    x = x + _attn_apply(x, bp, cfg, positions, cfg.window)
+    return constrain(x + _ffn_apply(x, bp, cfg), "dp", None, None)
+
+
+def _remat(fn, cfg: ArchConfig):
+    """Per-layer rematerialization policy (hillclimb knob, EXPERIMENTS §Perf)."""
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # "full"
+
+
+def _run_blocks(x, params, cfg: ArchConfig, positions):
+    types = jnp.asarray(layer_types(cfg))
+
+    def body(carry, scanned):
+        bp, lt = scanned
+        out = _remat(lambda c: _block_apply(c, bp, lt, cfg, positions), cfg)(carry)
+        return out, None
+
+    x, _ = jax.lax.scan(body, x, (params["blocks"], types), unroll=cfg.unroll_layers)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _head_matrix(params):
+    return params.get("head", params["embed"])
+
+
+def lm_forward(params, cfg: ArchConfig, tokens, img_embeds=None):
+    """Full-sequence logits (used by smoke tests on reduced configs)."""
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    if img_embeds is not None:
+        img = img_embeds.astype(COMPUTE_DTYPE) @ params["img_proj"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([img, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    h = _run_blocks(x, params, cfg, positions)
+    return h @ _head_matrix(params).astype(h.dtype).T
+
+
+def lm_loss(params, cfg: ArchConfig, batch, *, loss_chunk: int = 1024):
+    """Masked next-token CE; head+CE evaluated in sequence chunks."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    img = batch.get("img_embeds")
+    x = constrain(params["embed"].astype(COMPUTE_DTYPE)[tokens], "dp", None, None)
+    if img is not None:
+        proj = img.astype(COMPUTE_DTYPE) @ params["img_proj"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([proj, x], axis=1)
+        labels = jnp.concatenate(
+            [jnp.full(img.shape[:2], -1, dtype=labels.dtype), labels], axis=1
+        )
+    positions = jnp.arange(x.shape[1])
+    h = _run_blocks(x, params, cfg, positions)  # (B, S, D)
+    head = _head_matrix(params).astype(h.dtype)
+
+    s = h.shape[1]
+    chunk = loss_chunk if s % loss_chunk == 0 else s
+    n_chunks = s // chunk
+
+    def chunk_loss(ci):
+        hs = jax.lax.dynamic_slice_in_dim(h, ci * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
+        logits = constrain(hs @ head.T, "dp", None, "tp")
+        lsf = jnp.where(ls < cfg.vocab, ls, -1)  # mask padded-vocab labels
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), jnp.maximum(lsf, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lsf >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    if n_chunks == 1:
+        num, den = chunk_loss(jnp.asarray(0))
+    else:
+        nums, dens = L.chunked_map(chunk_loss, n_chunks, cfg.unroll_layers)
+        num, den = jnp.sum(nums), jnp.sum(dens)
+    return num / jnp.maximum(den, 1.0)
+
+
+def lm_prefill(params, cfg: ArchConfig, tokens, img_embeds=None):
+    """Prefill: run the full context, return last-position logits (B, Vp).
+
+    This is the compute-dominant portion of inference prefill (the per-layer
+    K/V cache writes are an O(S*D) byproduct; see DESIGN.md).
+    """
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    if img_embeds is not None:
+        img = img_embeds.astype(COMPUTE_DTYPE) @ params["img_proj"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([img, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    h = _run_blocks(x, params, cfg, positions)
+    return h[:, -1] @ _head_matrix(params).astype(h.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def cache_window(cfg: ArchConfig, seq_len: int) -> int:
+    """KV-cache length: full context, or the ring window for SWA archs."""
+    if cfg.window is not None:
+        return min(cfg.window, seq_len)
+    if cfg.family == "hybrid":
+        return min(cfg.hybrid.local_window, seq_len)
+    return seq_len
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """Abstract-friendly cache init (all jnp.zeros; works under eval_shape)."""
+    nl = cfg.n_layers
+    cache: dict[str, Any] = {"pos": jnp.zeros((), dtype=jnp.int32)}
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        nh = di // s.head_dim
+        cache["conv"] = jnp.zeros(
+            (nl, batch, s.conv_width - 1, di + 2 * s.d_state), dtype=COMPUTE_DTYPE
+        )
+        cache["ssm"] = jnp.zeros(
+            (nl, batch, nh, s.head_dim, s.d_state), dtype=jnp.float32
+        )
+        return cache
+    w = cache_window(cfg, seq_len)
+    cache["k"] = jnp.zeros((nl, batch, w, cfg.n_kv, cfg.head_dim), dtype=COMPUTE_DTYPE)
+    cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.family == "hybrid":
+        lru = cfg.hybrid.lru_width or cfg.d_model
+        cache["conv"] = jnp.zeros((nl, batch, 3, lru), dtype=COMPUTE_DTYPE)
+        cache["h"] = jnp.zeros((nl, batch, lru), dtype=jnp.float32)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, *, batch_axis, seq_axis=None) -> dict:
+    """PartitionSpecs for the cache (batch over `batch_axis`; for batch=1
+    long-context shapes pass batch_axis=None and seq_axis="data")."""
+    specs: dict[str, Any] = {"pos": P()}
+    if cfg.family == "ssm":
+        specs["conv"] = P(None, batch_axis, None, "model")
+        specs["ssm"] = P(None, batch_axis, "model", None, None)
+        return specs
+    # head_dim is sharded over "model" (kv head COUNT can be < mesh axis, the
+    # 64..256-wide head_dim always divides 16): keeps the 100s-of-GB decode
+    # caches at ~1 GB/device.
+    specs["k"] = P(None, batch_axis, seq_axis, None, "model")
+    specs["v"] = P(None, batch_axis, seq_axis, None, "model")
+    if cfg.family == "hybrid":
+        specs["conv"] = P(None, batch_axis, None, "model")
+        specs["h"] = P(None, batch_axis, "model")
+    return specs
+
+
+def _attn_decode(x, bp, cfg: ArchConfig, k_cache, v_cache, pos, window):
+    b = x.shape[0]
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q = (h @ bp["attn"]["wq"].astype(h.dtype)).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = (h @ bp["attn"]["wk"].astype(h.dtype)).reshape(b, 1, cfg.n_kv, cfg.head_dim)
+    v = (h @ bp["attn"]["wv"].astype(h.dtype)).reshape(b, 1, cfg.n_kv, cfg.head_dim)
+    posv = jnp.full((1,), pos, dtype=jnp.int32)
+    q = rope(q, posv, cfg.rope_fraction, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_fraction, cfg.rope_theta)
+    # Align q/k/v head_dim sharding with the dh-sharded cache: the QK
+    # contraction then partial-sums over dh (a psum of small (B,H,S) logits)
+    # instead of all-gathering the cache every step.  Probe-measured ~2x on
+    # the decode dominant term for every attention arch (mixtral 0.324 ->
+    # 0.162 s, granite 0.914 -> 0.457 s, nemotron 1.46 -> 0.72 s); see
+    # EXPERIMENTS §Perf — including the methodology trap we fell into when
+    # first evaluating it against a rolled (loop-undercounted) baseline.
+    q = constrain(q, "dp", None, None, "tp")
+    k = constrain(k, "dp", None, None, "tp")
+    v = constrain(v, "dp", None, None, "tp")
+    s_cache = k_cache.shape[1]
+    ring = window is not None and s_cache == window
+    slot = (pos % window) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    o = decode_attention(q, k_cache, v_cache, pos + 1, ring=ring)
+    out = o.reshape(b, 1, cfg.attn_dim) @ bp["attn"]["wo"].astype(h.dtype)
+    return out, k_cache, v_cache
+
+
+def lm_decode_step(params, cfg: ArchConfig, cache, tokens):
+    """One decode step: tokens (B, 1) -> (logits (B, 1, Vp), new cache)."""
+    pos = cache["pos"]
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    types = jnp.asarray(layer_types(cfg))
+
+    if cfg.family == "ssm":
+        def body(carry, scanned):
+            bp, conv, ssm = scanned
+            h = rms_norm(carry, bp["ln1"], cfg.norm_eps)
+            out, st = ssd_decode_step(
+                h, {"conv": conv, "ssm": ssm}, bp["ssm"],
+                d_state=cfg.ssm.d_state, head_dim=cfg.ssm.head_dim,
+                expand=cfg.ssm.expand, norm_eps=cfg.norm_eps,
+            )
+            return carry + out, (st["conv"], st["ssm"])
+
+        x, (conv_new, ssm_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["ssm"]),
+            unroll=cfg.unroll_layers,
+        )
+        new_cache = dict(cache, conv=conv_new, ssm=ssm_new, pos=pos + 1)
+    elif cfg.family == "hybrid":
+        def body(carry, scanned):
+            bp, lt, kc, vc, conv, hst = scanned
+
+            def attn_branch(c):
+                out, k2, v2 = _attn_decode(
+                    c, bp, cfg, kc, vc, pos, cfg.hybrid.local_window
+                )
+                return out, k2, v2, conv, hst
+
+            def rec_branch(c):
+                h = rms_norm(c, bp["ln1"], cfg.norm_eps)
+                out, st = rglru_decode_step(h, {"conv": conv, "h": hst}, bp["rglru"])
+                return out, kc, vc, st["conv"], st["h"]
+
+            out, k2, v2, c2, h2 = jax.lax.cond(lt == 0, attn_branch, rec_branch, carry)
+            mid = carry + out
+            new = mid + _ffn_apply(mid, bp, cfg)
+            return new, (k2, v2, c2, h2)
+
+        x, (k_new, v_new, conv_new, h_new) = jax.lax.scan(
+            body,
+            x,
+            (params["blocks"], types, cache["k"], cache["v"], cache["conv"], cache["h"]),
+            unroll=cfg.unroll_layers,
+        )
+        new_cache = dict(
+            cache, k=k_new, v=v_new, conv=conv_new, h=h_new, pos=pos + 1
+        )
+    else:  # dense / moe / vlm
+        def body(carry, scanned):
+            bp, kc, vc = scanned
+            out, k2, v2 = _attn_decode(carry, bp, cfg, kc, vc, pos, cfg.window)
+            mid = carry + out
+            new = mid + _ffn_apply(mid, bp, cfg)
+            return new, (k2, v2)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]),
+            unroll=cfg.unroll_layers,
+        )
+        new_cache = dict(cache, k=k_new, v=v_new, pos=pos + 1)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = h @ _head_matrix(params).astype(h.dtype).T
+    return logits, new_cache

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts block with top-k routing and capacity-bounded dispatch.
+
+Honest-FLOP implementation: tokens are sorted by expert assignment and
+scatter-packed into (E, C, D) capacity buffers, so the expert matmuls compute
+exactly top_k * tokens * capacity_factor worth of work — NOT n_experts x.
+This matters for the roofline analysis (MODEL_FLOPS for MoE uses N_active).
+
+Under pjit the scatter/gather over token-sharded activations lowers to the
+expert-parallel all-to-all pattern; the collective term in the roofline tables
+comes from exactly these ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp_apply
+
+
+def moe_apply(x: jax.Array, p: dict, *, n_experts: int, top_k: int,
+              capacity_factor: float, activation: str) -> jax.Array:
+    """x: (B, S, D).  p: router (D, E), w1/w1g (E, D, F), w2 (E, F, D)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    capacity = max(1, int(capacity_factor * t * top_k / n_experts))
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, top_k)  # (t, k)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)  # renormalize
+
+    # flatten (token, slot) assignments and sort by expert id
+    flat_e = gate_i.reshape(-1)  # (t*k,)
+    flat_t = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = gate_w.reshape(-1)
+    order = jnp.argsort(flat_e)  # stable
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each assignment within its expert's queue
+    pos = jnp.arange(t * top_k) - jnp.searchsorted(se, se, side="left")
+    keep = pos < capacity  # overflow tokens are dropped (standard capacity MoE)
+    pos_c = jnp.where(keep, pos, 0)
+
+    # dispatch: (E, C, D) buffers
+    buf = jnp.zeros((n_experts, capacity, d), dtype=x.dtype)
+    buf = buf.at[se, pos_c].add(jnp.where(keep[:, None], xf[st], 0.0))
+
+    # expert FFNs, batched over E
+    h = jax.vmap(
+        lambda xe, w1, w1g, w2: mlp_apply(
+            xe[None], {"w1": w1, "w1g": w1g, "w2": w2}, activation
+        )[0]
+    )(buf, p["w1"], p.get("w1g", p["w1"]), p["w2"])  # (E, C, D)
+
+    # combine: weighted scatter back to tokens
+    out = jnp.zeros((t, d), dtype=jnp.float32)
+    vals = h[se, pos_c].astype(jnp.float32) * jnp.where(keep, sw, 0.0)[:, None]
+    out = out.at[st].add(vals)
+    return out.astype(x.dtype).reshape(b, s, d)
+
+
+def moe_apply_dense(x: jax.Array, p: dict, *, n_experts: int, top_k: int,
+                    activation: str) -> jax.Array:
+    """Dense-fallback MoE for tiny token counts (decode): run ALL experts on
+    all tokens and combine with the (renormalized) top-k gate weights.
+
+    E/top_k x more FLOPs per token, but zero dispatch scatter/gather — at
+    decode (1 token/seq) this trades a trivial amount of MXU work for the
+    removal of the all-to-all-shaped collectives (EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, top_k)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+    w_full = jnp.zeros((t, n_experts), dtype=jnp.float32)
+    w_full = w_full.at[jnp.arange(t)[:, None], gate_i].set(gate_w)
+
+    h = jax.vmap(
+        lambda w1, w1g, w2: mlp_apply(
+            xf[None], {"w1": w1, "w1g": w1g, "w2": w2}, activation
+        )[0]
+    )(p["w1"], p.get("w1g", p["w1"]), p["w2"])  # (E, t, d)
+    out = jnp.einsum("te,etd->td", w_full, h.astype(jnp.float32))
+    return out.astype(x.dtype).reshape(b, s, d)
+
+
+def moe_aux_loss(x: jax.Array, router: jax.Array, *, n_experts: int,
+                 top_k: int) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean over tokens)."""
+    t = x.shape[0] * x.shape[1]
+    logits = x.reshape(t, -1).astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_i = jax.lax.top_k(probs, top_k)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_i, n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,77 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_r x_t)                  (recurrence gate)
+    i_t = sigmoid(W_i x_t)                  (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The full-sequence form runs as a `jax.lax.associative_scan` over the affine
+maps h -> a*h + b (log-depth on TPU); decode is the O(1) recurrence.  The
+block follows Griffin: input projection D -> 2*lru (branch x + gelu gate),
+short causal conv on the recurrent branch, RG-LRU, gated merge, out proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import _causal_conv
+from repro.models.layers import constrain
+
+_C = 8.0
+
+
+def _rglru_core(x: jax.Array, p: dict, h0: jax.Array | None = None):
+    """x: (B, S, L) recurrent-branch input -> (y, h_last)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r  # (B,S,L)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_apply(x_res: jax.Array, p: dict) -> jax.Array:
+    """Griffin recurrent block over a full sequence.  x_res: (B, S, D)."""
+    branch = constrain(x_res @ p["w_x"].astype(x_res.dtype), "dp", None, "tp")
+    gate = jax.nn.gelu(x_res @ p["w_gate"].astype(x_res.dtype))
+    branch = jax.nn.silu(_causal_conv(branch, p["conv_w"], p["conv_b"]))
+    h, _ = _rglru_core(branch, p)
+    return (h * gate) @ p["w_out"].astype(x_res.dtype)
+
+
+def rglru_decode_step(x_tok: jax.Array, state: dict, p: dict):
+    """One token.  state: {conv: (B, cw-1, L), h: (B, L)}."""
+    branch = x_tok @ p["w_x"].astype(x_tok.dtype)  # (B,1,L)
+    gate = jax.nn.gelu(x_tok @ p["w_gate"].astype(x_tok.dtype))
+
+    conv_state = state["conv"]
+    window = jnp.concatenate([conv_state, branch], axis=1)
+    b_t = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(window.dtype))
+    b_t = jax.nn.silu(b_t + p["conv_b"].astype(window.dtype))  # (B,L)
+    conv_new = window[:, 1:]
+
+    xf = b_t.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    a = jnp.exp(-_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r)
+    h = a * state["h"].astype(jnp.float32) + jnp.sqrt(
+        jnp.maximum(1.0 - a * a, 1e-12)
+    ) * (i * xf)
+
+    out = (h.astype(x_tok.dtype)[:, None, :] * gate) @ p["w_out"].astype(x_tok.dtype)
+    return out, {"conv": conv_new, "h": h}

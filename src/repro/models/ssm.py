@@ -1,0 +1,145 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q; the
+quadratic "attention-like" part runs within chunks only (O(S*Q) work), and a
+linear scan over chunk summary states carries information across chunks.
+Decoding is the O(1)-state recurrence h' = exp(dt*A) h + dt * B (x) — this is
+why mamba2 runs the long_500k decode shape that quadratic-attention archs skip.
+
+Single SSM group (B/C shared across heads), scalar-per-head A — the mamba2
+default.  Shapes: d_inner = expand*d_model, H = d_inner/head_dim heads,
+state size N.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm, constrain
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, C), w: (cw, C), b: (C,)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    # stack cw shifted views: (B, S, cw, C)
+    views = jnp.stack([xp[:, i : i + x.shape[1]] for i in range(cw)], axis=2)
+    return jnp.einsum("bswc,wc->bsc", views, w.astype(x.dtype)) + b.astype(x.dtype)
+
+
+def ssd_apply(x_res: jax.Array, p: dict, *, d_state: int, head_dim: int,
+              expand: int, chunk: int, norm_eps: float = 1e-6) -> jax.Array:
+    """Full-sequence SSD mixer.  x_res: (B, S, D) block input (post-norm)."""
+    bsz, s, d_model = x_res.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    n = d_state
+
+    proj = constrain(
+        x_res @ p["in_proj"].astype(x_res.dtype), "dp", None, "tp"
+    )  # (B,S, 2*di + 2N + H)
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x_in, b_in, c_in = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    da = dt * a  # (B,S,H) log-decay per step
+
+    q = chunk if s % chunk == 0 else s
+    nc = s // q
+    xh = constrain(
+        x_in.reshape(bsz, nc, q, n_heads, head_dim).astype(jnp.float32),
+        "dp", None, None, "tp", None,
+    )
+    bh = b_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    ch = c_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, n_heads)
+    dac = da.reshape(bsz, nc, q, n_heads)
+    ca = jnp.cumsum(dac, axis=2)  # inclusive within-chunk cumulative log decay
+    xw = xh * dtc[..., None]  # dt-weighted inputs
+
+    # ---- intra-chunk (quadratic within chunk)
+    g = jnp.einsum("bcin,bcjn->bcij", ch, bh)  # (B,nc,Q,Q)
+    decay = jnp.exp(ca[:, :, :, None, :] - ca[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), dtype=bool))
+    att = constrain(
+        jnp.where(tri[None, None, :, :, None], g[..., None] * decay, 0.0),
+        "dp", None, None, None, "tp",
+    )
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xw)
+
+    # ---- chunk summary states and inter-chunk scan
+    decay_to_end = jnp.exp(ca[:, :, -1:, :] - ca)  # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bh, decay_to_end, xw)
+    chunk_decay = jnp.exp(ca[:, :, -1, :])  # (B,nc,H) total chunk decay
+
+    def scan_fn(h_state, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        h_out = h_state  # state BEFORE this chunk
+        h_next = h_state * dec[..., None, None] + s_c
+        return h_next, h_out
+
+    h0 = jnp.zeros((bsz, n_heads, head_dim, n), dtype=jnp.float32)
+    _, h_in = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", ch, h_in, jnp.exp(ca)
+    )
+
+    y = y_intra + y_inter + p["D"].astype(jnp.float32)[None, None, None, :, None] * xh
+    y = constrain(y.reshape(bsz, s, d_inner).astype(x_res.dtype), "dp", None, "tp")
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["gate_norm"], eps=norm_eps)
+    return y @ p["out_proj"].astype(x_res.dtype)
+
+
+def ssd_decode_step(x_tok: jax.Array, state: dict, p: dict, *, d_state: int,
+                    head_dim: int, expand: int, norm_eps: float = 1e-6):
+    """One-token recurrence.  x_tok: (B, 1, D); state: {conv: (B,cw-1,C), ssm: (B,H,P,N)}."""
+    bsz, _, d_model = x_tok.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    n = d_state
+
+    proj = x_tok @ p["in_proj"].astype(x_tok.dtype)
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+
+    conv_state = state["conv"]  # (B, cw-1, C)
+    cw = conv_state.shape[1] + 1
+    window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, cw, C)
+    xbc_t = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(window.dtype))
+    xbc_t = jax.nn.silu(xbc_t + p["conv_b"].astype(window.dtype))[:, None, :]
+    conv_state_new = window[:, 1:]
+
+    x_in, b_in, c_in = jnp.split(xbc_t, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )[:, 0]  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)  # (B,H)
+
+    xh = x_in[:, 0].reshape(bsz, n_heads, head_dim).astype(jnp.float32)
+    bh = b_in[:, 0].astype(jnp.float32)  # (B,N)
+    ch = c_in[:, 0].astype(jnp.float32)
+    xw = xh * dt[..., None]
+
+    ssm = state["ssm"] * dec[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xw, bh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", ch, ssm) + p["D"].astype(jnp.float32)[
+        None, :, None
+    ] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x_tok.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["gate_norm"], eps=norm_eps)
+    out = y @ p["out_proj"].astype(x_tok.dtype)
+    return out, {"conv": conv_state_new, "ssm": ssm}

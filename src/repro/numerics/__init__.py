@@ -1,0 +1,3 @@
+from repro.numerics.fd import fd_grad, fd_hess, check_oracles
+
+__all__ = ["fd_grad", "fd_hess", "check_oracles"]

@@ -1,0 +1,20 @@
+from repro.objectives.logreg import (
+    LogRegProblem,
+    logreg_f,
+    logreg_grad,
+    logreg_hess,
+    logreg_oracles,
+    logreg_margin_stats,
+)
+from repro.objectives.quadratic import QuadraticProblem, quadratic_oracles
+
+__all__ = [
+    "LogRegProblem",
+    "logreg_f",
+    "logreg_grad",
+    "logreg_hess",
+    "logreg_oracles",
+    "logreg_margin_stats",
+    "QuadraticProblem",
+    "quadratic_oracles",
+]

@@ -1,0 +1,95 @@
+"""L2-regularized logistic regression oracles (paper Eq. 2-5).
+
+Data layout follows the paper's §5.13 optimization: labels b_ij are absorbed
+into the design matrix, i.e. each client holds Z in R^{n_i x d} with rows
+z_j = b_ij * a_ij.  Then with margins m = Z x:
+
+    f_i(x)    = (1/n_i) sum_j log(1 + exp(-m_j)) + (lambda/2) ||x||^2
+    grad f_i  = -(1/n_i) Z^T (1 - sigma(m)) + lambda x
+    hess f_i  = (1/n_i) Z^T diag(sigma(m) (1 - sigma(m))) Z + lambda I
+
+§5.7 ("Reuse Computation from Oracles", x1.50): the margins and sigmoid values
+are computed ONCE and shared by all three oracles — `logreg_oracles` is the
+fused oracle; the individual functions exist for testing / autodiff parity.
+
+Numerical care: log(1+exp(-m)) is evaluated as softplus(-m) via
+`jax.nn.softplus` (stable for large |m|), and sigma*(1-sigma) is formed from
+sigma directly (paper §5.7: g(-z)*g(z) reuse).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LogRegProblem:
+    """A federated logistic-regression instance.
+
+    z: (n_clients, n_i, d)  label-absorbed design matrices (rows b_ij * a_ij)
+    lam: L2 regularization coefficient
+    """
+
+    z: jax.Array
+    lam: float
+
+    @property
+    def n_clients(self) -> int:
+        return self.z.shape[0]
+
+    @property
+    def n_i(self) -> int:
+        return self.z.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.z.shape[2]
+
+
+def logreg_margin_stats(z: jax.Array, x: jax.Array):
+    """margins m = Z x and sigmoid values (the §5.7 shared quantities)."""
+    m = z @ x
+    sigma = jax.nn.sigmoid(m)
+    return m, sigma
+
+
+def logreg_f(z: jax.Array, x: jax.Array, lam: float) -> jax.Array:
+    m = z @ x
+    return jnp.mean(jax.nn.softplus(-m)) + 0.5 * lam * jnp.sum(x * x)
+
+
+def logreg_grad(z: jax.Array, x: jax.Array, lam: float) -> jax.Array:
+    _, sigma = logreg_margin_stats(z, x)
+    n_i = z.shape[0]
+    return -(z.T @ (1.0 - sigma)) / n_i + lam * x
+
+
+def logreg_hess(z: jax.Array, x: jax.Array, lam: float) -> jax.Array:
+    _, sigma = logreg_margin_stats(z, x)
+    n_i, d = z.shape
+    h = sigma * (1.0 - sigma) / n_i  # (n_i,)
+    return z.T @ (h[:, None] * z) + lam * jnp.eye(d, dtype=z.dtype)
+
+
+def logreg_oracles(z: jax.Array, x: jax.Array, lam: float, *, use_kernel: bool = False):
+    """Fused (f, grad, hess) sharing one margin/sigmoid computation (§5.7).
+
+    use_kernel: route the Hessian SYRK through the Pallas kernel wrapper
+    (repro.kernels.ops.hessian_syrk); default is the pure-jnp path, which XLA
+    fuses well on CPU and is the oracle the kernel is tested against.
+    """
+    n_i, d = z.shape
+    m, sigma = logreg_margin_stats(z, x)
+    f = jnp.mean(jax.nn.softplus(-m)) + 0.5 * lam * jnp.sum(x * x)
+    grad = -(z.T @ (1.0 - sigma)) / n_i + lam * x
+    h = sigma * (1.0 - sigma) / n_i
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        hess = kops.hessian_syrk(z, h) + lam * jnp.eye(d, dtype=z.dtype)
+    else:
+        hess = z.T @ (h[:, None] * z) + lam * jnp.eye(d, dtype=z.dtype)
+    return f, grad, hess

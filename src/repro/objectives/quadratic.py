@@ -1,0 +1,36 @@
+"""Symmetric quadratic objectives (second problem family the paper ships:
+"out-of-the-box implementations for logistic regression and Symmetric
+Quadratic Objectives", Appendix L.5).
+
+    f_i(x) = 0.5 x^T B_i x - c_i^T x,   grad = B_i x - c_i,   hess = B_i.
+
+Useful for exact tests: FedNL with the Identity compressor must converge in one
+step from any x0 once H = mean(B_i).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadraticProblem:
+    b: jax.Array  # (n_clients, d, d) symmetric PD
+    c: jax.Array  # (n_clients, d)
+
+    @property
+    def n_clients(self) -> int:
+        return self.b.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.b.shape[-1]
+
+
+def quadratic_oracles(b: jax.Array, c: jax.Array, x: jax.Array):
+    f = 0.5 * x @ (b @ x) - c @ x
+    grad = b @ x - c
+    return f, grad, b

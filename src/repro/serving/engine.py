@@ -1,0 +1,103 @@
+"""Batched serving engine over the per-family serve_step.
+
+A deliberately small production shape: fixed-batch slots, greedy sampling,
+per-slot stop conditions, prompt consumption through the same decode step
+(sequential prefill — correct for every family including SSM/hybrid state,
+since the decode recurrences ARE the prefill recurrences one token at a
+time).  The dry-run's `prefill_step` covers the batched-prefill compute path;
+fusing batched prefill into this engine's cache is listed as future work in
+DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import init_decode_cache
+from repro.models.encdec import init_encdec_cache
+from repro.train.step import make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, batch_size: int = 4,
+                 max_len: int = 256, src_len: int = 16, eos_id: int | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos = eos_id
+        self.step = jax.jit(make_serve_step(cfg))
+        if cfg.family == "encdec":
+            self.cache = init_encdec_cache(cfg, batch_size, max_len, src_len)
+        else:
+            self.cache = init_decode_cache(cfg, batch_size, max_len)
+        self.slots: list[Request | None] = [None] * batch_size
+        self._pending: list[Request] = []
+        self._cursor = np.zeros(batch_size, dtype=np.int64)  # prompt position
+
+    def submit(self, req: Request) -> None:
+        self._pending.append(req)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.batch):
+            if self.slots[i] is None and self._pending:
+                self.slots[i] = self._pending.pop(0)
+                self._cursor[i] = 0
+
+    def _next_inputs(self) -> np.ndarray:
+        toks = np.zeros((self.batch, 1), dtype=np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            c = self._cursor[i]
+            if c < len(req.prompt):
+                toks[i, 0] = req.prompt[c]
+            elif req.generated:
+                toks[i, 0] = req.generated[-1]
+            else:
+                toks[i, 0] = req.prompt[-1]
+        return toks
+
+    def run(self, max_steps: int = 512) -> list[Request]:
+        """Drive all submitted requests to completion; returns them in order."""
+        finished: list[Request] = []
+        self._fill_slots()
+        steps = 0
+        while any(s is not None for s in self.slots) or self._pending:
+            toks = jnp.asarray(self._next_inputs())
+            logits, self.cache = self.step(self.params, self.cache, toks)
+            nxt = np.asarray(
+                jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1)
+            )
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                self._cursor[i] += 1
+                if self._cursor[i] >= len(req.prompt):
+                    req.generated.append(int(nxt[i]))
+                    hit_eos = self.eos is not None and nxt[i] == self.eos
+                    if len(req.generated) >= req.max_new_tokens or hit_eos:
+                        req.done = True
+                        finished.append(req)
+                        self.slots[i] = None
+            self._fill_slots()
+            steps += 1
+            if steps >= max_steps:
+                break
+        # NOTE: a production engine would reset per-slot cache state between
+        # requests; with the shared monotone `pos` this engine serves one
+        # wave of requests per instance (documented simplification).
+        return finished

@@ -1,0 +1,17 @@
+from repro.train.optimizer import adamw_init, adamw_update, AdamWConfig
+from repro.train.step import make_train_step, make_serve_step, loss_for
+from repro.train.data import synthetic_batch, synthetic_token_stream
+from repro.train.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "AdamWConfig",
+    "make_train_step",
+    "make_serve_step",
+    "loss_for",
+    "synthetic_batch",
+    "synthetic_token_stream",
+    "save_checkpoint",
+    "load_checkpoint",
+]

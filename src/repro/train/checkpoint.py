@@ -1,0 +1,44 @@
+"""Flat-npz pytree checkpointing (no orbax dependency).
+
+Pytrees are flattened with '/'-joined key paths; restore rebuilds against a
+reference pytree structure (shape/dtype checked).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of `like` (a pytree of arrays)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        key = prefix[:-1]
+        arr = data[key]
+        ref = np.asarray(tree)
+        if arr.shape != ref.shape:
+            raise ValueError(f"checkpoint mismatch at {key}: {arr.shape} vs {ref.shape}")
+        return jax.numpy.asarray(arr, dtype=ref.dtype)
+
+    return rebuild(like)

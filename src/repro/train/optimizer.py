@@ -1,0 +1,56 @@
+"""AdamW, implemented directly on pytrees (no optax dependency).
+
+Moment tensors share the parameter sharding (the specs pytree is reused
+verbatim for m and v), so optimizer state is FSDP-sharded exactly like params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "step": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    step = opt_state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g, opt_state["m"], grads)
+    v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g, opt_state["v"], grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        mhat = m_ / bc1
+        vhat = v_ / bc2
+        return p - cfg.lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, gnorm

@@ -1,0 +1,96 @@
+"""train_step / serve_step builders for every architecture family.
+
+`make_train_step(cfg)` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with gradient accumulation over cfg.accum_steps microbatches (a lax.scan):
+global batch (B, S) is reshaped to (A, B/A, S); grads are accumulated in f32
+and applied once — this is what bounds per-device activation memory for the
+33B/140B dry-run configs (DESIGN.md §5).
+
+`make_serve_step(cfg)` returns (params, cache, tokens) -> (logits, cache),
+one token with a KV/state cache — the function lowered by the decode shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import encdec_decode_step, encdec_loss, encdec_prefill
+from repro.models.lm import lm_decode_step, lm_loss, lm_prefill
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def loss_for(cfg: ArchConfig) -> Callable:
+    if cfg.family == "encdec":
+        return lambda params, batch: encdec_loss(params, cfg, batch)
+    return lambda params, batch: lm_loss(params, cfg, batch)
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+
+    return {k: r(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = loss_for(cfg)
+    accum = max(1, cfg.accum_steps)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = _split_microbatches(batch, accum)
+
+            def body(carry, mb):
+                loss_acc, grads_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), grads_acc, g
+                )
+                return (loss_acc + l, grads_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros), micro, unroll=cfg.unroll_layers)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        def prefill_step(params, batch):
+            return encdec_prefill(params, cfg, batch["src_embeds"], batch["tokens"])
+    elif cfg.family == "vlm":
+        def prefill_step(params, batch):
+            return lm_prefill(params, cfg, batch["tokens"], batch.get("img_embeds"))
+    else:
+        def prefill_step(params, batch):
+            return lm_prefill(params, cfg, batch["tokens"])
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        def serve_step(params, cache, tokens):
+            return encdec_decode_step(params, cfg, cache, tokens)
+    else:
+        def serve_step(params, cache, tokens):
+            return lm_decode_step(params, cfg, cache, tokens)
+
+    return serve_step

@@ -1,0 +1,5 @@
+import jax
+
+# FedNL is an FP64 algorithm (the paper runs FP64 end-to-end); the LM zoo uses
+# explicit f32/bf16 dtypes so enabling x64 globally is safe for all tests.
+jax.config.update("jax_enable_x64", True)

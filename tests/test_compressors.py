@@ -1,0 +1,202 @@
+"""Compressor theory tests: unbiasedness, contraction, variance identities,
+TopLEK tight equality, Natural omega <= 1/8 — the properties FedNL's
+convergence proof rests on (paper Section 8, Appendices C & D)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compressors import core as C
+
+
+def _rand_u(seed, t):
+    return jax.random.normal(jax.random.PRNGKey(seed), (t,), dtype=jnp.float64)
+
+
+# ---------------------------------------------------------------------------
+# TopK
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,k", [(10, 3), (100, 8), (45, 45), (64, 1)])
+def test_topk_contraction_deterministic(t, k):
+    u = _rand_u(t + k, t)
+    u_hat, sent = C.topk(u, k)
+    assert int(sent) == k
+    # deterministic contraction with delta = k/t
+    lhs = float(jnp.sum((u_hat - u) ** 2))
+    rhs = (1 - k / t) * float(jnp.sum(u**2))
+    assert lhs <= rhs + 1e-12
+    assert int(jnp.sum(u_hat != 0)) <= k
+
+
+def test_topk_keeps_largest():
+    u = jnp.asarray([0.1, -5.0, 0.3, 2.0, -0.2])
+    u_hat, _ = C.topk(u, 2)
+    np.testing.assert_allclose(np.asarray(u_hat), [0, -5.0, 0, 2.0, 0])
+
+
+# ---------------------------------------------------------------------------
+# RandK / RandSeqK
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["randk", "randseqk"])
+def test_rand_unbiased(name):
+    t, k, n_mc = 24, 6, 4000
+    u = _rand_u(0, t)
+    fn = C.randk if name == "randk" else C.randseqk
+    keys = jax.random.split(jax.random.PRNGKey(1), n_mc)
+    samples = jax.vmap(lambda key: fn(key, u, k, scaled=False)[0])(keys)
+    mean = jnp.mean(samples, axis=0)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(u), atol=0.4)
+
+
+@pytest.mark.parametrize("name", ["randk", "randseqk"])
+def test_rand_variance_identity(name):
+    """E||C(u) - u||^2 = omega ||u||^2 with omega = t/k - 1 (Appendix C)."""
+    t, k, n_mc = 24, 6, 6000
+    u = _rand_u(3, t)
+    fn = C.randk if name == "randk" else C.randseqk
+    keys = jax.random.split(jax.random.PRNGKey(2), n_mc)
+    errs = jax.vmap(
+        lambda key: jnp.sum((fn(key, u, k, scaled=False)[0] - u) ** 2)
+    )(keys)
+    omega = t / k - 1
+    want = omega * float(jnp.sum(u**2))
+    got = float(jnp.mean(errs))
+    assert abs(got - want) / want < 0.1
+
+
+def test_randseqk_selects_contiguous_window():
+    t, k = 32, 5
+    u = jnp.arange(1.0, t + 1)
+    u_hat, _ = C.randseqk(jax.random.PRNGKey(7), u, k)
+    idx = np.nonzero(np.asarray(u_hat))[0]
+    assert len(idx) == k
+    gaps = np.diff(np.sort(idx))
+    # contiguous mod t: all gaps 1 except possibly one wraparound gap
+    assert np.sum(gaps != 1) <= 1
+
+
+def test_randseqk_single_prg_call_matches_sparse_form():
+    t, k = 40, 7
+    u = _rand_u(9, t)
+    key = jax.random.PRNGKey(11)
+    dense, _ = C.randseqk(key, u, k)
+    idx, vals, _ = C.randseqk_sparse(key, u, k)
+    recon = C.scatter_add_sparse(idx, vals, t)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(recon), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# TopLEK
+# ---------------------------------------------------------------------------
+
+def test_toplek_sends_at_most_k_and_contracts():
+    t, k = 60, 12
+    for seed in range(5):
+        u = _rand_u(seed, t)
+        u_hat, kept = C.toplek(jax.random.PRNGKey(seed), u, k)
+        assert int(kept) <= k
+        lhs = float(jnp.sum((u_hat - u) ** 2))
+        rhs = (1 - k / t) * float(jnp.sum(u**2))
+        # per-sample contraction may exceed the bound only via the randomized
+        # j-branch; the EXPECTATION is tight (next test).  The i-branch holds
+        # deterministically; allow the randomized slack here.
+        assert int(jnp.sum(u_hat != 0)) <= k
+
+
+def test_toplek_tight_equality_in_expectation():
+    """E||C(x)-x||^2 == (1 - k/t) ||x||^2 exactly (Appendix D)."""
+    t, k, n_mc = 30, 6, 6000
+    u = _rand_u(4, t)
+    keys = jax.random.split(jax.random.PRNGKey(5), n_mc)
+    errs = jax.vmap(lambda key: jnp.sum((C.toplek(key, u, k)[0] - u) ** 2))(keys)
+    want = (1 - k / t) * float(jnp.sum(u**2))
+    got = float(jnp.mean(errs))
+    assert abs(got - want) / want < 0.05
+
+
+def test_toplek_zero_input():
+    u = jnp.zeros(20)
+    u_hat, kept = C.toplek(jax.random.PRNGKey(0), u, 5)
+    assert int(kept) == 0
+    assert float(jnp.sum(jnp.abs(u_hat))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Natural
+# ---------------------------------------------------------------------------
+
+def test_natural_unbiased_and_powers_of_two():
+    u = _rand_u(8, 50)
+    keys = jax.random.split(jax.random.PRNGKey(9), 4000)
+    samples = jax.vmap(lambda key: C.natural(key, u, scaled=False)[0])(keys)
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(samples, axis=0)), np.asarray(u), rtol=0.06, atol=1e-3
+    )
+    one = np.asarray(samples[0])
+    nz = one[one != 0]
+    m, e = np.frexp(np.abs(nz))
+    np.testing.assert_allclose(m, 0.5, rtol=0, atol=0)  # exact powers of two
+
+
+def test_natural_variance_bound():
+    """omega = E||C(u)-u||^2 / ||u||^2 <= 1/8 (Horvath et al.)."""
+    u = _rand_u(10, 64)
+    keys = jax.random.split(jax.random.PRNGKey(11), 4000)
+    errs = jax.vmap(lambda key: jnp.sum((C.natural(key, u, scaled=False)[0] - u) ** 2))(keys)
+    omega = float(jnp.mean(errs)) / float(jnp.sum(u**2))
+    assert omega <= 1.0 / 8.0 + 0.01
+
+
+# ---------------------------------------------------------------------------
+# sparse forms & registry — property-based
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(min_value=4, max_value=120),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**20),
+    name=st.sampled_from(["topk", "randk", "randseqk", "toplek"]),
+)
+def test_sparse_dense_equivalence(t, frac, seed, name):
+    k = max(1, int(frac * t))
+    u = _rand_u(seed % 97, t)
+    comp = C.get_compressor(name, t, k)
+    key = jax.random.PRNGKey(seed)
+    dense, _ = comp.compress(key, u)
+    idx, vals, _ = comp.compress_sparse(key, u)
+    recon = C.scatter_add_sparse(idx, vals, t)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(recon), rtol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(min_value=4, max_value=120),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**20),
+    name=st.sampled_from(["topk", "randk", "randseqk", "toplek", "natural", "identity"]),
+)
+def test_scaled_compressors_are_contractive_in_expectation(t, frac, seed, name):
+    """All registry compressors (scaled form) satisfy
+    E||C(u)-u||^2 <= (1-delta)||u||^2 — the FedNL requirement."""
+    k = max(1, int(frac * t))
+    u = _rand_u(seed % 89, t)
+    comp = C.get_compressor(name, t, k)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 300)
+    errs = jax.vmap(lambda key: jnp.sum((comp.compress(key, u)[0] - u) ** 2))(keys)
+    lhs = float(jnp.mean(errs))
+    rhs = (1 - comp.delta) * float(jnp.sum(u**2))
+    assert lhs <= rhs * 1.15 + 1e-9  # MC slack
+
+
+def test_registry_rejects_bad_k():
+    with pytest.raises(ValueError):
+        C.get_compressor("topk", 10, 0)
+    with pytest.raises(ValueError):
+        C.get_compressor("randk", 10, 11)
+    with pytest.raises(KeyError):
+        C.get_compressor("nope", 10, 1)

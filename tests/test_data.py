@@ -1,0 +1,74 @@
+"""Data pipeline: LIBSVM parser/writer roundtrip, partitioning semantics."""
+
+import numpy as np
+import pytest
+
+from repro.data import (
+    parse_libsvm,
+    write_libsvm,
+    make_synthetic_logreg,
+    add_intercept,
+    absorb_labels,
+    partition_clients,
+)
+
+
+def test_libsvm_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((20, 7))
+    x[rng.random((20, 7)) < 0.5] = 0.0  # sparsity
+    y = np.where(rng.random(20) < 0.5, 1.0, -1.0)
+    p = tmp_path / "toy.libsvm"
+    write_libsvm(p, x, y)
+    x2, y2 = parse_libsvm(p, n_features=7)
+    np.testing.assert_allclose(x2, x, rtol=1e-15)
+    np.testing.assert_allclose(y2, y)
+
+
+def test_libsvm_parses_handwritten():
+    import tempfile, os
+
+    content = "+1 1:0.5 3:2.0\n-1 2:1.5\n0 1:1.0\n"
+    with tempfile.NamedTemporaryFile("w", suffix=".libsvm", delete=False) as fh:
+        fh.write(content)
+        path = fh.name
+    try:
+        x, y = parse_libsvm(path)
+        assert x.shape == (3, 3)
+        np.testing.assert_allclose(x[0], [0.5, 0, 2.0])
+        np.testing.assert_allclose(x[1], [0, 1.5, 0])
+        np.testing.assert_allclose(y, [1, -1, -1])  # 0/1 labels normalized
+    finally:
+        os.unlink(path)
+
+
+def test_partition_shapes_match_paper_setup():
+    """W8A-shaped: d=301 (300+intercept), n=142, n_i=348."""
+    x, y = make_synthetic_logreg("w8a", seed=0)
+    z = partition_clients(add_intercept(x), y, 142, 348, seed=0)
+    assert z.shape == (142, 348, 301)
+    # intercept column absorbed the label: +-1
+    assert set(np.unique(z[..., -1])) <= {-1.0, 1.0}
+
+
+def test_partition_drops_excess_and_shuffles():
+    x = np.arange(50, dtype=np.float64).reshape(25, 2)
+    y = np.ones(25)
+    z = partition_clients(x, y, 3, 8, seed=1)
+    assert z.shape == (3, 8, 2)
+    z2 = partition_clients(x, y, 3, 8, seed=2)
+    assert not np.allclose(z, z2)  # different shuffles
+
+
+def test_partition_raises_when_insufficient():
+    x = np.zeros((10, 2))
+    y = np.ones(10)
+    with pytest.raises(ValueError):
+        partition_clients(x, y, 4, 3)
+
+
+def test_absorb_labels():
+    x = np.asarray([[1.0, 2.0], [3.0, 4.0]])
+    y = np.asarray([1.0, -1.0])
+    z = absorb_labels(x, y)
+    np.testing.assert_allclose(z, [[1, 2], [-3, -4]])

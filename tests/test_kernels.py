@@ -1,0 +1,121 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+in repro.kernels.ref (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import flash_attention_ref, hessian_syrk_ref
+
+
+# ---------------------------------------------------------------------------
+# hessian_syrk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(8, 8), (64, 48), (348, 301), (130, 257), (1, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_hessian_syrk_sweep(n, d, dtype):
+    key = jax.random.PRNGKey(n * 1000 + d)
+    z = jax.random.normal(key, (n, d), dtype=dtype)
+    h = jax.random.uniform(jax.random.fold_in(key, 1), (n,), dtype=dtype)
+    got = ops.hessian_syrk(z, h)
+    want = hessian_syrk_ref(z, h)
+    tol = 2e-4 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+
+def test_hessian_syrk_symmetric_output():
+    z = jax.random.normal(jax.random.PRNGKey(0), (100, 37), dtype=jnp.float64)
+    h = jnp.ones(100) / 100
+    out = np.asarray(ops.hessian_syrk(z, h))
+    np.testing.assert_allclose(out, out.T, atol=1e-13)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=200),
+    d=st.integers(min_value=1, max_value=160),
+    seed=st.integers(0, 999),
+)
+def test_hessian_syrk_property(n, d, seed):
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (n, d), dtype=jnp.float64)
+    h = jax.random.uniform(jax.random.fold_in(key, 1), (n,), dtype=jnp.float64)
+    np.testing.assert_allclose(
+        np.asarray(ops.hessian_syrk(z, h)),
+        np.asarray(hessian_syrk_ref(z, h)),
+        atol=1e-10,
+    )
+
+
+def test_hessian_syrk_blocks():
+    """Different BlockSpec tilings agree."""
+    z = jax.random.normal(jax.random.PRNGKey(3), (96, 80), dtype=jnp.float32)
+    h = jnp.ones(96) * 0.5
+    a = ops.hessian_syrk(z, h, block_d=128, block_n=128)
+    b = ops.hessian_syrk(z, h, block_d=32, block_n=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "sq,sk,hn,dh,causal,window",
+    [
+        (128, 128, 2, 64, True, None),
+        (256, 256, 4, 64, True, 64),
+        (200, 200, 2, 32, True, None),  # padded seq
+        (96, 96, 1, 16, False, None),  # bidirectional + padding
+        (256, 256, 2, 64, False, 128),
+        (64, 256, 1, 32, False, None),  # cross-attention shape
+    ],
+)
+def test_flash_attention_sweep(sq, sk, hn, dh, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(sq + sk + hn), 3)
+    q = jax.random.normal(ks[0], (sq, hn, dh), dtype=jnp.float32)
+    k = jax.random.normal(ks[1], (sk, hn, dh), dtype=jnp.float32)
+    v = jax.random.normal(ks[2], (sk, hn, dh), dtype=jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (128, 2, 64), dtype=jnp.bfloat16)
+    k = jax.random.normal(ks[1], (128, 2, 64), dtype=jnp.bfloat16)
+    v = jax.random.normal(ks[2], (128, 2, 64), dtype=jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = flash_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        causal=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want), atol=0.05
+    )
+
+
+def test_flash_matches_models_chunked_attention():
+    """The Pallas kernel and the models' jnp chunked attention agree."""
+    from repro.models.layers import chunked_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, s, h, dh = 2, 256, 4, 32
+    q = jax.random.normal(ks[0], (b, s, h, dh), dtype=jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, dh), dtype=jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, dh), dtype=jnp.float32)
+    jnp_out = chunked_attention(q, k, v, causal=True, window=96, q_chunk=64)
+    kern_out = jnp.stack([
+        ops.flash_attention(q[i], k[i], v[i], causal=True, window=96,
+                            block_q=64, block_k=64)
+        for i in range(b)
+    ])
+    np.testing.assert_allclose(
+        np.asarray(kern_out), np.asarray(jnp_out), atol=2e-5
+    )

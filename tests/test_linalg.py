@@ -1,0 +1,70 @@
+"""Packed-triu representation and Newton-solve tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import linalg as LA
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=st.integers(min_value=1, max_value=40), seed=st.integers(0, 1000))
+def test_pack_unpack_roundtrip(d, seed):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (d, d), dtype=jnp.float64)
+    m = a + a.T
+    u = LA.pack_triu(m)
+    assert u.shape == (LA.triu_size(d),)
+    np.testing.assert_allclose(np.asarray(LA.unpack_triu(u, d)), np.asarray(m), rtol=1e-14)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=st.integers(min_value=1, max_value=40), seed=st.integers(0, 1000))
+def test_frob_norm_from_packed(d, seed):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (d, d), dtype=jnp.float64)
+    m = a + a.T
+    got = float(LA.frob_norm_from_packed(LA.pack_triu(m), d))
+    want = float(jnp.linalg.norm(m))
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_pack_triu_batched():
+    ms = jax.random.normal(jax.random.PRNGKey(0), (5, 8, 8), dtype=jnp.float64)
+    ms = ms + jnp.swapaxes(ms, -1, -2)
+    u = LA.pack_triu(ms)
+    assert u.shape == (5, LA.triu_size(8))
+    back = LA.unpack_triu(u, 8)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(ms), rtol=1e-14)
+
+
+def test_psd_project_clips_eigenvalues():
+    a = jnp.diag(jnp.asarray([5.0, 0.5, -3.0]))
+    p = LA.psd_project(a, 1.0)
+    w = jnp.linalg.eigvalsh(p)
+    assert float(w.min()) >= 1.0 - 1e-12
+    np.testing.assert_allclose(float(w.max()), 5.0, rtol=1e-12)
+
+
+def test_cholesky_solve_matches_linalg_solve():
+    key = jax.random.PRNGKey(1)
+    a = jax.random.normal(key, (20, 20), dtype=jnp.float64)
+    spd = a @ a.T + 20 * jnp.eye(20)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (20,), dtype=jnp.float64)
+    np.testing.assert_allclose(
+        np.asarray(LA.cholesky_solve(spd, b)),
+        np.asarray(jnp.linalg.solve(spd, b)),
+        rtol=1e-9,
+    )
+
+
+def test_newton_solves_option_a_and_b():
+    key = jax.random.PRNGKey(2)
+    a = jax.random.normal(key, (12, 12), dtype=jnp.float64)
+    h = a @ a.T + 0.5 * jnp.eye(12)
+    g = jax.random.normal(jax.random.fold_in(key, 3), (12,), dtype=jnp.float64)
+    dx_a = LA.newton_solve_optionA(h, g, 1e-3)
+    np.testing.assert_allclose(np.asarray(h @ dx_a), np.asarray(g), rtol=1e-8)
+    dx_b = LA.newton_solve_optionB(h, g, jnp.asarray(0.7))
+    np.testing.assert_allclose(
+        np.asarray((h + 0.7 * jnp.eye(12)) @ dx_b), np.asarray(g), rtol=1e-8
+    )

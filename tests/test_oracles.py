@@ -1,0 +1,85 @@
+"""Logistic-regression oracle verification: analytic formulas (paper Eq. 3-5)
+vs finite differences and vs jax autodiff; fused-oracle parity (§5.7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.numerics import fd_grad, fd_hess
+from repro.objectives import (
+    logreg_f,
+    logreg_grad,
+    logreg_hess,
+    logreg_oracles,
+)
+from repro.objectives.quadratic import quadratic_oracles
+
+LAM = 1e-3
+
+
+def _problem(n=30, d=7, seed=0):
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (n, d), dtype=jnp.float64) / np.sqrt(d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (d,), dtype=jnp.float64)
+    return z, x
+
+
+def test_grad_matches_finite_differences():
+    z, x = _problem()
+    g = np.asarray(logreg_grad(z, x, LAM))
+    g_fd = fd_grad(lambda v: logreg_f(z, jnp.asarray(v), LAM), np.asarray(x))
+    np.testing.assert_allclose(g, g_fd, atol=1e-8)
+
+
+def test_hess_matches_finite_differences():
+    z, x = _problem()
+    h = np.asarray(logreg_hess(z, x, LAM))
+    h_fd = fd_hess(lambda v: logreg_f(z, jnp.asarray(v), LAM), np.asarray(x))
+    np.testing.assert_allclose(h, h_fd, atol=5e-5)
+
+
+def test_grad_hess_match_autodiff():
+    z, x = _problem(seed=3)
+    g_ad = jax.grad(lambda v: logreg_f(z, v, LAM))(x)
+    h_ad = jax.hessian(lambda v: logreg_f(z, v, LAM))(x)
+    np.testing.assert_allclose(
+        np.asarray(logreg_grad(z, x, LAM)), np.asarray(g_ad), rtol=1e-10
+    )
+    np.testing.assert_allclose(
+        np.asarray(logreg_hess(z, x, LAM)), np.asarray(h_ad), rtol=1e-8, atol=1e-12
+    )
+
+
+def test_fused_oracle_parity():
+    """§5.7: the margin-reusing fused oracle equals the individual oracles."""
+    z, x = _problem(seed=5)
+    f, g, h = logreg_oracles(z, x, LAM)
+    np.testing.assert_allclose(float(f), float(logreg_f(z, x, LAM)), rtol=1e-14)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(logreg_grad(z, x, LAM)), rtol=1e-14)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(logreg_hess(z, x, LAM)), rtol=1e-14)
+
+
+def test_fused_oracle_with_pallas_kernel():
+    """use_kernel=True routes the SYRK through the Pallas kernel wrapper."""
+    z, x = _problem(n=50, d=11, seed=6)
+    _, _, h_ref = logreg_oracles(z, x, LAM, use_kernel=False)
+    _, _, h_kern = logreg_oracles(z, x, LAM, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(h_kern), np.asarray(h_ref), rtol=1e-10)
+
+
+def test_hessian_is_psd_plus_lambda():
+    z, x = _problem(seed=7)
+    h = logreg_hess(z, x, LAM)
+    w = jnp.linalg.eigvalsh(h)
+    assert float(w.min()) >= LAM - 1e-12  # strong convexity floor (Assumption 1.1)
+
+
+def test_quadratic_oracles():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (6, 6), dtype=jnp.float64)
+    b = a @ a.T + jnp.eye(6)
+    c = jnp.ones(6)
+    x = jnp.zeros(6)
+    f, g, h = quadratic_oracles(b, c, x)
+    np.testing.assert_allclose(np.asarray(g), -np.asarray(c))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(b))

@@ -1,0 +1,71 @@
+"""Structural sharding-spec validation for every architecture (no mesh
+needed): every PartitionSpec axis must divide the corresponding parameter
+dimension on the production meshes — catching config/spec drift without a
+512-device compile."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch.specs import _init_fn, sanitize_specs
+from repro.models.encdec import encdec_cache_specs, init_encdec_cache
+from repro.models.lm import cache_specs, init_decode_cache
+
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_size(entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for e in entry:
+            n *= AXIS_SIZES[e]
+        return n
+    return AXIS_SIZES[entry]
+
+
+def _check(tree_abs, tree_spec, where):
+    leaves_a = jax.tree.leaves(tree_abs)
+    leaves_s = jax.tree.leaves(
+        tree_spec, is_leaf=lambda x: isinstance(x, P)
+    )
+    assert len(leaves_a) == len(leaves_s), where
+    for arr, spec in zip(leaves_a, leaves_s):
+        assert len(spec) <= len(arr.shape), (where, arr.shape, spec)
+        for dim, entry in zip(arr.shape, spec):
+            size = _axis_size(entry)
+            assert dim % size == 0, (where, arr.shape, spec, dim, size)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("serve_tp2d", [False, True])
+def test_param_specs_divide_mesh(arch, serve_tp2d):
+    cfg = get_config(arch)
+    init, spec_fn = _init_fn(cfg)
+    params = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+    specs = sanitize_specs(
+        params, spec_fn(cfg, serve_tp2d=serve_tp2d),
+        {k: v for k, v in AXIS_SIZES.items() if k != "pod"},
+    )
+    _check(params, specs, f"{arch} tp2d={serve_tp2d}")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize(
+    "batch,seq,batch_axis,seq_axis",
+    [(128, 32768, "data", None), (1, 524288, None, "data")],
+)
+def test_cache_specs_divide_mesh(arch, batch, seq, batch_axis, seq_axis):
+    cfg = get_config(arch)
+    if seq == 524288 and not cfg.sublquadratic:
+        pytest.skip("long_500k skipped for quadratic attention")
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(lambda: init_encdec_cache(cfg, batch, seq, 4096))
+        specs = encdec_cache_specs(cfg, batch_axis=batch_axis, seq_axis=seq_axis)
+    else:
+        cache = jax.eval_shape(lambda: init_decode_cache(cfg, batch, seq))
+        specs = cache_specs(cfg, batch_axis=batch_axis, seq_axis=seq_axis)
+    _check(cache, specs, f"{arch} cache {batch}x{seq}")
