@@ -186,4 +186,34 @@ def table4_progression():
     return rows
 
 
-ALL_TABLES = [table1_singlenode, table2_ls_vs_solvers, table3_multinode, table4_progression]
+def table5_wire_formats():
+    """Section-7 wire codecs over the loopback star transport: *measured*
+    uplink bytes per round vs the analytic message_bits model, plus the
+    bandwidth/latency cost-model round time (repro.comm.cost)."""
+    from repro.comm.cost import DEFAULT_COST
+    from repro.comm.star import run_loopback
+
+    rows = []
+    z = _problem("phishing", seed=4)
+    n, _, d = z.shape
+    bcast_bits = d * 64
+    for comp in ["identity", "topk", "randk", "randseqk", "toplek", "natural"]:
+        cfg = FedNLConfig(compressor=comp, lam=1e-3)
+        res = run_loopback(z, cfg, rounds=3)
+        per_round = res.wall_time_s / res.rounds
+        match = bool((res.measured_payload_bits == res.sent_bits).all())
+        uplink_bits = float(res.measured_payload_bits[-1])
+        wire_s = DEFAULT_COST.round_s(uplink_bits, bcast_bits, n)
+        rows.append((
+            f"table5/wire_{comp}_per_round",
+            per_round * 1e6,
+            f"frame_bytes={int(res.measured_frame_bytes[-1])};"
+            f"payload_bits={int(uplink_bits)};"
+            f"measured_eq_analytic={match};"
+            f"cost_model_round={wire_s * 1e3:.2f}ms",
+        ))
+    return rows
+
+
+ALL_TABLES = [table1_singlenode, table2_ls_vs_solvers, table3_multinode,
+              table4_progression, table5_wire_formats]

@@ -1,0 +1,36 @@
+"""repro.comm — real wire formats + star-topology transport for FedNL.
+
+Layering (DESIGN.md §§3-6):
+
+    wire.py       Section-7 byte codecs, exact-bit parity with message_bits
+    protocol.py   frame header + uplink payload layout
+    transport.py  Connection interface: in-process loopback and TCP sockets
+    star.py       master event loop + client workers (run_loopback here;
+                  multi-process TCP entry point in repro.launch.multiproc)
+    cost.py       bandwidth/latency cost model for the star exchange
+
+``star`` and ``transport`` are imported lazily as submodules (``from
+repro.comm.star import run_loopback``) — keeping this package importable from
+``repro.core`` without a cycle.
+"""
+
+from repro.comm.cost import CommCostModel, DEFAULT_COST
+from repro.comm.wire import (
+    COMPRESSOR_IDS,
+    EncodedMessage,
+    WireCodec,
+    frame_bits,
+    make_codec,
+    payload_bits,
+)
+
+__all__ = [
+    "CommCostModel",
+    "DEFAULT_COST",
+    "COMPRESSOR_IDS",
+    "EncodedMessage",
+    "WireCodec",
+    "frame_bits",
+    "make_codec",
+    "payload_bits",
+]

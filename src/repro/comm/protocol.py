@@ -1,0 +1,152 @@
+"""Message framing for the FedNL star-topology protocol (DESIGN.md §4).
+
+Every message is one frame: a fixed 32-byte little-endian header followed by
+``payload_len`` payload bytes.
+
+    offset  size  field
+    0       4     magic  b"FNL1" (protocol version folded into the magic)
+    4       1     msg type (MsgType)
+    5       1     compressor id (wire.COMPRESSOR_IDS)
+    6       1     dtype tag (0 = float64; the only FedNL dtype)
+    7       1     flags (reserved, 0)
+    8       4     round index
+    12      4     client id
+    16      4     sent_elems (payload elements of the Hessian section)
+    20      8     payload_bits (exact Section-7 bit count of the Hessian section)
+    28      4     payload_len (bytes that follow)
+
+Frame kinds:
+
+    HELLO     client -> master on connect; identifies `client id`.  No payload.
+    INIT      master -> clients: x0 (d FP64).  Clients reply INIT_ACK.
+    INIT_ACK  client -> master: packed initial Hessian H_i^0 (T FP64).
+    ROUND     master -> clients: current iterate x (d FP64).
+    UPLINK    client -> master: grad (d FP64) || l (FP64) || f_i (FP64) ||
+              encoded Hessian payload (wire.py codecs).
+    STOP      master -> clients: end of run.  No payload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import struct
+
+import jax
+import numpy as np
+
+from repro.comm.wire import EncodedMessage
+
+MAGIC = b"FNL1"
+HEADER_FMT = "<4sBBBBIIIQI"
+HEADER_SIZE = struct.calcsize(HEADER_FMT)
+assert HEADER_SIZE == 32, HEADER_SIZE
+
+DTYPE_F64 = 0
+
+
+class MsgType(enum.IntEnum):
+    HELLO = 1
+    INIT = 2
+    INIT_ACK = 3
+    ROUND = 4
+    UPLINK = 5
+    STOP = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    type: MsgType
+    round: int = 0
+    client: int = 0
+    comp_id: int = 0
+    dtype: int = DTYPE_F64
+    sent_elems: int = 0
+    payload_bits: int = 0
+    payload: bytes = b""
+
+    @property
+    def wire_bytes(self) -> int:
+        return HEADER_SIZE + len(self.payload)
+
+
+def pack_frame(frame: Frame) -> bytes:
+    header = struct.pack(
+        HEADER_FMT,
+        MAGIC,
+        int(frame.type),
+        frame.comp_id,
+        frame.dtype,
+        0,
+        frame.round,
+        frame.client,
+        frame.sent_elems,
+        frame.payload_bits,
+        len(frame.payload),
+    )
+    return header + frame.payload
+
+
+def unpack_header(header: bytes) -> tuple[Frame, int]:
+    """Parse a header; returns the (payload-less) Frame and the payload length."""
+    magic, mtype, comp_id, dtype, _flags, rnd, client, sent, pbits, plen = (
+        struct.unpack(HEADER_FMT, header)
+    )
+    if magic != MAGIC:
+        raise ValueError(f"bad magic {magic!r}; protocol mismatch")
+    frame = Frame(
+        type=MsgType(mtype),
+        round=rnd,
+        client=client,
+        comp_id=comp_id,
+        dtype=dtype,
+        sent_elems=sent,
+        payload_bits=pbits,
+    )
+    return frame, plen
+
+
+def send_frame(conn, frame: Frame) -> int:
+    """Write one frame to a transport connection; returns bytes sent."""
+    data = pack_frame(frame)
+    conn.send(data)
+    return len(data)
+
+
+def recv_frame(conn) -> Frame:
+    """Read exactly one frame from a transport connection."""
+    frame, plen = unpack_header(conn.recv_exact(HEADER_SIZE))
+    payload = conn.recv_exact(plen) if plen else b""
+    return dataclasses.replace(frame, payload=payload)
+
+
+# ---------------------------------------------------------------------------
+# payload helpers
+# ---------------------------------------------------------------------------
+
+def pack_vector(x) -> bytes:
+    return np.asarray(x, dtype="<f8").tobytes()
+
+
+def unpack_vector(data: bytes):
+    import jax.numpy as jnp
+
+    return jnp.asarray(np.frombuffer(data, dtype="<f8").copy())
+
+
+def pack_uplink(grad: jax.Array, l, f, enc: EncodedMessage) -> bytes:
+    """grad (d FP64) || l || f_i || encoded Hessian message."""
+    return (
+        pack_vector(grad)
+        + struct.pack("<dd", float(l), float(f))
+        + enc.data
+    )
+
+
+def unpack_uplink(payload: bytes, d: int):
+    """Inverse of pack_uplink -> (grad, l, f, hessian_payload_bytes)."""
+    import jax.numpy as jnp
+
+    grad = unpack_vector(payload[: 8 * d])
+    l, f = struct.unpack("<dd", payload[8 * d : 8 * d + 16])
+    return grad, jnp.float64(l), jnp.float64(f), payload[8 * d + 16 :]

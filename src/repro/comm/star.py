@@ -1,0 +1,285 @@
+"""Star-topology FedNL: a real master event loop + client workers (DESIGN.md §5).
+
+This is the paper's Section-7 multi-node setting: n clients connect to one
+master; every round the master broadcasts the iterate x, each client runs the
+Algorithm-1 client body on its own shard and uplinks
+``grad_i || l_i || f_i || encode(S_i)`` through a wire codec; the master
+decodes, averages, and takes the Newton-type step.
+
+Seed alignment (the property tested against ``run_fednl``): the single-node
+simulation draws ``key, sub = split(state.key); client_keys = split(sub, n)``
+each round.  Every client replays that exact split chain locally from the
+shared run seed and uses ``client_keys[client_id]`` — no key material needs to
+travel, and the per-client compression randomness is identical to the
+simulation's.  Combined with bit-exact codecs (wire.py) and the master
+replaying the same jnp aggregation ops, a TCP run reproduces the single-node
+iterate trajectory.
+
+The same master loop runs over any transport; ``run_loopback`` drives in-
+process clients synchronously (tests, smoke), ``launch/multiproc.py`` runs it
+against real TCP client processes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import protocol, wire
+from repro.comm.protocol import Frame, MsgType, recv_frame, send_frame
+from repro.comm.transport import Connection, loopback_pair
+from repro.compressors import get_compressor
+from repro.compressors.core import message_bits
+from repro.core.fednl import FedNLConfig, _client_oracles, master_step
+from repro.linalg import frob_norm_from_packed, triu_size
+
+
+@dataclasses.dataclass
+class StarRunResult:
+    """Trajectory + *measured* wire accounting of a star-topology run."""
+
+    x: np.ndarray
+    grad_norms: np.ndarray
+    f_vals: np.ndarray
+    rounds: int
+    sent_bits: np.ndarray  # per-round analytic payload bits (message_bits model)
+    measured_payload_bits: np.ndarray  # per-round Section-7 bits counted on the wire
+    measured_frame_bytes: np.ndarray  # per-round full uplink frame bytes incl. framing
+    wall_time_s: float
+
+
+class StarClient:
+    """One client worker: owns a data shard, serves master frames."""
+
+    def __init__(
+        self,
+        client_id: int,
+        n_clients: int,
+        z_i: jax.Array,
+        cfg: FedNLConfig,
+        conn: Connection,
+        seed: int = 0,
+    ):
+        self.client_id = client_id
+        self.n_clients = n_clients
+        self.z_i = jnp.asarray(z_i)
+        self.cfg = cfg
+        self.conn = conn
+        self.d = int(self.z_i.shape[-1])
+        self.t = triu_size(self.d)
+        self.comp = get_compressor(cfg.compressor, self.t, cfg.k_for(self.d))
+        self.codec = wire.make_codec(self.comp, self.t)
+        self.alpha = self.comp.alpha if cfg.alpha is None else cfg.alpha
+        self.key = jax.random.PRNGKey(seed)
+        self.h = jnp.zeros(self.t, dtype=self.z_i.dtype)
+        # jit the oracle once; compression/serialization stay eager (host code)
+        self._oracles = jax.jit(
+            lambda x: _client_oracles(self.z_i, x, cfg.lam, cfg.use_kernel)
+        )
+
+    def _round_key(self) -> jax.Array:
+        """Replay the simulation's per-round key schedule for this client."""
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.split(sub, self.n_clients)[self.client_id]
+
+    def _handle_init(self, frame: Frame) -> None:
+        x0 = protocol.unpack_vector(frame.payload)
+        if self.cfg.hess0 == "exact":
+            _, _, self.h = self._oracles(x0)
+        elif self.cfg.hess0 == "zero":
+            self.h = jnp.zeros(self.t, dtype=self.z_i.dtype)
+        else:
+            raise ValueError(f"unknown hess0 {self.cfg.hess0!r}")
+        send_frame(
+            self.conn,
+            Frame(
+                type=MsgType.INIT_ACK,
+                client=self.client_id,
+                payload=protocol.pack_vector(self.h),
+            ),
+        )
+
+    def _handle_round(self, frame: Frame) -> None:
+        x = protocol.unpack_vector(frame.payload)
+        key_i = self._round_key()
+        f_i, grad_i, hess_p = self._oracles(x)
+        delta = hess_p - self.h
+        enc = self.codec.encode(key_i, delta)
+        # decode our own message so the local H_i update uses exactly the
+        # dense correction the master will reconstruct (state stays in sync)
+        s_i = self.codec.decode(enc.data, enc.sent_elems)
+        l_i = frob_norm_from_packed(delta, self.d)
+        self.h = self.h + self.alpha * s_i
+        send_frame(
+            self.conn,
+            Frame(
+                type=MsgType.UPLINK,
+                round=frame.round,
+                client=self.client_id,
+                comp_id=self.codec.comp_id,
+                sent_elems=enc.sent_elems,
+                payload_bits=enc.bits,
+                payload=protocol.pack_uplink(grad_i, l_i, f_i, enc),
+            ),
+        )
+
+    def serve_once(self) -> bool:
+        """Process one master frame; returns False on STOP."""
+        frame = recv_frame(self.conn)
+        if frame.type == MsgType.STOP:
+            return False
+        if frame.type == MsgType.INIT:
+            self._handle_init(frame)
+        elif frame.type == MsgType.ROUND:
+            self._handle_round(frame)
+        else:
+            raise ValueError(f"client got unexpected frame {frame.type}")
+        return True
+
+    def run(self) -> None:
+        """Blocking serve loop (TCP client processes)."""
+        try:
+            while self.serve_once():
+                pass
+        finally:
+            self.conn.close()
+
+
+def run_star_master(
+    conns: dict[int, Connection],
+    d: int,
+    cfg: FedNLConfig,
+    rounds: int = 100,
+    tol: float = 0.0,
+    x0: jax.Array | None = None,
+    drive: Callable[[], None] | None = None,
+) -> StarRunResult:
+    """The hub event loop: INIT handshake, then FedNL rounds until tol/rounds.
+
+    ``drive`` is the loopback hook — called after every broadcast to let the
+    in-process clients consume their frames (a no-op over TCP, where clients
+    run in their own processes).
+    """
+    n_clients = len(conns)
+    order = sorted(conns)  # aggregation order == simulation's client axis order
+    t = triu_size(d)
+    comp = get_compressor(cfg.compressor, t, cfg.k_for(d))
+    codec = wire.make_codec(comp, t)
+    alpha = comp.alpha if cfg.alpha is None else cfg.alpha
+
+    x = jnp.zeros(d, dtype=jnp.float64) if x0 is None else jnp.asarray(x0)
+
+    def broadcast(frame: Frame) -> None:
+        for cid in order:
+            send_frame(conns[cid], frame)
+        if drive is not None:
+            drive()
+
+    def collect(expect: MsgType) -> dict[int, Frame]:
+        got = {}
+        for cid in order:
+            frame = recv_frame(conns[cid])
+            if frame.type != expect or frame.client != cid:
+                raise ValueError(
+                    f"master expected {expect} from client {cid}, got "
+                    f"{frame.type} from {frame.client}"
+                )
+            got[cid] = frame
+        return got
+
+    # --- INIT handshake: clients report H_i^0 for the chosen hess0 policy ---
+    broadcast(Frame(type=MsgType.INIT, payload=protocol.pack_vector(x)))
+    acks = collect(MsgType.INIT_ACK)
+    h_global = jnp.mean(
+        jnp.stack([protocol.unpack_vector(acks[cid].payload) for cid in order]),
+        axis=0,
+    )
+
+    grad_norms, f_vals = [], []
+    bits_analytic, bits_measured, frame_bytes = [], [], []
+    t_start = time.perf_counter()
+    for r in range(rounds):
+        broadcast(Frame(type=MsgType.ROUND, round=r, payload=protocol.pack_vector(x)))
+        ups = collect(MsgType.UPLINK)
+
+        grads, s_list, l_list, f_list = [], [], [], []
+        round_pbits = round_abits = round_fbytes = 0
+        for cid in order:
+            fr = ups[cid]
+            grad_i, l_i, f_i, hess_bytes = protocol.unpack_uplink(fr.payload, d)
+            s_list.append(codec.decode(hess_bytes, fr.sent_elems))
+            grads.append(grad_i)
+            l_list.append(l_i)
+            f_list.append(f_i)
+            round_pbits += fr.payload_bits
+            round_abits += int(message_bits(comp, fr.sent_elems))
+            round_fbytes += fr.wire_bytes
+
+        # identical jnp aggregation ops to make_fednl_round's master section
+        grad = jnp.mean(jnp.stack(grads), axis=0)
+        s = jnp.mean(jnp.stack(s_list), axis=0)
+        l = jnp.mean(jnp.stack(l_list))
+        f = jnp.mean(jnp.stack(f_list))
+
+        x_new = master_step(x, h_global, grad, l, cfg)
+        h_global = h_global + alpha * s
+
+        gn = float(jnp.linalg.norm(grad))
+        grad_norms.append(gn)
+        f_vals.append(float(f))
+        bits_analytic.append(round_abits)
+        bits_measured.append(round_pbits)
+        frame_bytes.append(round_fbytes)
+        x = x_new
+        if tol > 0.0 and gn < tol:
+            break
+
+    broadcast(Frame(type=MsgType.STOP))
+    wall = time.perf_counter() - t_start
+    return StarRunResult(
+        x=np.asarray(x),
+        grad_norms=np.asarray(grad_norms),
+        f_vals=np.asarray(f_vals),
+        rounds=len(grad_norms),
+        sent_bits=np.asarray(bits_analytic, dtype=np.int64),
+        measured_payload_bits=np.asarray(bits_measured, dtype=np.int64),
+        measured_frame_bytes=np.asarray(frame_bytes, dtype=np.int64),
+        wall_time_s=wall,
+    )
+
+
+def run_loopback(
+    z: jax.Array,
+    cfg: FedNLConfig,
+    rounds: int = 100,
+    tol: float = 0.0,
+    seed: int = 0,
+) -> StarRunResult:
+    """Full protocol run over in-process loopback transport (one thread).
+
+    Every message crosses the encode -> frame -> decode path; only the
+    sockets are replaced by synchronous buffers.
+    """
+    n_clients, _, d = z.shape
+    master_conns: dict[int, Connection] = {}
+    clients: list[StarClient] = []
+    for i in range(n_clients):
+        a, b = loopback_pair()
+        master_conns[i] = a
+        clients.append(StarClient(i, n_clients, z[i], cfg, b, seed=seed))
+
+    pending = [True] * n_clients
+
+    def drive() -> None:
+        for i, c in enumerate(clients):
+            if pending[i]:
+                pending[i] = c.serve_once()
+
+    return run_star_master(
+        master_conns, d, cfg, rounds=rounds, tol=tol, drive=drive
+    )

@@ -1,0 +1,151 @@
+"""Transports for the FedNL star topology (DESIGN.md §5).
+
+Two implementations behind one byte-stream ``Connection`` interface:
+
+  * loopback — in-process buffered pipes.  The master and its clients run in
+    one thread with a synchronous schedule (broadcast, drive clients, read
+    replies), so every byte still crosses the full encode -> frame -> decode
+    path; this is the deterministic test double for the TCP transport.
+
+  * TCP — real sockets over localhost or a LAN.  ``TCPMaster`` binds, accepts
+    ``n_clients`` connections, and identifies each peer by its HELLO frame;
+    ``connect_to_master`` retries while the master socket comes up (client
+    processes race the master's bind in ``launch/multiproc.py``).
+
+TCP_NODELAY is set on every socket: FedNL rounds are latency-bound
+request/response exchanges of small frames — exactly the Nagle pathology.
+"""
+
+from __future__ import annotations
+
+import socket
+import time
+
+from repro.comm import protocol
+
+
+class Connection:
+    """A reliable, ordered byte stream."""
+
+    def send(self, data: bytes) -> None:
+        raise NotImplementedError
+
+    def recv_exact(self, n: int) -> bytes:
+        raise NotImplementedError
+
+    def close(self) -> None:  # pragma: no cover - trivial
+        pass
+
+
+# ---------------------------------------------------------------------------
+# loopback
+# ---------------------------------------------------------------------------
+
+class LoopbackConnection(Connection):
+    def __init__(self):
+        self._peer: LoopbackConnection | None = None
+        self._buf = bytearray()
+        self.bytes_sent = 0
+
+    def send(self, data: bytes) -> None:
+        assert self._peer is not None, "unpaired loopback connection"
+        self._peer._buf.extend(data)
+        self.bytes_sent += len(data)
+
+    def recv_exact(self, n: int) -> bytes:
+        if len(self._buf) < n:
+            raise RuntimeError(
+                f"loopback underrun: want {n} bytes, have {len(self._buf)} "
+                "(master/client schedule out of sync)"
+            )
+        out = bytes(self._buf[:n])
+        del self._buf[:n]
+        return out
+
+
+def loopback_pair() -> tuple[LoopbackConnection, LoopbackConnection]:
+    a, b = LoopbackConnection(), LoopbackConnection()
+    a._peer, b._peer = b, a
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# TCP
+# ---------------------------------------------------------------------------
+
+class SocketConnection(Connection):
+    def __init__(self, sock: socket.socket):
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock = sock
+        self.bytes_sent = 0
+
+    def send(self, data: bytes) -> None:
+        self._sock.sendall(data)
+        self.bytes_sent += len(data)
+
+    def recv_exact(self, n: int) -> bytes:
+        chunks = []
+        got = 0
+        while got < n:
+            chunk = self._sock.recv(min(n - got, 1 << 20))
+            if not chunk:
+                raise ConnectionError(f"peer closed after {got}/{n} bytes")
+            chunks.append(chunk)
+            got += len(chunk)
+        return b"".join(chunks)
+
+    def close(self) -> None:
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+
+class TCPMaster:
+    """The hub of the star: binds, then accepts and identifies n clients."""
+
+    def __init__(self, n_clients: int, host: str = "127.0.0.1", port: int = 0):
+        self.n_clients = n_clients
+        self._listener = socket.create_server((host, port), backlog=n_clients)
+        self.host, self.port = self._listener.getsockname()[:2]
+
+    def accept_clients(self, timeout: float = 120.0) -> dict[int, SocketConnection]:
+        """Accept exactly n_clients connections; map them by HELLO client id."""
+        self._listener.settimeout(timeout)
+        conns: dict[int, SocketConnection] = {}
+        while len(conns) < self.n_clients:
+            sock, _addr = self._listener.accept()
+            conn = SocketConnection(sock)
+            hello = protocol.recv_frame(conn)
+            if hello.type != protocol.MsgType.HELLO:
+                conn.close()
+                raise ConnectionError(f"expected HELLO, got {hello.type}")
+            if hello.client in conns:
+                conn.close()
+                raise ConnectionError(f"duplicate client id {hello.client}")
+            conns[hello.client] = conn
+        return conns
+
+    def close(self) -> None:
+        self._listener.close()
+
+
+def connect_to_master(
+    host: str, port: int, client_id: int, timeout: float = 120.0
+) -> SocketConnection:
+    """Dial the master, retrying until it is listening; send HELLO."""
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            sock = socket.create_connection((host, port), timeout=timeout)
+            break
+        except (ConnectionRefusedError, OSError):
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.05)
+    conn = SocketConnection(sock)
+    protocol.send_frame(
+        conn, protocol.Frame(type=protocol.MsgType.HELLO, client=client_id)
+    )
+    return conn

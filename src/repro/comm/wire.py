@@ -1,0 +1,309 @@
+"""Section-7 wire-format codecs for compressed packed-triu FedNL messages.
+
+The paper's multi-node implementation ships each client's compressed Hessian
+correction ``S_i = C(D_i - H_i)`` over TCP using compressor-specific byte
+encodings (paper Section 7).  This module implements those encodings as
+byte-level encoder/decoder pairs whose *exact* bit cost agrees with the
+analytic :func:`repro.compressors.core.message_bits` model — so the simulated
+``sent_bits`` accounting and the measured wire bytes are provably the same
+quantity (asserted in ``tests/test_comm.py``).
+
+Per-compressor formats (little-endian throughout; DESIGN.md §3):
+
+  identity   T x FP64 raw values.                       bits = 64 T
+  topk       k x (u32 index || FP64 value).             bits = 96 k
+  randk      8-byte PRG key || k x FP64 value.          bits = 64 + 64 k
+             The receiver re-runs the PRG (uniform keys + top_k) to
+             reconstruct the index set — "PRG-seed reconstruction": indices
+             never travel on the wire.
+  randseqk   u32 start index s || k x FP64 value.       bits = 32 + 64 k
+             The k kept slots are {s, .., s+k-1 mod T}: one 32-bit integer
+             replaces the whole index vector (paper Appendix C).
+  toplek     u32 kept count k' || k' x (u32 || FP64).   bits = 32 + 96 k'
+             Data-dependent payload (paper Appendix D adaptivity).
+  natural    T x 12-bit (sign || 11-bit biased exponent), bit-packed.
+                                                        bits = 12 T
+             Values of the scaled Natural compressor are exactly
+             ``sign * 2^p * (8/9)``; the 8/9 factor is a *protocol constant*
+             so only sign+exponent travel.  Exponents below FP64-normal
+             (p < -1022) encode as zero — a <=2^-1022 absolute loss.
+
+Decoding reproduces the client's dense compressed vector ``u_hat``
+*bit-exactly* (including Natural: the decoder replays the identical float64
+multiply chain), which is what lets a TCP run reproduce the single-node
+``run_fednl`` trajectory.
+
+Codecs run on host (numpy + eager jax for the PRG paths); they are the
+serialization boundary, not a jit-traced computation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compressors.core import (
+    FP_BITS,
+    IDX_BITS,
+    NATURAL_BITS,
+    Compressor,
+    message_bits,
+    randk_sparse,
+    randseqk_sparse,
+    scatter_add_sparse,
+    topk_sparse,
+    toplek_sparse,
+)
+
+# stable on-the-wire compressor ids (protocol header `comp_id` field)
+COMPRESSOR_IDS = {
+    "identity": 0,
+    "topk": 1,
+    "randk": 2,
+    "randseqk": 3,
+    "toplek": 4,
+    "natural": 5,
+}
+COMPRESSOR_NAMES = {v: k for k, v in COMPRESSOR_IDS.items()}
+
+NATURAL_SCALE = 8.0 / 9.0  # protocol constant: registry Natural is the scaled form
+_EXP_BIAS = 1023  # FP64 exponent bias; code 0 means value == 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodedMessage:
+    """One compressed Hessian message as it travels on the wire.
+
+    ``bits`` is the exact Section-7 bit count — ``len(data) == ceil(bits/8)``
+    (Natural is the only format whose bit count is not byte-aligned).
+    """
+
+    data: bytes
+    bits: int
+    sent_elems: int
+
+
+def _key_to_bytes(key: jax.Array) -> bytes:
+    """Serialize a jax PRNG key (legacy uint32[2] or typed) to 8 wire bytes."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)  # typed keys refuse np.asarray directly
+    kd = np.asarray(key)
+    if kd.size != 2:
+        raise ValueError(f"expected a 64-bit PRNG key, got shape {kd.shape}")
+    return kd.astype("<u4").tobytes()
+
+
+def _key_from_bytes(data: bytes) -> jax.Array:
+    return jnp.asarray(np.frombuffer(data, dtype="<u4").copy())
+
+
+def _f64_bytes(a) -> bytes:
+    return np.asarray(a, dtype="<f8").tobytes()
+
+
+def _f64_from(data: bytes) -> jax.Array:
+    return jnp.asarray(np.frombuffer(data, dtype="<f8").copy())
+
+
+def _u32_bytes(a) -> bytes:
+    return np.asarray(a, dtype="<u4").tobytes()
+
+
+def _u32_from(data: bytes) -> np.ndarray:
+    return np.frombuffer(data, dtype="<u4").copy()
+
+
+class WireCodec:
+    """encode(key, u) -> EncodedMessage; decode(data, sent_elems) -> dense (T,).
+
+    ``encode`` consumes the *uncompressed* packed-triu vector (plus the
+    client's per-round PRG key) and performs compression + serialization in
+    one step, guaranteeing that ``decode(encode(key, u)) ==
+    Compressor.compress(key, u)[0]`` bit-for-bit.
+    """
+
+    def __init__(self, comp: Compressor, t: int):
+        self.comp = comp
+        self.t = t
+
+    @property
+    def name(self) -> str:
+        return self.comp.name
+
+    @property
+    def comp_id(self) -> int:
+        return COMPRESSOR_IDS[self.comp.name]
+
+    def encode(self, key: jax.Array, u: jax.Array) -> EncodedMessage:
+        raise NotImplementedError
+
+    def decode(self, data: bytes, sent_elems: int) -> jax.Array:
+        raise NotImplementedError
+
+
+class IdentityCodec(WireCodec):
+    def encode(self, key, u):
+        del key
+        return EncodedMessage(_f64_bytes(u), self.t * FP_BITS, self.t)
+
+    def decode(self, data, sent_elems):
+        del sent_elems
+        return _f64_from(data)
+
+
+class TopKCodec(WireCodec):
+    def encode(self, key, u):
+        del key
+        k = self.comp.k
+        idx, vals, _ = topk_sparse(u, k)
+        data = _u32_bytes(idx) + _f64_bytes(vals)
+        return EncodedMessage(data, k * (IDX_BITS + FP_BITS), k)
+
+    def decode(self, data, sent_elems):
+        k = sent_elems
+        idx = _u32_from(data[: 4 * k]).astype(np.int32)
+        vals = _f64_from(data[4 * k :])
+        return scatter_add_sparse(jnp.asarray(idx), vals, self.t)
+
+
+class RandKCodec(WireCodec):
+    """Values + the 8-byte PRG key; the index set is reconstructed by
+    replaying the PRG on the receiver (never transmitted)."""
+
+    def encode(self, key, u):
+        k = self.comp.k
+        _, vals, _ = randk_sparse(key, u, k)
+        data = _key_to_bytes(key) + _f64_bytes(vals)
+        return EncodedMessage(data, FP_BITS + k * FP_BITS, k)
+
+    def _indices(self, key: jax.Array) -> jax.Array:
+        # identical op sequence to compressors.core.randk_sparse
+        keys = jax.random.uniform(key, (self.t,), dtype=jnp.float32)
+        _, idx = jax.lax.top_k(keys, self.comp.k)
+        return idx.astype(jnp.int32)
+
+    def decode(self, data, sent_elems):
+        k = sent_elems
+        key = _key_from_bytes(data[:8])
+        vals = _f64_from(data[8 : 8 + 8 * k])
+        return scatter_add_sparse(self._indices(key), vals, self.t)
+
+
+class RandSeqKCodec(WireCodec):
+    """Contiguous window: one u32 start index + k values (Appendix C)."""
+
+    def encode(self, key, u):
+        k = self.comp.k
+        idx, vals, _ = randseqk_sparse(key, u, k)
+        s = int(np.asarray(idx)[0])
+        data = _u32_bytes([s]) + _f64_bytes(vals)
+        return EncodedMessage(data, IDX_BITS + k * FP_BITS, k)
+
+    def decode(self, data, sent_elems):
+        k = sent_elems
+        s = int(_u32_from(data[:4])[0])
+        vals = _f64_from(data[4 : 4 + 8 * k])
+        idx = jnp.asarray(((s + np.arange(k)) % self.t).astype(np.int32))
+        return scatter_add_sparse(idx, vals, self.t)
+
+
+class TopLEKCodec(WireCodec):
+    """Adaptive payload: u32 kept-count header + kept (idx, val) pairs."""
+
+    def encode(self, key, u):
+        idx, vals, kept = toplek_sparse(key, u, self.comp.k)
+        kept = int(kept)
+        idx_np = np.asarray(idx)[:kept]
+        vals_np = np.asarray(vals)[:kept]
+        data = _u32_bytes([kept]) + _u32_bytes(idx_np) + _f64_bytes(vals_np)
+        return EncodedMessage(data, IDX_BITS + kept * (IDX_BITS + FP_BITS), kept)
+
+    def decode(self, data, sent_elems):
+        kept = int(_u32_from(data[:4])[0])
+        if kept != sent_elems:
+            raise ValueError(f"toplek header kept={kept} != sent_elems={sent_elems}")
+        idx = _u32_from(data[4 : 4 + 4 * kept]).astype(np.int32)
+        vals = _f64_from(data[4 + 4 * kept :])
+        return scatter_add_sparse(jnp.asarray(idx), vals, self.t)
+
+
+class NaturalCodec(WireCodec):
+    """Bit-packed sign + 11-bit exponent per entry (12 bits, paper Section 7).
+
+    The scaled Natural compressor emits exactly ``sign * 2^p * NATURAL_SCALE``
+    (the power-of-two multiply is exact in FP64), so frexp recovers ``p``
+    without rounding ambiguity and the decoder replays the same multiply
+    chain, giving a bit-exact round trip of the compressed vector.
+    """
+
+    def encode(self, key, u):
+        u_hat, _ = self.comp.compress(key, u)  # probabilistic pow2 rounding
+        u_np = np.asarray(u_hat, dtype=np.float64)
+        sm, se = np.frexp(NATURAL_SCALE)  # NATURAL_SCALE = sm * 2^se, sm in [.5, 1)
+        mant, ex = np.frexp(np.abs(u_np))
+        p = ex - se  # |u| = 2^p * NATURAL_SCALE  (mant == sm exactly)
+        biased = np.clip(p + _EXP_BIAS, 0, 2046)
+        codes = np.where(u_np == 0.0, 0, biased).astype(np.uint16)
+        codes |= (np.signbit(u_np) & (u_np != 0.0)).astype(np.uint16) << 11
+        # pack T x 12 bits MSB-first
+        be = codes[:, None].view(np.uint8).reshape(-1, 2)[:, ::-1]  # big-endian pairs
+        bits16 = np.unpackbits(be, axis=1)  # (T, 16)
+        data = np.packbits(bits16[:, 4:].reshape(-1)).tobytes()
+        return EncodedMessage(data, self.t * NATURAL_BITS, self.t)
+
+    def decode(self, data, sent_elems):
+        t = self.t
+        if sent_elems != t:
+            raise ValueError(f"natural sends all T={t} entries, got {sent_elems}")
+        flat = np.unpackbits(np.frombuffer(data, dtype=np.uint8))[: 12 * t]
+        bits16 = np.zeros((t, 16), dtype=np.uint8)
+        bits16[:, 4:] = flat.reshape(t, 12)
+        pairs = np.packbits(bits16, axis=1)  # (T, 2) big-endian
+        codes = (pairs[:, 0].astype(np.uint16) << 8) | pairs[:, 1]
+        biased = (codes & 0x7FF).astype(np.int64)
+        sign = np.where(codes >> 11 & 1, -1.0, 1.0)
+        pow2 = np.ldexp(np.ones(t), biased - _EXP_BIAS)
+        # replay the compressor's float sequence: (sign * 2^p) * (8/9)
+        vals = np.where(biased == 0, 0.0, sign * pow2) * NATURAL_SCALE
+        return jnp.asarray(vals)
+
+
+_CODECS = {
+    "identity": IdentityCodec,
+    "topk": TopKCodec,
+    "randk": RandKCodec,
+    "randseqk": RandSeqKCodec,
+    "toplek": TopLEKCodec,
+    "natural": NaturalCodec,
+}
+
+
+def make_codec(comp: Compressor, t: int) -> WireCodec:
+    """Wire codec for a configured compressor on packed-triu length ``t``."""
+    if comp.name not in _CODECS:
+        raise KeyError(f"no wire codec for compressor {comp.name!r}")
+    return _CODECS[comp.name](comp, t)
+
+
+def payload_bits(comp: Compressor, sent_elems) -> jax.Array:
+    """Exact wire bits of the Hessian payload — by construction identical to
+    the analytic :func:`message_bits` model (single source of truth)."""
+    return message_bits(comp, sent_elems)
+
+
+def frame_bits(comp: Compressor, sent_elems, d: int):
+    """Wire bits of one full client UPLINK frame (jit-compatible arithmetic).
+
+    frame = protocol header + grad (d FP64) + l + f_i (FP64 each) + the
+    byte-padded Hessian payload.  This is the "measured" accounting option of
+    ``FedNLConfig.accounting='wire'`` and matches ``len(frame)`` of the real
+    transport byte stream exactly (asserted in tests/test_comm.py).
+    """
+    from repro.comm.protocol import HEADER_SIZE  # no import cycle: protocol is leaf
+
+    pb = sent_elems * int(comp.bits_per_elem) + int(comp.header_bits)
+    payload_bytes = (pb + 7) // 8
+    return 8 * (payload_bytes + HEADER_SIZE + (d + 2) * 8)

@@ -37,9 +37,11 @@ returns the scaled form by default and reports:
 Each `compress(key, u)` returns `(u_hat, sent_elems)` where `u_hat` is the dense
 (decompressed) result used by the simulation and `sent_elems` is the number of
 scalar payload entries a real network transfer would carry (TopLEK makes this
-data-dependent).  `spec.bits(sent_elems)` converts to wire bits using the paper's
-Section 7 encodings (32-bit indices; PRG-seed reconstruction for RandK/RandSeqK;
-sign+exponent-only payload for Natural).
+data-dependent).  `message_bits(comp, sent_elems)` converts to wire bits using
+the paper's Section 7 encodings (32-bit indices; PRG-seed reconstruction for
+RandK/RandSeqK; sign+exponent-only payload for Natural); the byte-level
+encoder/decoder pairs realizing exactly these bit counts on a real transport
+live in `repro.comm.wire` (DESIGN.md §3).
 """
 
 from __future__ import annotations

@@ -62,6 +62,13 @@ class FedNLConfig:
     ls_c: float = 0.49
     ls_gamma: float = 0.5
     ls_max_steps: int = 30
+    # accept the unit Newton step without backtracking once ||grad|| is below
+    # this tolerance (FP64 plateau: Armijo trials there only burn f-round-trips)
+    ls_tol: float = 1e-12
+    # sent_bits accounting: "payload" = Section-7 Hessian payload bits (equal
+    # to the measured wire payload — see repro.comm.wire); "wire" = full
+    # framed uplink bytes incl. protocol header + grad + l + f sections
+    accounting: str = "payload"
 
     def k_for(self, d: int) -> int:
         return max(1, min(triu_size(d), int(self.k_multiplier * d)))
@@ -113,6 +120,22 @@ class RoundMetrics(NamedTuple):
     sent_bits: jax.Array  # total wire bits uplinked this round (Section 7 encodings)
 
 
+def make_bits_fn(comp: Compressor, d: int, accounting: str) -> Callable:
+    """Per-message wire-bit model selected by FedNLConfig.accounting.
+
+    Both options are *exact* models of the repro.comm wire format (asserted
+    against measured bytes in tests/test_comm.py), jit-compatible because the
+    encodings have closed-form sizes in sent_elems.
+    """
+    if accounting == "payload":
+        return lambda s_e: message_bits(comp, s_e)
+    if accounting == "wire":
+        from repro.comm.wire import frame_bits
+
+        return lambda s_e: frame_bits(comp, s_e, d)
+    raise ValueError(f"unknown accounting {accounting!r}; use 'payload' | 'wire'")
+
+
 def client_round(
     z_i: jax.Array,
     h_i: jax.Array,
@@ -159,6 +182,7 @@ def make_fednl_round(
     n_clients, _, d = z.shape
     comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
+    bits_fn = make_bits_fn(comp, d, cfg.accounting)
 
     def round_fn(state: FedNLState) -> tuple[FedNLState, RoundMetrics]:
         key, sub = jax.random.split(state.key)
@@ -178,7 +202,7 @@ def make_fednl_round(
         h_global_new = state.h_global + alpha * s
 
         sent_total = jnp.sum(sent_i)
-        bits_total = jnp.sum(jax.vmap(lambda s_e: message_bits(comp, s_e))(sent_i))
+        bits_total = jnp.sum(jax.vmap(bits_fn)(sent_i))
         metrics = RoundMetrics(
             grad_norm=jnp.linalg.norm(grad),
             f=f,

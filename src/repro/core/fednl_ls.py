@@ -28,8 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compressors import get_compressor
-from repro.compressors.core import message_bits
-from repro.core.fednl import FedNLConfig, FedNLState, client_round
+from repro.core.fednl import FedNLConfig, FedNLState, client_round, make_bits_fn
 from repro.linalg import (
     triu_size,
     unpack_triu,
@@ -54,6 +53,7 @@ def make_fednl_ls_round(
     n_clients, _, d = z.shape
     comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
+    bits_fn = make_bits_fn(comp, d, cfg.accounting)
 
     def f_global(x: jax.Array) -> jax.Array:
         return jnp.mean(jax.vmap(lambda zi: logreg_f(zi, x, cfg.lam))(z))
@@ -78,12 +78,21 @@ def make_fednl_ls_round(
         else:
             direction = -newton_solve_optionB(h, grad, l)
         slope = grad @ direction  # < 0 for a descent direction
+        grad_norm = jnp.linalg.norm(grad)
+        # At the FP64 gradient plateau (||grad|| ~ 1e-13) the Armijo
+        # sufficient-decrease test compares f-values below rounding noise and
+        # backtracks 3-4 futile (and communicated!) trials per round; the
+        # Newton unit step is provably acceptable there, so take it directly.
+        at_plateau = grad_norm <= cfg.ls_tol
 
         def cond(carry):
             step, t = carry
             trial = f_global(state.x + t * direction)
             return jnp.logical_and(
-                trial > f0 + cfg.ls_c * t * slope, step < cfg.ls_max_steps
+                jnp.logical_and(
+                    trial > f0 + cfg.ls_c * t * slope, step < cfg.ls_max_steps
+                ),
+                jnp.logical_not(at_plateau),
             )
 
         def body(carry):
@@ -97,14 +106,12 @@ def make_fednl_ls_round(
         h_global_new = state.h_global + alpha * s
 
         metrics = LSRoundMetrics(
-            grad_norm=jnp.linalg.norm(grad),
+            grad_norm=grad_norm,
             f=f0,
             l=l,
             ls_steps=steps,
             sent_elems=jnp.sum(sent_i),
-            sent_bits=jnp.sum(
-                jax.vmap(lambda s_e: message_bits(comp, s_e))(sent_i)
-            ),
+            sent_bits=jnp.sum(jax.vmap(bits_fn)(sent_i)),
         )
         new_state = FedNLState(
             x=x_new,

@@ -1,0 +1,14 @@
+"""Version-tolerance shims for the Pallas TPU API.
+
+jax < 0.4.34 exposed ``pltpu.CompilerParams``; it was renamed
+``TPUCompilerParams`` and newer releases are renaming it back — resolve
+whichever the installed jax ships, once, for all kernels.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(
+    pltpu, "TPUCompilerParams", getattr(pltpu, "CompilerParams", None)
+)

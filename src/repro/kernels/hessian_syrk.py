@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import TPUCompilerParams
+
 
 def _syrk_kernel(z_i_ref, z_j_ref, h_ref, o_ref, *, grid_k: int):
     i = pl.program_id(0)
@@ -85,7 +87,7 @@ def hessian_syrk_pallas(
         ],
         out_specs=pl.BlockSpec((block_d, block_d), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((d, d), z.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

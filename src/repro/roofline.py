@@ -131,6 +131,47 @@ def analyze(compiled, *, chips: int, model_flops_global: float) -> Roofline:
 
 
 # ---------------------------------------------------------------------------
+# star-topology comm term (multi-node FedNL over repro.comm, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def star_comm_s(
+    uplink_bits_per_round: float,
+    bcast_bits_per_round: float,
+    n_clients: int,
+    cost=None,
+) -> float:
+    """Seconds of wire time for one FedNL star round.
+
+    The mesh rooflines above model ICI collectives; the TCP star of
+    ``repro.comm`` instead pays hub-and-spoke transfer governed by a
+    bandwidth/latency :class:`repro.comm.cost.CommCostModel`.  Feed this the
+    *measured* per-round bits from a ``StarRunResult`` (or the analytic
+    ``message_bits`` model — they are equal by construction) to rank
+    compressors by comm-bound round time.
+    """
+    if cost is None:
+        from repro.comm.cost import DEFAULT_COST as cost
+    return cost.round_s(uplink_bits_per_round, bcast_bits_per_round, n_clients)
+
+
+def star_roofline(
+    compute_s: float,
+    uplink_bits_per_round: float,
+    bcast_bits_per_round: float,
+    n_clients: int,
+    cost=None,
+) -> dict[str, Any]:
+    """Two-term (compute vs wire) round model for the multi-node star."""
+    comm_s = star_comm_s(uplink_bits_per_round, bcast_bits_per_round, n_clients, cost)
+    return {
+        "compute_s": compute_s,
+        "comm_s": comm_s,
+        "round_s": max(compute_s, comm_s),
+        "dominant": "comm" if comm_s > compute_s else "compute",
+    }
+
+
+# ---------------------------------------------------------------------------
 # MODEL_FLOPS = 6 * N * D  (N = active params, D = tokens)
 # ---------------------------------------------------------------------------
 

@@ -81,13 +81,21 @@ def test_fednl_ls_converges_and_counts_steps(z):
     cfg = FedNLConfig(compressor="topk", lam=LAM, option="A", mu=LAM)
     state = fednl_init(z, cfg)
     round_fn = jax.jit(make_fednl_ls_round(z, cfg))
-    ls_steps = []
+    ls_steps, gns = [], []
     for _ in range(40):
         state, m = round_fn(state)
         ls_steps.append(int(m.ls_steps))
+        gns.append(float(m.grad_norm))
     assert float(m.grad_norm) < 1e-12
-    # paper: "the line search procedure requires almost always a 1 step"
-    assert np.mean(np.asarray(ls_steps) <= 1) > 0.8
+    steps = np.asarray(ls_steps)
+    gns = np.asarray(gns)
+    # paper: "the line search procedure requires almost always a 1 step" —
+    # assessed on the rounds where the search is active, i.e. above the FP64
+    # gradient plateau; at/below cfg.ls_tol the unit step is taken directly.
+    active = gns > cfg.ls_tol
+    assert active.sum() >= 4
+    assert np.mean(steps[active] <= 1) > 0.8
+    assert np.all(steps[~active] == 0)
 
 
 def test_fednl_pp_converges(z):
