@@ -7,6 +7,9 @@ Table 2 (FedNL-LS vs solvers): init/solve split on W8A/A9A/PHISHING-shaped
 Table 3 (multi-node): sharded round wall time + uplink bytes, dense_psum vs
   sparse_allgather aggregation.
 Table 4 (Appendix B progression): ablation of our optimization steps.
+Table 6 (FedNL-PP participation sweep): per-round uplink payload bits and
+  wall time of the partial-participation star protocol across
+  tau in {0.1n, 0.5n, n}, vs full-participation FedNL over the same wire.
 
 Every function returns rows: (name, us_per_call, derived).
 """
@@ -215,5 +218,45 @@ def table5_wire_formats():
     return rows
 
 
+def table6_pp_participation():
+    """FedNL-PP over the loopback star transport: payload bits and wall time
+    scale with tau (only the sampled clients compute or transmit), compared
+    against full-participation FedNL on the identical problem/wire."""
+    from repro.comm.cost import DEFAULT_COST
+    from repro.comm.star import run_loopback
+    from repro.comm.star_pp import run_pp_loopback
+
+    rows = []
+    z = _problem("phishing", seed=5)
+    n, _, d = z.shape
+    bcast_bits = d * 64
+    cfg = FedNLConfig(compressor="topk", lam=1e-3)
+    pp_rounds = 6
+
+    full = run_loopback(z, cfg, rounds=pp_rounds)
+    rows.append((
+        "table6/fednl_full_per_round",
+        full.wall_time_s / full.rounds * 1e6,
+        f"uplink_bits={int(full.measured_payload_bits[-1])};"
+        f"cost_model_round="
+        f"{DEFAULT_COST.round_s(float(full.measured_payload_bits[-1]), bcast_bits, n) * 1e3:.2f}ms",
+    ))
+    for frac in [0.1, 0.5, 1.0]:
+        tau = max(1, int(frac * n))
+        res = run_pp_loopback(z, cfg, tau=tau, rounds=pp_rounds)
+        per_round = res.wall_time_s / res.rounds
+        uplink_bits = float(res.measured_payload_bits[-1])
+        wire_s = DEFAULT_COST.round_s(uplink_bits, tau * bcast_bits, tau)
+        match = bool((res.measured_payload_bits == res.sent_bits).all())
+        rows.append((
+            f"table6/fednl_pp_tau{tau}_per_round",
+            per_round * 1e6,
+            f"uplink_bits={int(uplink_bits)};"
+            f"measured_eq_analytic={match};"
+            f"cost_model_round={wire_s * 1e3:.2f}ms",
+        ))
+    return rows
+
+
 ALL_TABLES = [table1_singlenode, table2_ls_vs_solvers, table3_multinode,
-              table4_progression, table5_wire_formats]
+              table4_progression, table5_wire_formats, table6_pp_participation]

@@ -1,0 +1,57 @@
+"""Regenerate tests/golden/fednl_traces.json — pinned first-10-round
+trajectories for the golden-trace regression tests.
+
+    PYTHONPATH=src python scripts/gen_golden_traces.py
+
+Floats are stored as C99 hex literals (float.hex()): the pins are BIT-exact,
+so any refactor of the round body, compressors, or codecs that changes a
+single ulp of the trajectory fails tests/test_golden_traces.py immediately.
+Only regenerate after deliberately changing numerical behaviour, and say so
+in the commit message.
+"""
+
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from repro.core import FedNLConfig, run_fednl
+from repro.data import add_intercept, make_synthetic_logreg, partition_clients
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "tests" / "golden" / "fednl_traces.json"
+
+ROUNDS = 10
+COMPRESSORS = ["topk", "randseqk", "toplek"]
+
+
+def problem():
+    x, y = make_synthetic_logreg("tiny", seed=1)
+    return jnp.asarray(partition_clients(add_intercept(x), y, 8, 40, seed=1))
+
+
+def main():
+    z = problem()
+    traces = {}
+    for comp in COMPRESSORS:
+        cfg = FedNLConfig(compressor=comp, lam=1e-3)
+        res = run_fednl(z, cfg, rounds=ROUNDS, seed=0)
+        traces[comp] = {
+            "grad_norms_hex": [float(g).hex() for g in res.grad_norms],
+            "sent_bits": [int(b) for b in res.sent_bits],
+        }
+    payload = {
+        "problem": "synthetic tiny seed=1, partition(8, 40) seed=1, "
+                   "FedNLConfig(lam=1e-3) seed=0",
+        "rounds": ROUNDS,
+        "traces": traces,
+    }
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

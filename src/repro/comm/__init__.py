@@ -2,16 +2,19 @@
 
 Layering (DESIGN.md §§3-6):
 
-    wire.py       Section-7 byte codecs, exact-bit parity with message_bits
-    protocol.py   frame header + uplink payload layout
-    transport.py  Connection interface: in-process loopback and TCP sockets
-    star.py       master event loop + client workers (run_loopback here;
-                  multi-process TCP entry point in repro.launch.multiproc)
+    wire.py       Section-7 byte codecs, exact-bit parity with message_bits;
+                  PP payload bit models (pp_message_bits / pp_frame_bits)
+    protocol.py   frame header + uplink payload layouts (full + PP)
+    transport.py  Connection interface: in-process loopback and TCP sockets;
+                  FaultSpec dropout/straggler injection
+    star.py       full-participation master loop + client workers
+    star_pp.py    partial-participation (FedNL-PP) StarPPMaster/StarPPClient
+                  (run_pp_loopback here; TCP entry in repro.launch.multiproc)
     cost.py       bandwidth/latency cost model for the star exchange
 
-``star`` and ``transport`` are imported lazily as submodules (``from
-repro.comm.star import run_loopback``) — keeping this package importable from
-``repro.core`` without a cycle.
+``star``/``star_pp`` and ``transport`` are imported lazily as submodules
+(``from repro.comm.star import run_loopback``) — keeping this package
+importable from ``repro.core`` without a cycle.
 """
 
 from repro.comm.cost import CommCostModel, DEFAULT_COST
@@ -22,6 +25,8 @@ from repro.comm.wire import (
     frame_bits,
     make_codec,
     payload_bits,
+    pp_frame_bits,
+    pp_message_bits,
 )
 
 __all__ = [
@@ -33,4 +38,6 @@ __all__ = [
     "frame_bits",
     "make_codec",
     "payload_bits",
+    "pp_frame_bits",
+    "pp_message_bits",
 ]

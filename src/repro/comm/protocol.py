@@ -20,10 +20,28 @@ Frame kinds:
     HELLO     client -> master on connect; identifies `client id`.  No payload.
     INIT      master -> clients: x0 (d FP64).  Clients reply INIT_ACK.
     INIT_ACK  client -> master: packed initial Hessian H_i^0 (T FP64).
+              FedNL-PP extends the payload to H_i^0 || l_i^0 || g_i^0 (the
+              server invariants are means of all three; see pack_pp_state).
     ROUND     master -> clients: current iterate x (d FP64).
     UPLINK    client -> master: grad (d FP64) || l (FP64) || f_i (FP64) ||
               encoded Hessian payload (wire.py codecs).
     STOP      master -> clients: end of run.  No payload.
+
+Partial-participation frames (FedNL-PP, Algorithm 3; DESIGN.md §5a):
+
+    SELECT    master -> one *sampled* client: u32 slot || u32 tau || x
+              (d FP64).  `slot` is the client's position in this round's
+              sample — it indexes the round's split(k_comp, tau) key fan-out,
+              so compression randomness stays seed-aligned with the
+              single-node simulation without key bytes on the wire.
+    PP_UPDATE client -> master: encode(S_i) || dl_i (FP64) || dg_i (d FP64)
+              — the Algorithm-3 uplink triple.  The Hessian section reuses
+              the Section-7 codecs; the exact bit count of the whole payload
+              is wire.pp_message_bits.
+    DROP      client -> master: fault-injected dropout NACK for one SELECT.
+              A real deployment detects failures by timeout; the explicit
+              NACK keeps the loopback schedule synchronous while exercising
+              the master's replaceable-client fallback paths.
 """
 
 from __future__ import annotations
@@ -52,6 +70,10 @@ class MsgType(enum.IntEnum):
     ROUND = 4
     UPLINK = 5
     STOP = 6
+    # partial participation (FedNL-PP)
+    SELECT = 7
+    PP_UPDATE = 8
+    DROP = 9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,3 +172,48 @@ def unpack_uplink(payload: bytes, d: int):
     grad = unpack_vector(payload[: 8 * d])
     l, f = struct.unpack("<dd", payload[8 * d : 8 * d + 16])
     return grad, jnp.float64(l), jnp.float64(f), payload[8 * d + 16 :]
+
+
+# ---------------------------------------------------------------------------
+# partial-participation payloads (FedNL-PP)
+# ---------------------------------------------------------------------------
+
+def pack_select(slot: int, tau: int, x) -> bytes:
+    """SELECT: the client's slot in this round's sample, tau, the iterate."""
+    return struct.pack("<II", slot, tau) + pack_vector(x)
+
+
+def unpack_select(payload: bytes) -> tuple[int, int, "jax.Array"]:
+    slot, tau = struct.unpack("<II", payload[:8])
+    return slot, tau, unpack_vector(payload[8:])
+
+
+def pack_pp_state(h, l, g) -> bytes:
+    """PP INIT_ACK: H_i^0 (T FP64) || l_i^0 (FP64) || g_i^0 (d FP64)."""
+    return pack_vector(h) + struct.pack("<d", float(l)) + pack_vector(g)
+
+
+def unpack_pp_state(payload: bytes, d: int):
+    """Inverse of pack_pp_state -> (h, l, g)."""
+    import jax.numpy as jnp
+
+    t_bytes = len(payload) - 8 - 8 * d
+    h = unpack_vector(payload[:t_bytes])
+    (l,) = struct.unpack("<d", payload[t_bytes : t_bytes + 8])
+    g = unpack_vector(payload[t_bytes + 8 :])
+    return h, jnp.float64(l), g
+
+
+def pack_pp_update(enc: EncodedMessage, dl, dg) -> bytes:
+    """Algorithm-3 uplink triple: encode(S_i) || dl_i || dg_i (d FP64)."""
+    return enc.data + struct.pack("<d", float(dl)) + pack_vector(dg)
+
+
+def unpack_pp_update(payload: bytes, d: int):
+    """Inverse of pack_pp_update -> (hessian_payload_bytes, dl, dg)."""
+    import jax.numpy as jnp
+
+    tail = 8 * (d + 1)
+    (dl,) = struct.unpack("<d", payload[-tail : -tail + 8])
+    dg = unpack_vector(payload[len(payload) - 8 * d :])
+    return payload[:-tail], jnp.float64(dl), dg

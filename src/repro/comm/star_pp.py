@@ -1,0 +1,481 @@
+"""Star-topology FedNL-PP: partial participation over the wire (DESIGN.md §5a).
+
+Algorithm 3 of FedNL as a real master/client protocol: the server stores only
+the invariants ``H^k (packed), l^k, g^k`` and recovers the model as
+``x^{k+1} = (H^k + l^k I)^{-1} g^k``; each round it samples tau clients
+u.a.r., sends each a ``SELECT`` frame (slot in the sample, tau, the iterate),
+and the sampled clients — *only* them; nobody else receives or computes
+anything — uplink the Algorithm-3 triple ``encode(S_i) || dl_i || dg_i``
+through the Section-7 codecs (``PP_UPDATE``).  The master maintains
+
+    H += (alpha/n) * sum_i S_i,   l += sum_i dl_i / n,   g += sum_i dg_i / n
+
+which keeps ``l^k = mean_i l_i^k`` and ``g^k = mean_i g_i^k`` exact because
+non-participants contribute zero delta.
+
+Seed alignment (the property tested against ``make_fednl_pp_round``): the
+single-node simulation draws ``key, k_sel, k_comp = split(state.key, 3)``
+per round, samples with ``k_sel`` and fans compression keys out as
+``split(k_comp, tau)[slot]``.  The master owns that exact chain; each client
+replays the ``key -> split(key, 3)[0]`` spine lazily up to the round index in
+the SELECT header and derives ``split(k_comp, tau)[slot]`` from the slot the
+master assigned — no key material travels, and a fault-free tau = n run
+reproduces the simulation trajectory bit-for-bit (tests/test_comm_pp.py).
+
+Fault model (FedML-style, arXiv:2007.13518): a ``transport.FaultSpec`` makes
+clients drop a SELECT (explicit ``DROP`` NACK — the synchronous stand-in for
+a detection timeout) or stall before replying.  Two master fallbacks, both
+per Algorithm 3's replaceable-client semantics:
+
+    on_dropout="partial"   proceed with the survivors' partial sum (the /n
+                           normalization never changes, so the invariants
+                           stay exact means);
+    on_dropout="resample"  draw replacement clients from the not-yet-selected
+                           pool; a replacement inherits the dropped client's
+                           slot, hence its compression key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import protocol, wire
+from repro.comm.protocol import Frame, MsgType, recv_frame, send_frame
+from repro.comm.transport import (
+    Connection,
+    FaultInjector,
+    FaultSpec,
+    loopback_pair,
+)
+from repro.compressors import get_compressor
+from repro.core.fednl import FedNLConfig, _client_oracles
+from repro.linalg import (
+    cholesky_solve,
+    frob_norm_from_packed,
+    triu_size,
+    unpack_triu,
+)
+
+
+@dataclasses.dataclass
+class StarPPRunResult:
+    """Per-round trajectory + measured wire accounting of a PP star run."""
+
+    x: np.ndarray  # final model (from the post-run invariants)
+    x_hist: np.ndarray  # (rounds, d): the model produced each round
+    l_hist: np.ndarray  # (rounds,): server l^k before each update
+    rounds: int
+    participants: list[list[int]]  # client ids that contributed, per round
+    dropped: list[list[int]]  # client ids that dropped, per round
+    sent_bits: np.ndarray  # per-round analytic pp_message_bits total
+    measured_payload_bits: np.ndarray  # per-round bits counted on the wire
+    measured_frame_bytes: np.ndarray  # per-round framed PP_UPDATE bytes
+    wall_time_s: float
+
+
+class StarPPClient:
+    """One PP client worker: owns a shard and its local (H_i, l_i, g_i).
+
+    State changes *only* on SELECT — an unselected client's round costs it
+    nothing, matching a real cross-device deployment.
+    """
+
+    def __init__(
+        self,
+        client_id: int,
+        n_clients: int,
+        z_i: jax.Array,
+        cfg: FedNLConfig,
+        conn: Connection,
+        seed: int = 0,
+        fault: FaultSpec | None = None,
+    ):
+        self.client_id = client_id
+        self.n_clients = n_clients
+        self.z_i = jnp.asarray(z_i)
+        self.cfg = cfg
+        self.conn = conn
+        self.d = int(self.z_i.shape[-1])
+        self.t = triu_size(self.d)
+        self.comp = get_compressor(cfg.compressor, self.t, cfg.k_for(self.d))
+        self.codec = wire.make_codec(self.comp, self.t)
+        self.alpha = self.comp.alpha if cfg.alpha is None else cfg.alpha
+        self.eye = jnp.eye(self.d, dtype=self.z_i.dtype)
+        self.fault = FaultInjector(fault, client_id) if fault and fault.active else None
+        # lazy replay of the master's per-round PRNG spine
+        self._key = jax.random.PRNGKey(seed)
+        self._round = 0
+        self.h = jnp.zeros(self.t, dtype=self.z_i.dtype)
+        self.l = jnp.float64(0.0)
+        self.g = jnp.zeros(self.d, dtype=self.z_i.dtype)
+        # Bit-exactness vs make_fednl_pp_round requires matching the
+        # simulation's execution regime op-for-op, not just its math
+        # (tests/test_comm_pp.py asserts the trajectory equal to the last
+        # bit).  Three rules, each worth 1 ulp if broken:
+        #   * the ROUND body runs as a jitted vmap-of-1 — XLA's batched
+        #     kernels accumulate differently from single-sample forms but
+        #     are invariant to batch size, so vmap-of-1 rows == the
+        #     simulation's vmap-of-tau rows;
+        #   * the INIT body runs as plain eager single-client ops —
+        #     fednl_pp_init's vmap is eager (op-by-op), and an eager batched
+        #     matmul executes each row exactly like the unbatched call;
+        #   * z rides as a jit ARGUMENT, not a closure — a closed-over batch
+        #     is a foldable constant XLA lays out differently, while the
+        #     simulation's closed-over z reaches clients through a traced
+        #     gather and so stays runtime data.
+        self._z_b = self.z_i[None]
+        d, alpha, eye = self.d, self.alpha, self.eye
+
+        def oracle_one(zi, x):
+            return _client_oracles(zi, x, cfg.lam, cfg.use_kernel)
+
+        self._oracles_b = jax.jit(
+            lambda z_b, x: jax.vmap(lambda zi: oracle_one(zi, x))(z_b)
+        )
+
+        def init_one(zi, x):
+            # fednl_pp_init.init_client, verbatim
+            _, grad_i, hess_packed = oracle_one(zi, x)
+            if cfg.hess0 == "exact":
+                h_i = hess_packed
+            elif cfg.hess0 == "zero":
+                h_i = jnp.zeros_like(hess_packed)
+            else:
+                raise ValueError(f"unknown hess0 {cfg.hess0!r}")
+            l_i = frob_norm_from_packed(h_i - hess_packed, d)
+            g_i = (unpack_triu(h_i, d) + l_i * eye) @ x - grad_i
+            return h_i, l_i, g_i
+
+        # fednl_pp_init applies its vmap EAGERLY (op-by-op dispatch); an
+        # eager batched matmul executes each batch row exactly like the
+        # unbatched call, so plain single-client eager ops reproduce the
+        # simulation's init rows bitwise (a jitted or vmap-of-1 form does
+        # not: XLA fuses/squeezes those differently and drifts by 1 ulp).
+        self._init_b = lambda x: init_one(self.z_i, x)
+
+        def tail_one(h_i, s_i, d_i, grad_i, x):
+            # make_fednl_pp_round.participate lines after compression
+            h_new = h_i + alpha * s_i
+            l_new = frob_norm_from_packed(h_new - d_i, d)
+            g_new = (unpack_triu(h_new, d) + l_new * eye) @ x - grad_i
+            return h_new, l_new, g_new
+
+        self._tail_b = jax.jit(
+            lambda h_b, s_b, d_b, g_b, x: jax.vmap(
+                lambda h_i, s_i, d_i, grad_i: tail_one(h_i, s_i, d_i, grad_i, x)
+            )(h_b, s_b, d_b, g_b)
+        )
+
+    def _comp_key(self, rnd: int, slot: int, tau: int) -> jax.Array:
+        """split(k_comp^rnd, tau)[slot] — identical to the simulation's
+        per-round fan-out, reached by replaying the key spine to `rnd`."""
+        while self._round < rnd:
+            self._key = jax.random.split(self._key, 3)[0]
+            self._round += 1
+        _, _, k_comp = jax.random.split(self._key, 3)
+        return jax.random.split(k_comp, tau)[slot]
+
+    def _handle_init(self, frame: Frame) -> None:
+        """fednl_pp_init's client body: H_i^0 per hess0 policy, l_i^0, g_i^0."""
+        x0 = protocol.unpack_vector(frame.payload)
+        self.h, self.l, self.g = self._init_b(x0)
+        send_frame(
+            self.conn,
+            Frame(
+                type=MsgType.INIT_ACK,
+                client=self.client_id,
+                payload=protocol.pack_pp_state(self.h, self.l, self.g),
+            ),
+        )
+
+    def _handle_select(self, frame: Frame) -> None:
+        """Algorithm 3 lines 9-13 for one sampled client, or a fault."""
+        if self.fault is not None:
+            if self.fault.should_drop():
+                send_frame(
+                    self.conn,
+                    Frame(
+                        type=MsgType.DROP,
+                        round=frame.round,
+                        client=self.client_id,
+                    ),
+                )
+                return
+            self.fault.maybe_stall()
+        slot, tau, x = protocol.unpack_select(frame.payload)
+        key_i = self._comp_key(frame.round, slot, tau)
+        _, grad_b, d_b = self._oracles_b(self._z_b, x)
+        enc = self.codec.encode(key_i, d_b[0] - self.h)
+        # decode our own message so local H_i uses exactly the dense
+        # correction the master reconstructs (state stays in sync)
+        s_i = self.codec.decode(enc.data, enc.sent_elems)
+        h_b, l_b, g_b = self._tail_b(
+            self.h[None], s_i[None], d_b, grad_b, x
+        )
+        h_new, l_new, g_new = h_b[0], l_b[0], g_b[0]
+        dl = l_new - self.l
+        dg = g_new - self.g
+        self.h, self.l, self.g = h_new, l_new, g_new
+        send_frame(
+            self.conn,
+            Frame(
+                type=MsgType.PP_UPDATE,
+                round=frame.round,
+                client=self.client_id,
+                comp_id=self.codec.comp_id,
+                sent_elems=enc.sent_elems,
+                payload_bits=enc.bits + (self.d + 1) * wire.FP_BITS,
+                payload=protocol.pack_pp_update(enc, dl, dg),
+            ),
+        )
+
+    def serve_once(self) -> bool:
+        """Process one master frame; returns False on STOP."""
+        frame = recv_frame(self.conn)
+        if frame.type == MsgType.STOP:
+            return False
+        if frame.type == MsgType.INIT:
+            self._handle_init(frame)
+        elif frame.type == MsgType.SELECT:
+            self._handle_select(frame)
+        else:
+            raise ValueError(f"PP client got unexpected frame {frame.type}")
+        return True
+
+    def run(self) -> None:
+        """Blocking serve loop (TCP client processes)."""
+        try:
+            while self.serve_once():
+                pass
+        finally:
+            self.conn.close()
+
+
+class StarPPMaster:
+    """The PP hub: owns the invariants, samples, collects, aggregates."""
+
+    def __init__(
+        self,
+        conns: dict[int, Connection],
+        d: int,
+        cfg: FedNLConfig,
+        tau: int,
+        seed: int = 0,
+        x0: jax.Array | None = None,
+        on_dropout: str = "partial",
+        drive=None,
+    ):
+        if on_dropout not in ("partial", "resample"):
+            raise ValueError(f"unknown on_dropout {on_dropout!r}")
+        if not 0 < tau <= len(conns):
+            raise ValueError(f"need 0 < tau <= n, got tau={tau}, n={len(conns)}")
+        self.conns = conns
+        self.order = sorted(conns)
+        self.n_clients = len(conns)
+        self.d = d
+        self.t = triu_size(d)
+        self.cfg = cfg
+        self.tau = tau
+        self.on_dropout = on_dropout
+        self.drive = drive
+        self.comp = get_compressor(cfg.compressor, self.t, cfg.k_for(d))
+        self.codec = wire.make_codec(self.comp, self.t)
+        self.alpha = self.comp.alpha if cfg.alpha is None else cfg.alpha
+        self.eye = jnp.eye(d, dtype=jnp.float64)
+        self.key = jax.random.PRNGKey(seed)
+        self.x0 = jnp.zeros(d, dtype=jnp.float64) if x0 is None else jnp.asarray(x0)
+        self.h_global = None
+        self.l_global = None
+        self.g_global = None
+
+    def _drive(self) -> None:
+        if self.drive is not None:
+            self.drive()
+
+    def _init_handshake(self) -> None:
+        """INIT broadcast; every client reports (H_i^0, l_i^0, g_i^0)."""
+        for cid in self.order:
+            send_frame(
+                self.conns[cid],
+                Frame(type=MsgType.INIT, payload=protocol.pack_vector(self.x0)),
+            )
+        self._drive()
+        h_list, l_list, g_list = [], [], []
+        for cid in self.order:
+            frame = recv_frame(self.conns[cid])
+            if frame.type != MsgType.INIT_ACK or frame.client != cid:
+                raise ValueError(
+                    f"master expected INIT_ACK from {cid}, got "
+                    f"{frame.type} from {frame.client}"
+                )
+            h_i, l_i, g_i = protocol.unpack_pp_state(frame.payload, self.d)
+            h_list.append(h_i)
+            l_list.append(l_i)
+            g_list.append(g_i)
+        # identical jnp aggregation ops to fednl_pp_init
+        self.h_global = jnp.mean(jnp.stack(h_list), axis=0)
+        self.l_global = jnp.mean(jnp.stack(l_list))
+        self.g_global = jnp.mean(jnp.stack(g_list), axis=0)
+
+    def _solve_x(self) -> jax.Array:
+        """x = (H + l I)^{-1} g — Algorithm 3 line 4, same ops as the sim."""
+        h = unpack_triu(self.h_global, self.d)
+        return cholesky_solve(h + self.l_global * self.eye, self.g_global)
+
+    def _select(self, cid: int, rnd: int, slot: int, x: jax.Array) -> None:
+        send_frame(
+            self.conns[cid],
+            Frame(
+                type=MsgType.SELECT,
+                round=rnd,
+                client=cid,
+                payload=protocol.pack_select(slot, self.tau, x),
+            ),
+        )
+
+    def run(self, rounds: int) -> StarPPRunResult:
+        self._init_handshake()
+        n = self.n_clients
+        x_hist, l_hist = [], []
+        parts_hist, drops_hist = [], []
+        bits_analytic, bits_measured, frame_bytes = [], [], []
+        t_start = time.perf_counter()
+        for r in range(rounds):
+            x = self._solve_x()
+            l_pre = float(jnp.asarray(self.l_global))
+            key, k_sel, _k_comp = jax.random.split(self.key, 3)
+            self.key = key
+            idx = [
+                int(i)
+                for i in np.asarray(
+                    jax.random.choice(
+                        k_sel, n, shape=(self.tau,), replace=False
+                    )
+                )
+            ]
+            for slot, cid in enumerate(idx):
+                self._select(cid, r, slot, x)
+            self._drive()
+
+            pool = [c for c in self.order if c not in set(idx)]
+            attempt = 0
+            s_list, dl_list, dg_list = [], [], []
+            participants, dropped = [], []
+            round_abits = round_mbits = round_fbytes = 0
+            for slot, cid in enumerate(idx):
+                cur = cid
+                while True:
+                    fr = recv_frame(self.conns[cur])
+                    if fr.type == MsgType.PP_UPDATE:
+                        hess_bytes, dl, dg = protocol.unpack_pp_update(
+                            fr.payload, self.d
+                        )
+                        s_list.append(self.codec.decode(hess_bytes, fr.sent_elems))
+                        dl_list.append(dl)
+                        dg_list.append(dg)
+                        participants.append(cur)
+                        round_abits += int(
+                            wire.pp_message_bits(self.comp, fr.sent_elems, self.d)
+                        )
+                        round_mbits += fr.payload_bits
+                        round_fbytes += fr.wire_bytes
+                        break
+                    if fr.type != MsgType.DROP:
+                        raise ValueError(
+                            f"master expected PP_UPDATE/DROP, got {fr.type}"
+                        )
+                    dropped.append(cur)
+                    if self.on_dropout == "resample" and pool:
+                        # replacement inherits the slot (and its comp key)
+                        rk = jax.random.fold_in(k_sel, 1 + attempt)
+                        attempt += 1
+                        j = int(jax.random.randint(rk, (), 0, len(pool)))
+                        cur = pool.pop(j)
+                        self._select(cur, r, slot, x)
+                        self._drive()
+                        continue
+                    break  # partial: this slot contributes nothing
+
+            # Algorithm 3 lines 18-20 — identical jnp ops to the simulation;
+            # the /n normalization is fault-independent (zero-delta absentees)
+            if s_list:
+                self.h_global = self.h_global + (self.alpha / n) * jnp.sum(
+                    jnp.stack(s_list), axis=0
+                )
+                self.l_global = self.l_global + jnp.sum(jnp.stack(dl_list)) / n
+                self.g_global = self.g_global + jnp.sum(
+                    jnp.stack(dg_list), axis=0
+                ) / n
+
+            x_hist.append(np.asarray(x))
+            l_hist.append(l_pre)
+            parts_hist.append(participants)
+            drops_hist.append(dropped)
+            bits_analytic.append(round_abits)
+            bits_measured.append(round_mbits)
+            frame_bytes.append(round_fbytes)
+
+        for cid in self.order:
+            send_frame(self.conns[cid], Frame(type=MsgType.STOP))
+        self._drive()
+        wall = time.perf_counter() - t_start
+        return StarPPRunResult(
+            x=np.asarray(self._solve_x()),
+            x_hist=np.asarray(x_hist),
+            l_hist=np.asarray(l_hist),
+            rounds=rounds,
+            participants=parts_hist,
+            dropped=drops_hist,
+            sent_bits=np.asarray(bits_analytic, dtype=np.int64),
+            measured_payload_bits=np.asarray(bits_measured, dtype=np.int64),
+            measured_frame_bytes=np.asarray(frame_bytes, dtype=np.int64),
+            wall_time_s=wall,
+        )
+
+
+def run_pp_loopback(
+    z: jax.Array,
+    cfg: FedNLConfig,
+    tau: int,
+    rounds: int = 100,
+    seed: int = 0,
+    on_dropout: str = "partial",
+    fault: FaultSpec | None = None,
+) -> StarPPRunResult:
+    """Full FedNL-PP protocol run over in-process loopback transport.
+
+    Every message crosses encode -> frame -> decode; only sockets are
+    replaced by synchronous buffers.  Clients are driven on demand (only
+    SELECTed clients have pending frames in a PP round).
+    """
+    n_clients, _, d = z.shape
+    master_conns: dict[int, Connection] = {}
+    clients: list[StarPPClient] = []
+    for i in range(n_clients):
+        a, b = loopback_pair()
+        master_conns[i] = a
+        clients.append(
+            StarPPClient(i, n_clients, z[i], cfg, b, seed=seed, fault=fault)
+        )
+
+    def drive() -> None:
+        for i, c in enumerate(clients):
+            while c.conn.pending():
+                if not c.serve_once():
+                    break
+
+    master = StarPPMaster(
+        master_conns,
+        d,
+        cfg,
+        tau,
+        seed=seed,
+        on_dropout=on_dropout,
+        drive=drive,
+    )
+    return master.run(rounds)

@@ -18,8 +18,11 @@ request/response exchanges of small frames — exactly the Nagle pathology.
 
 from __future__ import annotations
 
+import dataclasses
 import socket
 import time
+
+import numpy as np
 
 from repro.comm import protocol
 
@@ -35,6 +38,49 @@ class Connection:
 
     def close(self) -> None:  # pragma: no cover - trivial
         pass
+
+
+# ---------------------------------------------------------------------------
+# fault injection (FedNL-PP dropout / straggler model)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Per-client fault model for partial-participation runs.
+
+    ``drop_prob``: probability a SELECTed client drops the round (it NACKs
+    with a DROP frame — the synchronous stand-in for a detection timeout).
+    ``straggler_prob`` / ``straggler_delay_s``: probability and duration of a
+    pre-reply stall (visible as wall-clock over TCP).  Draws come from a
+    client-scoped deterministic PRG so multi-process runs are reproducible.
+    """
+
+    drop_prob: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_delay_s: float = 0.0
+    seed: int = 0
+
+    @property
+    def active(self) -> bool:
+        return self.drop_prob > 0.0 or self.straggler_prob > 0.0
+
+
+class FaultInjector:
+    """Deterministic per-client fault source (one per StarPPClient)."""
+
+    def __init__(self, spec: FaultSpec, client_id: int):
+        self.spec = spec
+        self._rng = np.random.default_rng((spec.seed, client_id))
+
+    def should_drop(self) -> bool:
+        return bool(self._rng.random() < self.spec.drop_prob)
+
+    def maybe_stall(self) -> float:
+        """Sleep the configured straggler delay; returns seconds stalled."""
+        if self._rng.random() < self.spec.straggler_prob:
+            time.sleep(self.spec.straggler_delay_s)
+            return self.spec.straggler_delay_s
+        return 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +107,12 @@ class LoopbackConnection(Connection):
         out = bytes(self._buf[:n])
         del self._buf[:n]
         return out
+
+    def pending(self) -> int:
+        """Buffered bytes awaiting recv (PP drive loops poll this: only
+        SELECTed clients have frames to serve in a partial-participation
+        round, so driving everyone unconditionally would underrun)."""
+        return len(self._buf)
 
 
 def loopback_pair() -> tuple[LoopbackConnection, LoopbackConnection]:

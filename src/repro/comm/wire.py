@@ -307,3 +307,23 @@ def frame_bits(comp: Compressor, sent_elems, d: int):
     pb = sent_elems * int(comp.bits_per_elem) + int(comp.header_bits)
     payload_bytes = (pb + 7) // 8
     return 8 * (payload_bytes + HEADER_SIZE + (d + 2) * 8)
+
+
+def pp_message_bits(comp: Compressor, sent_elems, d: int):
+    """Exact payload bits of one FedNL-PP uplink triple
+    ``encode(S_i) || dl_i || dg_i``: the Section-7 Hessian bits plus the
+    (d + 1) FP64 delta section.  Jit-compatible; single source of truth for
+    both the simulation's sent_bits accounting
+    (:func:`repro.core.fednl_pp.make_pp_bits_fn`) and the measured
+    ``PP_UPDATE`` payloads (asserted equal in tests/test_comm_pp.py)."""
+    return message_bits(comp, sent_elems) + (d + 1) * FP_BITS
+
+
+def pp_frame_bits(comp: Compressor, sent_elems, d: int):
+    """Wire bits of one full framed PP_UPDATE (header + byte-padded Hessian
+    payload + dl/dg section) — the ``accounting='wire'`` model for FedNL-PP."""
+    from repro.comm.protocol import HEADER_SIZE
+
+    pb = sent_elems * int(comp.bits_per_elem) + int(comp.header_bits)
+    payload_bytes = (pb + 7) // 8
+    return 8 * (payload_bytes + HEADER_SIZE + (d + 1) * 8)

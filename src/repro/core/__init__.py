@@ -1,8 +1,19 @@
 # The paper's primary contribution: the FedNL algorithm family in JAX.
 from repro.core.fednl import FedNLConfig, FedNLState, fednl_init, make_fednl_round
 from repro.core.fednl_ls import make_fednl_ls_round
-from repro.core.fednl_pp import FedNLPPState, fednl_pp_init, make_fednl_pp_round
-from repro.core.runner import run_fednl, newton_baseline, gd_baseline, eval_full
+from repro.core.fednl_pp import (
+    FedNLPPState,
+    fednl_pp_init,
+    make_fednl_pp_round,
+    make_pp_bits_fn,
+)
+from repro.core.runner import (
+    run_fednl,
+    run_fednl_pp,
+    newton_baseline,
+    gd_baseline,
+    eval_full,
+)
 
 __all__ = [
     "FedNLConfig",
@@ -13,7 +24,9 @@ __all__ = [
     "FedNLPPState",
     "fednl_pp_init",
     "make_fednl_pp_round",
+    "make_pp_bits_fn",
     "run_fednl",
+    "run_fednl_pp",
     "newton_baseline",
     "gd_baseline",
     "eval_full",

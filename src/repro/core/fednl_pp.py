@@ -29,8 +29,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.compressors import get_compressor
-from repro.compressors.core import message_bits
+from repro.compressors import get_compressor, Compressor
+from repro.compressors.core import FP_BITS, message_bits
 from repro.core.fednl import FedNLConfig, _client_oracles
 from repro.linalg import (
     triu_size,
@@ -90,6 +90,25 @@ def fednl_pp_init(
     )
 
 
+def make_pp_bits_fn(comp: Compressor, d: int, accounting: str) -> Callable:
+    """Per-uplink wire-bit model for the PP triple, selected by
+    FedNLConfig.accounting — the PP analogue of fednl.make_bits_fn.
+
+    "payload": Section-7 Hessian bits + the (d + 1) FP64 dl/dg section
+    (== wire.pp_message_bits, the measured PP_UPDATE payload).  "wire": the
+    full framed PP_UPDATE incl. protocol header (== wire.pp_frame_bits).
+    Both jit-compatible closed forms, asserted against measured bytes in
+    tests/test_comm_pp.py.
+    """
+    if accounting == "payload":
+        return lambda s_e: message_bits(comp, s_e) + (d + 1) * FP_BITS
+    if accounting == "wire":
+        from repro.comm.wire import pp_frame_bits
+
+        return lambda s_e: pp_frame_bits(comp, s_e, d)
+    raise ValueError(f"unknown accounting {accounting!r}; use 'payload' | 'wire'")
+
+
 def make_fednl_pp_round(
     z: jax.Array, cfg: FedNLConfig, tau: int
 ) -> Callable[[FedNLPPState], tuple[FedNLPPState, PPRoundMetrics]]:
@@ -97,6 +116,7 @@ def make_fednl_pp_round(
     t = triu_size(d)
     comp = get_compressor(cfg.compressor, t, cfg.k_for(d))
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
+    bits_fn = make_pp_bits_fn(comp, d, cfg.accounting)
     eye = jnp.eye(d)
 
     def participate(zi, h_i, x, ck):
@@ -146,11 +166,9 @@ def make_fednl_pp_round(
             x=x,
             l=state.l_global,
             sent_elems=jnp.sum(sent_sel),
-            sent_bits=jnp.sum(
-                jax.vmap(lambda s_e: message_bits(comp, s_e))(sent_sel)
-            )
-            # g and l deltas ride along with each message
-            + tau * (d + 1) * 64,
+            # each message is the Algorithm-3 triple S_i || dl_i || dg_i;
+            # bits_fn prices the whole uplink per cfg.accounting
+            sent_bits=jnp.sum(jax.vmap(bits_fn)(sent_sel)),
         )
         return new_state, metrics
 

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.fednl import FedNLConfig, FedNLState, fednl_init, make_fednl_round
 from repro.core.fednl_ls import make_fednl_ls_round
+from repro.core.fednl_pp import fednl_pp_init, make_fednl_pp_round
 from repro.objectives.logreg import logreg_f, logreg_grad, logreg_hess
 
 
@@ -84,6 +85,74 @@ def run_fednl(
         f_vals=np.asarray(f_vals),
         sent_bits=np.asarray(bits),
         rounds=len(grad_norms),
+        wall_time_s=wall,
+        init_time_s=init_time,
+    )
+
+
+@dataclasses.dataclass
+class PPRunResult:
+    """FedNL-PP trajectory.  The server never sees the global gradient
+    (computing it would defeat partial participation), so grad_norm is a
+    single post-run eval_full diagnostic, not a per-round series."""
+
+    x: np.ndarray  # final model solved from the post-run invariants — the
+    # same definition as StarPPRunResult.x, so fault-free star runs compare
+    # bit-equal on this field too (x_hist[-1] is one invariant update behind)
+    x_hist: np.ndarray  # (rounds, d) per-round iterates (metrics.x)
+    l_vals: np.ndarray
+    sent_bits: np.ndarray
+    rounds: int
+    grad_norm: float
+    wall_time_s: float
+    init_time_s: float
+
+
+def run_fednl_pp(
+    z: jax.Array,
+    cfg: FedNLConfig,
+    tau: int,
+    rounds: int = 1000,
+    seed: int = 0,
+    x0: jax.Array | None = None,
+) -> PPRunResult:
+    """Single-node FedNL-PP simulation driver (Algorithm 3), recording the
+    per-round iterate trajectory — the reference the star-topology PP runs
+    (repro.comm.star_pp) are checked against bit-for-bit."""
+    t0 = time.perf_counter()
+    state = fednl_pp_init(z, cfg, x0=x0, seed=seed)
+    round_fn = jax.jit(make_fednl_pp_round(z, cfg, tau))
+    state_c, _ = round_fn(state)
+    jax.block_until_ready(state_c.h_global)
+    init_time = time.perf_counter() - t0
+
+    x_hist, l_vals, bits = [], [], []
+    t1 = time.perf_counter()
+    for _ in range(rounds):
+        state, m = round_fn(state)
+        x_hist.append(np.asarray(m.x))
+        l_vals.append(float(m.l))
+        bits.append(float(m.sent_bits))
+    jax.block_until_ready(state.h_global)
+    wall = time.perf_counter() - t1
+    # the deployable model: Algorithm-3 line 4 on the post-run invariants
+    # (eager, like the star master's — bit-comparable across both paths)
+    from repro.linalg import cholesky_solve, unpack_triu
+
+    d = z.shape[-1]
+    x_final = cholesky_solve(
+        unpack_triu(state.h_global, d)
+        + state.l_global * jnp.eye(d, dtype=jnp.float64),
+        state.g_global,
+    )
+    _, g = eval_full(z, x_final, cfg.lam)
+    return PPRunResult(
+        x=np.asarray(x_final),
+        x_hist=np.asarray(x_hist),
+        l_vals=np.asarray(l_vals),
+        sent_bits=np.asarray(bits),
+        rounds=len(x_hist),
+        grad_norm=float(jnp.linalg.norm(g)),
         wall_time_s=wall,
         init_time_s=init_time,
     )

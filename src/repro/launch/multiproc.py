@@ -1,18 +1,25 @@
-"""Multi-process FedNL over TCP localhost — master + n client workers.
+"""Multi-process FedNL / FedNL-PP over TCP localhost — master + n workers.
 
     PYTHONPATH=src python -m repro.launch.multiproc \
         --dataset tiny --compressor topk --rounds 40 --tol 1e-14 --check
 
+    # partial participation (Algorithm 3), 3-of-8 clients per round,
+    # 20% fault-injected dropout handled by survivor partial sums:
+    PYTHONPATH=src python -m repro.launch.multiproc \
+        --algo fednl-pp --tau 3 --drop-prob 0.2 --rounds 60 --check
+
 The master process binds a localhost socket, spawns one OS process per client
 (``multiprocessing`` spawn context: each child gets a fresh JAX runtime), and
-runs the star event loop of ``repro.comm.star``.  Data distribution follows
-the paper's experiment harness: every worker regenerates the deterministic
-synthetic dataset from the shared seed and keeps only its own shard — no
-training data crosses the wire, exactly the federated premise.
+runs the star event loop of ``repro.comm.star`` (full participation) or
+``repro.comm.star_pp`` (FedNL-PP: only the sampled tau clients receive or do
+any work each round).  Data distribution follows the paper's experiment
+harness: every worker regenerates the deterministic synthetic dataset from
+the shared seed and keeps only its own shard — no training data crosses the
+wire, exactly the federated premise.
 
-``--check`` reruns the same problem through the single-node ``run_fednl``
-simulation and reports the max iterate/trajectory deviation (the star run is
-designed to be bit-identical; see DESIGN.md §5).
+``--check`` reruns the same problem through the single-node simulation
+(``run_fednl`` / ``run_fednl_pp``) and reports the max iterate/trajectory
+deviation (fault-free runs are designed to be bit-identical; DESIGN.md §5/§5a).
 """
 
 from __future__ import annotations
@@ -53,39 +60,57 @@ def _client_entry(
     seed: int,
     host: str,
     port: int,
+    pp: bool = False,
+    fault_dict: dict | None = None,
 ) -> None:
     """Client process: build shard, dial the master, serve rounds."""
     import jax
 
     jax.config.update("jax_enable_x64", True)  # FedNL is FP64 end-to-end
-    from repro.comm.star import StarClient
     from repro.comm.transport import connect_to_master
 
     z = _build_problem(dataset, shape, seed)
     conn = connect_to_master(host, port, client_id)
-    client = StarClient(
-        client_id, n_clients, z[client_id], FedNLConfig(**cfg_dict), conn, seed=seed
-    )
+    if pp:
+        from repro.comm.star_pp import StarPPClient
+        from repro.comm.transport import FaultSpec
+
+        fault = FaultSpec(**fault_dict) if fault_dict else None
+        client = StarPPClient(
+            client_id,
+            n_clients,
+            z[client_id],
+            FedNLConfig(**cfg_dict),
+            conn,
+            seed=seed,
+            fault=fault,
+        )
+    else:
+        from repro.comm.star import StarClient
+
+        client = StarClient(
+            client_id, n_clients, z[client_id], FedNLConfig(**cfg_dict), conn, seed=seed
+        )
     client.run()
 
 
-def run_multiproc(
+def _run_with_clients(
     cfg: FedNLConfig,
-    dataset: str = "tiny",
-    shape: tuple[int, int, int] | None = None,
-    rounds: int = 100,
-    tol: float = 0.0,
-    seed: int = 0,
-    host: str = "127.0.0.1",
+    dataset: str,
+    shape,
+    seed: int,
+    host: str,
+    master_fn,
+    pp: bool = False,
+    fault_dict: dict | None = None,
 ):
-    """Library entry: spawn client processes, run the master loop, join.
+    """Shared scaffold: bind, spawn one process per client, run, join.
 
-    Returns the :class:`repro.comm.star.StarRunResult` of the master.
+    ``master_fn(conns, d) -> result`` is the hub loop (full or PP).
     """
     import jax
 
     jax.config.update("jax_enable_x64", True)
-    from repro.comm.star import run_star_master
     from repro.comm.transport import TCPMaster
 
     z = _build_problem(dataset, shape, seed)
@@ -112,13 +137,15 @@ def run_multiproc(
                     seed,
                     host,
                     master.port,
+                    pp,
+                    fault_dict,
                 ),
                 daemon=True,
             )
             p.start()
             procs.append(p)
         conns = master.accept_clients()
-        result = run_star_master(conns, d, cfg, rounds=rounds, tol=tol)
+        result = master_fn(conns, d)
         for conn in conns.values():
             conn.close()
         for p in procs:
@@ -135,8 +162,111 @@ def run_multiproc(
         master.close()
 
 
+def run_multiproc(
+    cfg: FedNLConfig,
+    dataset: str = "tiny",
+    shape: tuple[int, int, int] | None = None,
+    rounds: int = 100,
+    tol: float = 0.0,
+    seed: int = 0,
+    host: str = "127.0.0.1",
+):
+    """Library entry: spawn client processes, run the master loop, join.
+
+    Returns the :class:`repro.comm.star.StarRunResult` of the master.
+    """
+    from repro.comm.star import run_star_master
+
+    def master_fn(conns, d):
+        return run_star_master(conns, d, cfg, rounds=rounds, tol=tol)
+
+    return _run_with_clients(cfg, dataset, shape, seed, host, master_fn)
+
+
+def run_multiproc_pp(
+    cfg: FedNLConfig,
+    tau: int,
+    dataset: str = "tiny",
+    shape: tuple[int, int, int] | None = None,
+    rounds: int = 100,
+    seed: int = 0,
+    host: str = "127.0.0.1",
+    on_dropout: str = "partial",
+    fault=None,
+):
+    """FedNL-PP over TCP localhost: tau-of-n sampling per round, optional
+    fault injection (``fault``: a :class:`repro.comm.transport.FaultSpec`).
+
+    Returns the :class:`repro.comm.star_pp.StarPPRunResult` of the master.
+    """
+    from repro.comm.star_pp import StarPPMaster
+
+    def master_fn(conns, d):
+        master = StarPPMaster(
+            conns, d, cfg, tau, seed=seed, on_dropout=on_dropout
+        )
+        return master.run(rounds)
+
+    return _run_with_clients(
+        cfg,
+        dataset,
+        shape,
+        seed,
+        host,
+        master_fn,
+        pp=True,
+        fault_dict=dataclasses.asdict(fault) if fault is not None else None,
+    )
+
+
+def _main_pp(args, cfg: FedNLConfig) -> None:
+    from repro.comm.transport import FaultSpec
+
+    fault = None
+    if args.drop_prob > 0 or args.straggler_prob > 0:
+        fault = FaultSpec(
+            drop_prob=args.drop_prob,
+            straggler_prob=args.straggler_prob,
+            straggler_delay_s=args.straggler_delay,
+            seed=args.seed,
+        )
+    res = run_multiproc_pp(
+        cfg,
+        tau=args.tau,
+        dataset=args.dataset,
+        rounds=args.rounds,
+        seed=args.seed,
+        on_dropout=args.on_dropout,
+        fault=fault,
+    )
+    drops = sum(len(d) for d in res.dropped)
+    parts = sum(len(p) for p in res.participants)
+    kb = res.measured_frame_bytes.sum() / 1e3
+    print(f"rounds={res.rounds} tau={args.tau} contributions={parts} "
+          f"drops={drops} wall={res.wall_time_s:.2f}s")
+    print(f"uplink: {kb:.1f} kB framed, payload bits measured=="
+          f"{'analytic' if (res.measured_payload_bits == res.sent_bits).all() else 'MISMATCH'}")
+
+    if args.check:
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.core import eval_full, run_fednl_pp
+
+        z = _build_problem(args.dataset, None, args.seed)
+        _, g = eval_full(z, jnp.asarray(res.x), cfg.lam)
+        print(f"||grad(x_final)||={float(jnp.linalg.norm(g)):.3e}")
+        if fault is None:
+            ref = run_fednl_pp(z, cfg, tau=args.tau, rounds=args.rounds,
+                               seed=args.seed)
+            dx = float(np.max(np.abs(res.x_hist - ref.x_hist)))
+            print(f"vs single-node PP: max|x_tcp - x_sim|={dx:.3e} "
+                  "(fault-free runs are bit-identical; target 0)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="fednl", choices=["fednl", "fednl-pp"])
     ap.add_argument("--dataset", default="tiny")
     ap.add_argument("--compressor", default="topk")
     ap.add_argument("--k-multiplier", type=float, default=8.0)
@@ -146,7 +276,15 @@ def main() -> None:
     ap.add_argument("--tol", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
-                    help="compare against the single-node run_fednl trajectory")
+                    help="compare against the single-node simulation trajectory")
+    # FedNL-PP options
+    ap.add_argument("--tau", type=int, default=0,
+                    help="PP: sampled clients per round (default n//2)")
+    ap.add_argument("--on-dropout", default="partial",
+                    choices=["partial", "resample"])
+    ap.add_argument("--drop-prob", type=float, default=0.0)
+    ap.add_argument("--straggler-prob", type=float, default=0.0)
+    ap.add_argument("--straggler-delay", type=float, default=0.05)
     args = ap.parse_args()
 
     cfg = FedNLConfig(
@@ -156,6 +294,14 @@ def main() -> None:
         lam=args.lam,
         mu=args.lam,
     )
+    if args.algo == "fednl-pp":
+        if args.tau <= 0:
+            from repro.data import DATASET_SHAPES
+
+            args.tau = max(1, DATASET_SHAPES[args.dataset][1] // 2)
+        _main_pp(args, cfg)
+        return
+
     res = run_multiproc(
         cfg, dataset=args.dataset, rounds=args.rounds, tol=args.tol, seed=args.seed
     )

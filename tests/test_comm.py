@@ -236,6 +236,7 @@ def test_star_roofline_dominance():
 # TCP localhost, real client processes (acceptance criterion)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.net
 def test_tcp_multiproc_reproduces_single_node_trajectory():
     """master + n client processes over TCP localhost track run_fednl <=1e-8."""
     from repro.launch.multiproc import _build_problem, run_multiproc

@@ -1,0 +1,186 @@
+"""Property-based compressor CONTRACT tests (hypothesis).
+
+tests/test_compressors.py pins the theory at fixed shapes; this module states
+the contracts FedNL's convergence proof and the wire layer both rest on, and
+lets hypothesis hunt the shape/seed space for violations:
+
+  * contraction: E||C(u) - u||^2 <= (1 - delta) ||u||^2 for all six registry
+    (scaled) compressors;
+  * unbiasedness: E[C(u)] = u for the *unscaled* RandK / RandSeqK / Natural
+    forms;
+  * sparse/dense equivalence: compress_sparse + scatter_add_sparse rebuilds
+    the dense compress output EXACTLY (bit equality — the property the
+    sparse-collective aggregation and the wire codecs rely on);
+  * TopLEK adaptivity edge cases: total == 0 and kept == 0 payloads survive
+    the sparse form and the wire codec round trip.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.comm import wire
+from repro.compressors import core as C
+
+SPARSE = ["topk", "randk", "randseqk", "toplek"]
+ALL = SPARSE + ["natural", "identity"]
+
+
+def _rand_u(seed, t, scale=1.0):
+    u = jax.random.normal(jax.random.PRNGKey(seed), (t,), dtype=jnp.float64)
+    return u * scale
+
+
+# ---------------------------------------------------------------------------
+# contraction: the FedNL requirement E||C(u)-u||^2 <= (1-delta)||u||^2
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.integers(min_value=4, max_value=150),
+    frac=st.floats(min_value=0.02, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**20),
+    scale=st.sampled_from([1.0, 1e-8, 1e8]),
+    name=st.sampled_from(ALL),
+)
+def test_contraction_inequality_all_compressors(t, frac, seed, scale, name):
+    k = max(1, int(frac * t))
+    u = _rand_u(seed % 101, t, scale)
+    comp = C.get_compressor(name, t, k)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 400)
+    errs = jax.vmap(lambda key: jnp.sum((comp.compress(key, u)[0] - u) ** 2))(keys)
+    lhs = float(jnp.mean(errs))
+    rhs = (1 - comp.delta) * float(jnp.sum(u * u))
+    # deterministic compressors (topk/identity) must satisfy it exactly;
+    # randomized ones get Monte-Carlo slack
+    slack = 1e-12 if name in ("topk", "identity") else 0.2 * rhs + 1e-12 * scale**2
+    assert lhs <= rhs + slack
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness of the unscaled forms
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.integers(min_value=6, max_value=48),
+    frac=st.floats(min_value=0.1, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=2**20),
+    name=st.sampled_from(["randk", "randseqk"]),
+)
+def test_rand_unscaled_unbiased(t, frac, seed, name):
+    """E[(T/k) * mask(u)] = u for RandK and its cache-aware sequential form."""
+    k = max(1, int(frac * t))
+    u = _rand_u(seed % 89, t)
+    fn = C.randk if name == "randk" else C.randseqk
+    n_mc = 3000
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_mc)
+    samples = jax.vmap(lambda key: fn(key, u, k, scaled=False)[0])(keys)
+    mean = np.asarray(jnp.mean(samples, axis=0))
+    # CLT bound: sd of one coordinate is <= |u_j| T/k; 6-sigma tolerance
+    tol = 6.0 * (t / k) * (np.abs(np.asarray(u)) + 1e-3) / np.sqrt(n_mc)
+    np.testing.assert_array_less(np.abs(mean - np.asarray(u)), tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.integers(min_value=8, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**20),
+    scale=st.sampled_from([1.0, 1e-6, 1e6]),
+)
+def test_natural_unscaled_unbiased(t, seed, scale):
+    """E[natural(u)] = u (probabilistic power-of-two rounding, omega = 1/8)."""
+    u = _rand_u(seed % 97, t, scale)
+    n_mc = 3000
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_mc)
+    samples = jax.vmap(lambda key: C.natural(key, u, scaled=False)[0])(keys)
+    mean = np.asarray(jnp.mean(samples, axis=0))
+    u_np = np.asarray(u)
+    # per-coordinate sd <= |u_j| / sqrt(8); 6-sigma + tiny absolute floor
+    tol = 6.0 * np.abs(u_np) / np.sqrt(8 * n_mc) + 1e-12 * scale
+    np.testing.assert_array_less(np.abs(mean - u_np), tol)
+
+
+# ---------------------------------------------------------------------------
+# sparse form == dense form, exactly (bit equality)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.integers(min_value=4, max_value=160),
+    frac=st.floats(min_value=0.02, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**20),
+    scale=st.sampled_from([1.0, 1e-9, 1e9]),
+    name=st.sampled_from(SPARSE),
+)
+def test_sparse_scatter_reproduces_dense_exactly(t, frac, seed, scale, name):
+    """compress_sparse + scatter_add_sparse == compress, to the last bit —
+    values travel verbatim, indices never collide, padding adds exact zeros."""
+    k = max(1, int(frac * t))
+    u = _rand_u(seed % 97, t, scale)
+    comp = C.get_compressor(name, t, k)
+    key = jax.random.PRNGKey(seed)
+    dense, sent_d = comp.compress(key, u)
+    idx, vals, sent_s = comp.compress_sparse(key, u)
+    recon = C.scatter_add_sparse(idx, vals, t)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(recon))
+    assert int(sent_d) == int(sent_s)
+
+
+# ---------------------------------------------------------------------------
+# TopLEK adaptivity edge cases: total == 0 and kept == 0
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,k", [(20, 5), (7, 7), (64, 1)])
+def test_toplek_zero_vector_keeps_nothing(t, k):
+    """total == 0: kept must be 0 and every path (dense, sparse, codec)
+    must produce the all-zero message."""
+    u = jnp.zeros(t, dtype=jnp.float64)
+    key = jax.random.PRNGKey(0)
+    comp = C.get_compressor("toplek", t, k)
+    dense, kept = comp.compress(key, u)
+    assert int(kept) == 0
+    assert float(jnp.sum(jnp.abs(dense))) == 0.0
+    idx, vals, kept_s = comp.compress_sparse(key, u)
+    assert int(kept_s) == 0
+    np.testing.assert_array_equal(
+        np.asarray(C.scatter_add_sparse(idx, vals, t)), np.zeros(t)
+    )
+    # wire codec: 4-byte "kept = 0" header only, decodes to zeros
+    codec = wire.make_codec(comp, t)
+    enc = codec.encode(key, u)
+    assert enc.sent_elems == 0 and len(enc.data) == 4
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(enc.data, 0)), np.zeros(t)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(min_value=4, max_value=100),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**20),
+)
+def test_toplek_kept_range_and_codec_roundtrip(t, frac, seed):
+    """0 <= kept <= k always, and the adaptive-length wire message rebuilds
+    the dense output exactly whatever kept turns out to be."""
+    k = max(1, int(frac * t))
+    u = _rand_u(seed % 89, t)
+    comp = C.get_compressor("toplek", t, k)
+    key = jax.random.PRNGKey(seed)
+    dense, kept = comp.compress(key, u)
+    assert 0 <= int(kept) <= k
+    assert int(jnp.sum(dense != 0)) <= int(kept)
+    codec = wire.make_codec(comp, t)
+    enc = codec.encode(key, u)
+    assert enc.sent_elems == int(kept)
+    assert enc.bits == 32 + int(kept) * 96
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(enc.data, enc.sent_elems)), np.asarray(dense)
+    )

@@ -147,3 +147,33 @@ def test_round_metrics_bits_accounting(z):
     k = cfg.k_for(d)
     assert 0 <= int(m.sent_elems) <= k * z.shape[0]
     assert float(m.sent_bits) <= z.shape[0] * (k * 96 + 32)
+
+
+@pytest.mark.parametrize("accounting", ["payload", "wire"])
+def test_pp_round_metrics_honor_accounting(z, accounting):
+    """PP sent_bits routes through make_pp_bits_fn: 'payload' prices the
+    Algorithm-3 triple via pp_message_bits (Hessian section + (d+1) FP64
+    deltas), 'wire' the full framed PP_UPDATE — no hard-coded constants."""
+    import dataclasses
+
+    from repro.comm.wire import pp_frame_bits, pp_message_bits
+    from repro.compressors import get_compressor
+
+    d = z.shape[-1]
+    t = d * (d + 1) // 2
+    tau = 3
+    cfg = FedNLConfig(compressor="topk", lam=LAM, accounting=accounting)
+    state = fednl_pp_init(z, cfg)
+    round_fn = jax.jit(make_fednl_pp_round(z, cfg, tau=tau))
+    _, m = round_fn(state)
+    comp = get_compressor("topk", t, cfg.k_for(d))
+    k = cfg.k_for(d)
+    model = pp_message_bits if accounting == "payload" else pp_frame_bits
+    want = tau * int(model(comp, jnp.asarray(k), d))
+    assert int(m.sent_bits) == want
+    # both accountings agree with the analytic models, differ from each other
+    other = dataclasses.replace(
+        cfg, accounting="wire" if accounting == "payload" else "payload"
+    )
+    _, m2 = jax.jit(make_fednl_pp_round(z, other, tau=tau))(fednl_pp_init(z, other))
+    assert int(m2.sent_bits) != int(m.sent_bits)

@@ -1,0 +1,70 @@
+"""Golden-trace regression tests: pinned first-10-round trajectories.
+
+The pins are BIT-exact (float.hex() comparison): the moment any refactor of
+the round body, a compressor, or a codec changes a single ulp of the
+grad-norm trajectory — or a single bit of the sent_bits accounting — these
+fail with a side-by-side diff.  That is the point: the star transports and
+the PP protocol are proven against `run_fednl`/`run_fednl_pp` by exact
+equality, so silent drift in the simulation would silently re-baseline the
+whole wire stack.
+
+Deliberate numerical changes: regenerate with
+    PYTHONPATH=src python scripts/gen_golden_traces.py
+and call the re-baselining out in the commit message.
+"""
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FedNLConfig, run_fednl
+from repro.data import add_intercept, make_synthetic_logreg, partition_clients
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "fednl_traces.json"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return json.loads(GOLDEN.read_text())
+
+
+@pytest.fixture(scope="module")
+def z():
+    x, y = make_synthetic_logreg("tiny", seed=1)
+    return jnp.asarray(partition_clients(add_intercept(x), y, 8, 40, seed=1))
+
+
+@pytest.mark.parametrize("comp", ["topk", "randseqk", "toplek"])
+def test_fednl_trace_matches_golden(golden, z, comp):
+    pins = golden["traces"][comp]
+    res = run_fednl(
+        z, FedNLConfig(compressor=comp, lam=1e-3),
+        rounds=golden["rounds"], seed=0,
+    )
+    got_gn = [float(g).hex() for g in res.grad_norms]
+    got_bits = [int(b) for b in res.sent_bits]
+    assert got_gn == pins["grad_norms_hex"], (
+        f"{comp}: grad_norm trajectory drifted from the golden pin.\n"
+        f"  pinned: {pins['grad_norms_hex']}\n"
+        f"  got:    {got_gn}\n"
+        "If this change is deliberate, regenerate via "
+        "scripts/gen_golden_traces.py and say so in the commit message."
+    )
+    assert got_bits == pins["sent_bits"], (
+        f"{comp}: sent_bits accounting drifted from the golden pin.\n"
+        f"  pinned: {pins['sent_bits']}\n  got:    {got_bits}"
+    )
+
+
+def test_golden_file_shape(golden):
+    """The pin file itself stays well-formed (each trace pins every round)."""
+    assert set(golden["traces"]) == {"topk", "randseqk", "toplek"}
+    for comp, pins in golden["traces"].items():
+        assert len(pins["grad_norms_hex"]) == golden["rounds"], comp
+        assert len(pins["sent_bits"]) == golden["rounds"], comp
+        # hex round-trips to finite floats
+        assert all(
+            float.fromhex(h) == float.fromhex(h) for h in pins["grad_norms_hex"]
+        )
