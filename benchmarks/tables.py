@@ -1,4 +1,4 @@
-"""One benchmark per paper table.
+"""One benchmark per paper table, driven by declarative ExperimentSpecs.
 
 Table 1 (single-node vanilla FedNL): per-compressor wall time on the
   W8A-shaped problem vs the reference-style NumPy loop — the x-speedup story.
@@ -11,28 +11,24 @@ Table 6 (FedNL-PP participation sweep): per-round uplink payload bits and
   wall time of the partial-participation star protocol across
   tau in {0.1n, 0.5n, n}, vs full-participation FedNL over the same wire.
 
+Sweeps are *lists of ExperimentSpecs* — each table builds its base spec and
+varies one field with ``spec.replace`` (compressor, backend, aggregate, tau),
+then runs everything through the one ``repro.api.solve`` facade; no table
+hand-builds per-variant configs or round loops anymore.
+
 Every function returns rows: (name, us_per_call, derived).
 """
 
 from __future__ import annotations
 
-import time
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
+from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
 from repro.baselines import run_fednl_numpy_reference
-from repro.core import FedNLConfig, run_fednl, newton_baseline, gd_baseline
-from repro.core.fednl import fednl_init, make_fednl_round
-from repro.data import make_synthetic_logreg, add_intercept, partition_clients
-from repro.distributed import (
-    make_sharded_fednl_round,
-    shard_problem,
-    sharded_fednl_init,
-)
+from repro.core import newton_baseline, gd_baseline
 
 # benchmark-scale problem shapes (full W8A shape is used by examples/e2e;
 # benches keep wall time civil on 1 CPU core and report per-round time).
@@ -43,45 +39,61 @@ BENCH_SHAPES = {
 }
 ROUNDS = 25
 
+ALL_COMPRESSORS = ["identity", "topk", "randk", "randseqk", "toplek", "natural"]
 
-def _problem(name: str, seed: int = 0):
-    d, n, n_i = BENCH_SHAPES[name]
-    x, y = make_synthetic_logreg((d, n, n_i), seed=seed)
-    return jnp.asarray(partition_clients(add_intercept(x), y, n, n_i, seed=seed))
+
+def _base_spec(name: str, seed: int = 0, **overrides) -> ExperimentSpec:
+    overrides.setdefault("rounds", ROUNDS)
+    return ExperimentSpec(
+        data=DataSpec(shape=BENCH_SHAPES[name], seed=seed), **overrides
+    )
 
 
 def table1_singlenode():
     """Per-compressor FedNL(B) + the NumPy-reference speedup factor."""
     rows = []
-    z = _problem("w8a")
+    base = _base_spec("w8a")
+    z = base.data.build()
     ref_rounds = 3
     _, ref_t = run_fednl_numpy_reference(np.asarray(z), 1e-3, ref_rounds)
     ref_per_round = ref_t / ref_rounds
     rows.append(("table1/reference_numpy_per_round", ref_per_round * 1e6,
                  f"rounds={ref_rounds}"))
-    for comp in ["identity", "topk", "randk", "randseqk", "toplek", "natural"]:
-        cfg = FedNLConfig(compressor=comp, lam=1e-3)
-        res = run_fednl(z, cfg, rounds=ROUNDS)
-        per_round = res.wall_time_s / res.rounds
+    sweep = [base.replace(compressor=CompressorSpec(c)) for c in ALL_COMPRESSORS]
+    for spec in sweep:
+        rep = solve(spec, z=z)
+        per_round = rep.wall_time_s / rep.rounds
         speedup = ref_per_round / per_round
         rows.append((
-            f"table1/fednl_{comp}_per_round",
+            f"table1/fednl_{spec.compressor.name}_per_round",
             per_round * 1e6,
-            f"gn={res.grad_norms[-1]:.2e};speedup_vs_ref={speedup:.1f}x",
+            f"gn={rep.grad_norms[-1]:.2e};speedup_vs_ref={speedup:.1f}x",
         ))
     return rows
 
 
 def table2_ls_vs_solvers():
     rows = []
-    for name in BENCH_SHAPES:
-        z = _problem(name, seed=1)
-        cfg = FedNLConfig(compressor="randseqk", lam=1e-3, option="A", mu=1e-3)
-        res = run_fednl(z, cfg, rounds=60, tol=1e-9, line_search=True)
+    sweep = [
+        _base_spec(
+            name,
+            seed=1,
+            algorithm="fednl-ls",
+            compressor=CompressorSpec("randseqk"),
+            option="A",
+            mu=1e-3,
+            rounds=60,
+            tol=1e-9,
+        )
+        for name in BENCH_SHAPES
+    ]
+    for name, spec in zip(BENCH_SHAPES, sweep):
+        z = spec.data.build()
+        rep = solve(spec, z=z)
         rows.append((
             f"table2/{name}/fednl_ls_randseqk",
-            res.wall_time_s * 1e6,
-            f"init={res.init_time_s:.2f}s;rounds={res.rounds};gn={res.grad_norms[-1]:.1e}",
+            rep.wall_time_s * 1e6,
+            f"init={rep.init_time_s:.2f}s;rounds={rep.rounds};gn={rep.grad_norms[-1]:.1e}",
         ))
         nb = newton_baseline(z, 1e-3, tol=1e-9)
         rows.append((
@@ -102,36 +114,33 @@ def table3_multinode():
     """Sharded round (mesh on the single real device; collective semantics are
     identical, wall time measures the sharded program)."""
     rows = []
-    z = _problem("w8a", seed=2)
-    mesh = jax.make_mesh((1,), ("data",))
-    zs = shard_problem(z, mesh)
+    base = _base_spec("w8a", seed=2, backend="sharded", devices=1)
+    z = base.data.build()
     d = z.shape[-1]
     t = d * (d + 1) // 2
-    for agg in ["dense_psum", "sparse_allgather"]:
-        cfg = FedNLConfig(compressor="topk", lam=1e-3)
-        st = sharded_fednl_init(zs, cfg, mesh)
-        rf = jax.jit(make_sharded_fednl_round(zs, cfg, mesh, aggregate=agg))
-        st, m = rf(st)  # compile
-        jax.block_until_ready(st.x)
-        t0 = time.perf_counter()
-        for _ in range(ROUNDS):
-            st, m = rf(st)
-        jax.block_until_ready(st.x)
-        per_round = (time.perf_counter() - t0) / ROUNDS
-        k = cfg.k_for(d)
-        payload = (k * 12 if agg == "sparse_allgather" else t * 8) * z.shape[0]
+    k = base.fednl_config().k_for(d)
+    for spec in [base.replace(aggregate=agg)
+                 for agg in ["dense_psum", "sparse_allgather"]]:
+        rep = solve(spec, z=z)
+        per_round = rep.wall_time_s / rep.rounds
+        payload = (k * 12 if spec.aggregate == "sparse_allgather" else t * 8) * z.shape[0]
         rows.append((
-            f"table3/{agg}_per_round",
+            f"table3/{spec.aggregate}_per_round",
             per_round * 1e6,
-            f"gn={float(m['grad_norm']):.1e};uplink_bytes={payload}",
+            f"gn={rep.grad_norms[-1]:.1e};uplink_bytes={payload}",
         ))
     return rows
 
 
 def table4_progression():
     """Appendix-B-style ablation of this implementation's optimizations."""
+    import time
+
+    import jax.numpy as jnp
+
     rows = []
-    z = _problem("w8a", seed=3)
+    base = _base_spec("w8a", seed=3)
+    z = base.data.build()
     n, n_i, d = z.shape
 
     # v0: reference numpy loop (from table 1, re-measured light)
@@ -139,11 +148,11 @@ def table4_progression():
     rows.append(("table4/v0_numpy_reference", t_ref / 2 * 1e6, "baseline"))
 
     # v1: jax but python-loop over clients (no vmap), dense hessians
-    cfg = FedNLConfig(compressor="topk", lam=1e-3)
+    cfg = base.fednl_config()
     from repro.compressors import get_compressor
-    from repro.linalg import pack_triu, triu_size, unpack_triu, frob_norm_from_packed
+    from repro.linalg import pack_triu, triu_size, frob_norm_from_packed
     from repro.objectives.logreg import logreg_oracles
-    from repro.core.fednl import master_step
+    from repro.core.fednl import fednl_init, master_step
 
     comp = get_compressor("topk", triu_size(d), cfg.k_for(d))
 
@@ -176,15 +185,14 @@ def table4_progression():
                  "jit per-client loop"))
 
     # v2: vmap-fused clients (the shipped path)
-    res = run_fednl(z, cfg, rounds=ROUNDS)
-    rows.append(("table4/v2_vmap_fused", res.wall_time_s / res.rounds * 1e6,
+    rep = solve(base, z=z)
+    rows.append(("table4/v2_vmap_fused", rep.wall_time_s / rep.rounds * 1e6,
                  "vmapped clients + packed triu"))
 
     # v3: + pallas hessian kernel routing (interpret mode on CPU — measures
     # correctness path; on TPU this is the MXU SYRK)
-    cfg_k = FedNLConfig(compressor="topk", lam=1e-3, use_kernel=True)
-    res_k = run_fednl(z, cfg_k, rounds=3)
-    rows.append(("table4/v3_pallas_kernel_interpret", res_k.wall_time_s / res_k.rounds * 1e6,
+    rep_k = solve(base.replace(use_kernel=True, rounds=3), z=z)
+    rows.append(("table4/v3_pallas_kernel_interpret", rep_k.wall_time_s / rep_k.rounds * 1e6,
                  "hessian_syrk interpret=True (CPU); TPU target path"))
     return rows
 
@@ -194,23 +202,24 @@ def table5_wire_formats():
     uplink bytes per round vs the analytic message_bits model, plus the
     bandwidth/latency cost-model round time (repro.comm.cost)."""
     from repro.comm.cost import DEFAULT_COST
-    from repro.comm.star import run_loopback
 
     rows = []
-    z = _problem("phishing", seed=4)
+    base = _base_spec("phishing", seed=4, backend="star-loopback", rounds=3)
+    z = base.data.build()
     n, _, d = z.shape
     bcast_bits = d * 64
-    for comp in ["identity", "topk", "randk", "randseqk", "toplek", "natural"]:
-        cfg = FedNLConfig(compressor=comp, lam=1e-3)
-        res = run_loopback(z, cfg, rounds=3)
-        per_round = res.wall_time_s / res.rounds
-        match = bool((res.measured_payload_bits == res.sent_bits).all())
-        uplink_bits = float(res.measured_payload_bits[-1])
+    sweep = [base.replace(compressor=CompressorSpec(c)) for c in ALL_COMPRESSORS]
+    for spec in sweep:
+        rep = solve(spec, z=z)
+        per_round = rep.wall_time_s / rep.rounds
+        measured = rep.extras["measured_payload_bits"]
+        match = bool((measured == rep.sent_bits_payload).all())
+        uplink_bits = float(measured[-1])
         wire_s = DEFAULT_COST.round_s(uplink_bits, bcast_bits, n)
         rows.append((
-            f"table5/wire_{comp}_per_round",
+            f"table5/wire_{spec.compressor.name}_per_round",
             per_round * 1e6,
-            f"frame_bytes={int(res.measured_frame_bytes[-1])};"
+            f"frame_bytes={int(rep.extras['measured_frame_bytes'][-1])};"
             f"payload_bits={int(uplink_bits)};"
             f"measured_eq_analytic={match};"
             f"cost_model_round={wire_s * 1e3:.2f}ms",
@@ -223,33 +232,34 @@ def table6_pp_participation():
     scale with tau (only the sampled clients compute or transmit), compared
     against full-participation FedNL on the identical problem/wire."""
     from repro.comm.cost import DEFAULT_COST
-    from repro.comm.star import run_loopback
-    from repro.comm.star_pp import run_pp_loopback
 
     rows = []
-    z = _problem("phishing", seed=5)
+    base = _base_spec("phishing", seed=5, backend="star-loopback", rounds=6)
+    z = base.data.build()
     n, _, d = z.shape
     bcast_bits = d * 64
-    cfg = FedNLConfig(compressor="topk", lam=1e-3)
-    pp_rounds = 6
 
-    full = run_loopback(z, cfg, rounds=pp_rounds)
+    full = solve(base, z=z)
     rows.append((
         "table6/fednl_full_per_round",
         full.wall_time_s / full.rounds * 1e6,
-        f"uplink_bits={int(full.measured_payload_bits[-1])};"
+        f"uplink_bits={int(full.extras['measured_payload_bits'][-1])};"
         f"cost_model_round="
-        f"{DEFAULT_COST.round_s(float(full.measured_payload_bits[-1]), bcast_bits, n) * 1e3:.2f}ms",
+        f"{DEFAULT_COST.round_s(float(full.extras['measured_payload_bits'][-1]), bcast_bits, n) * 1e3:.2f}ms",
     ))
-    for frac in [0.1, 0.5, 1.0]:
-        tau = max(1, int(frac * n))
-        res = run_pp_loopback(z, cfg, tau=tau, rounds=pp_rounds)
-        per_round = res.wall_time_s / res.rounds
-        uplink_bits = float(res.measured_payload_bits[-1])
-        wire_s = DEFAULT_COST.round_s(uplink_bits, tau * bcast_bits, tau)
-        match = bool((res.measured_payload_bits == res.sent_bits).all())
+    sweep = [
+        base.replace(algorithm="fednl-pp", tau=max(1, int(frac * n)))
+        for frac in [0.1, 0.5, 1.0]
+    ]
+    for spec in sweep:
+        rep = solve(spec, z=z)
+        per_round = rep.wall_time_s / rep.rounds
+        measured = rep.extras["measured_payload_bits"]
+        uplink_bits = float(measured[-1])
+        wire_s = DEFAULT_COST.round_s(uplink_bits, spec.tau * bcast_bits, spec.tau)
+        match = bool((measured == rep.sent_bits_payload).all())
         rows.append((
-            f"table6/fednl_pp_tau{tau}_per_round",
+            f"table6/fednl_pp_tau{spec.tau}_per_round",
             per_round * 1e6,
             f"uplink_bits={int(uplink_bits)};"
             f"measured_eq_analytic={match};"

@@ -1,7 +1,8 @@
 """Multi-node FedNL on an 8-device mesh (fake CPU devices in this container;
 on a real cluster the same code runs over ICI/DCN).
 
-Demonstrates both aggregation strategies:
+One ExperimentSpec with ``backend="sharded"``; the sweep varies only the
+``aggregate`` field between the two collective strategies:
   dense_psum        faithful dense collective (paper semantics)
   sparse_allgather  compressed collective (beyond-paper, DESIGN.md §7)
 
@@ -15,40 +16,29 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 
 jax.config.update("jax_enable_x64", True)
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import FedNLConfig
-from repro.data import make_synthetic_logreg, add_intercept, partition_clients
-from repro.distributed import (
-    make_sharded_fednl_round,
-    shard_problem,
-    sharded_fednl_init,
-)
+from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
 from repro.linalg import triu_size
 
 
 def main():
     print(f"devices: {jax.device_count()}")
     d, n, n_i = 121, 48, 96  # 48 clients sharded 6-per-device
-    x, y = make_synthetic_logreg((d, n, n_i), seed=0)
-    z = jnp.asarray(partition_clients(add_intercept(x), y, n, n_i, seed=0))
-
-    mesh = jax.make_mesh((8,), ("data",))
-    zs = shard_problem(z, mesh)
     t = triu_size(d)
+    base = ExperimentSpec(
+        data=DataSpec(shape=(d, n, n_i), seed=0),
+        compressor=CompressorSpec("topk", k_multiplier=8.0),
+        backend="sharded",
+        devices=8,
+        rounds=40,
+        tol=1e-14,
+    )
+    k = base.fednl_config().k_for(d)
 
     for agg in ["dense_psum", "sparse_allgather"]:
-        cfg = FedNLConfig(compressor="topk", k_multiplier=8.0, lam=1e-3)
-        st = sharded_fednl_init(zs, cfg, mesh)
-        rf = jax.jit(make_sharded_fednl_round(zs, cfg, mesh, aggregate=agg))
-        for r in range(40):
-            st, m = rf(st)
-            if float(m["grad_norm"]) < 1e-14:
-                break
-        k = cfg.k_for(d)
+        rep = solve(base.replace(aggregate=agg))
         payload = k * 12 if agg == "sparse_allgather" else t * 8
-        print(f"{agg:17s}: {r + 1} rounds, ||grad|| = {float(m['grad_norm']):.2e}, "
+        print(f"{agg:17s}: {rep.rounds} rounds, ||grad|| = {rep.grad_norms[-1]:.2e}, "
               f"collective payload/client/round = {payload / 1e3:.1f} kB "
               f"({'idx+val pairs' if 'sparse' in agg else 'dense packed triu'})")
 

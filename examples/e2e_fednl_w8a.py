@@ -21,7 +21,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FedNLConfig, run_fednl
+from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
 from repro.data import (
     make_synthetic_logreg,
     write_libsvm,
@@ -52,20 +52,25 @@ def main():
           f"(write+mmap-parse+partition, {z.shape})")
 
     os.makedirs(args.out, exist_ok=True)
-    tol = 1e-15 if args.fast else 0.0
+    # one declarative spec; the sweep varies only the compressor field
+    # (z from the LIBSVM round-trip above is passed straight to solve)
+    base = ExperimentSpec(
+        data=DataSpec(dataset="w8a", seed=0),
+        rounds=args.rounds,
+        tol=1e-15 if args.fast else 0.0,
+    )
     summary = []
     for comp in ["randseqk", "topk", "toplek", "randk", "natural", "identity"]:
-        cfg = FedNLConfig(compressor=comp, k_multiplier=8.0, lam=1e-3, option="B")
-        res = run_fednl(z, cfg, rounds=args.rounds, tol=tol)
-        mb = float(np.sum(res.sent_bits)) / 8e6
-        line = (f"FedNL(B)/{comp:9s} rounds={res.rounds:4d} "
-                f"||grad||={res.grad_norms[-1]:.2e} "
-                f"solve={res.wall_time_s:8.2f}s init={res.init_time_s:5.2f}s "
+        rep = solve(base.replace(compressor=CompressorSpec(comp, 8.0)), z=z)
+        mb = float(np.sum(rep.sent_bits)) / 8e6
+        line = (f"FedNL(B)/{comp:9s} rounds={rep.rounds:4d} "
+                f"||grad||={rep.grad_norms[-1]:.2e} "
+                f"solve={rep.wall_time_s:8.2f}s init={rep.init_time_s:5.2f}s "
                 f"uplink={mb:9.1f} MB")
         print(line)
         summary.append(line)
         save_checkpoint(os.path.join(args.out, f"model_{comp}.npz"),
-                        {"x": jnp.asarray(res.x)})
+                        {"x": jnp.asarray(rep.x)})
     with open(os.path.join(args.out, "summary.txt"), "w") as fh:
         fh.write("\n".join(summary) + "\n")
     print(f"saved models + summary to {args.out}/")

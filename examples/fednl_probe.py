@@ -17,8 +17,8 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CompressorSpec, ExperimentSpec, solve
 from repro.configs import get_config
-from repro.core import FedNLConfig, run_fednl
 from repro.models import init_lm_params
 from repro.models.lm import _run_blocks, COMPUTE_DTYPE
 from repro.data import partition_clients
@@ -55,16 +55,21 @@ def main():
     feats = np.asarray(backbone_features(params, cfg, jnp.asarray(tokens)))
     feats = feats / (np.linalg.norm(feats, axis=1, keepdims=True) + 1e-9)
 
-    # federated logistic head on the features (the paper's exact problem class)
+    # federated logistic head on the features (the paper's exact problem
+    # class); the backbone features ride into solve() as a pre-built problem
     z = jnp.asarray(partition_clients(feats, labels, args.clients, args.samples,
                                       seed=0, shuffle=False))
-    fed_cfg = FedNLConfig(compressor="toplek", k_multiplier=8.0, lam=1e-3)
-    res = run_fednl(z, fed_cfg, rounds=100, tol=1e-13)
-    print(f"FedNL(B)/toplek head: {res.rounds} rounds, "
-          f"||grad|| = {res.grad_norms[-1]:.2e}")
+    spec = ExperimentSpec(
+        compressor=CompressorSpec("toplek", k_multiplier=8.0),
+        rounds=100,
+        tol=1e-13,
+    )
+    rep = solve(spec, z=z)
+    print(f"FedNL(B)/toplek head: {rep.rounds} rounds, "
+          f"||grad|| = {rep.grad_norms[-1]:.2e}")
 
     # train-set accuracy of the probe
-    margin = feats @ res.x * labels
+    margin = feats @ rep.x * labels
     acc = float((margin > 0).mean())
     print(f"probe train accuracy: {acc:.3f}")
 

@@ -1,11 +1,12 @@
 """Real multi-node FedNL-PP: partial participation over TCP localhost.
 
-Algorithm 3 in miniature — the master samples tau of the 8 client processes
-each round; only those receive a SELECT frame and uplink the compressed
-triple ``encode(S_i) || dl_i || dg_i`` through the Section-7 wire codecs.
-The fault-free tau = n run is checked bit-identical against the single-node
-simulation; a second run injects 20% dropout and shows both Algorithm-3
-fallback policies still drive the gradient below 1e-9.
+Algorithm 3 in miniature, driven through the declarative API — the master
+samples tau of the 8 client processes each round; only those receive a SELECT
+frame and uplink the compressed triple ``encode(S_i) || dl_i || dg_i`` through
+the Section-7 wire codecs.  The fault-free tau = n spec is re-solved with
+``backend="local"`` (the only field that changes) and checked bit-identical;
+a second sweep injects 20% dropout and shows both Algorithm-3 fallback
+policies still drive the gradient below 1e-9.
 
     PYTHONPATH=src python examples/multinode_pp_fednl.py
 """
@@ -13,44 +14,43 @@ fallback policies still drive the gradient below 1e-9.
 import jax
 
 jax.config.update("jax_enable_x64", True)
-import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.transport import FaultSpec
-from repro.core import FedNLConfig, eval_full, run_fednl_pp
-from repro.launch.multiproc import _build_problem, run_multiproc_pp
+from repro.api import DataSpec, ExperimentSpec, FaultSpec, solve
 
 
 def main():
     shape = (24, 8, 40)  # d, n_clients, n_i: 8 client processes
     n = shape[1]
-    cfg = FedNLConfig(compressor="topk", lam=1e-3)
-    z = _build_problem("", shape, 0)
+    base = ExperimentSpec(
+        algorithm="fednl-pp",
+        data=DataSpec(shape=shape, seed=0),
+        backend="star-tcp",
+        seed=0,
+    )
 
     # --- fault-free: tau = n reproduces the simulation bit-for-bit ---------
-    res = run_multiproc_pp(cfg, tau=n, shape=shape, rounds=10, seed=0)
-    ref = run_fednl_pp(z, cfg, tau=n, rounds=10, seed=0)
-    dx = float(np.max(np.abs(res.x_hist - ref.x_hist)))
-    print(f"tau={n} (full): {res.rounds} rounds over TCP, "
-          f"uplink={res.measured_frame_bytes.sum() / 1e3:.1f} kB framed, "
+    spec = base.replace(tau=n, rounds=10)
+    rep = solve(spec)
+    ref = solve(spec.replace(backend="local"))
+    dx = float(np.max(np.abs(rep.x_hist - ref.x_hist)))
+    print(f"tau={n} (full): {rep.rounds} rounds over TCP, "
+          f"uplink={rep.extras['measured_frame_bytes'].sum() / 1e3:.1f} kB framed, "
           f"max|x_tcp - x_sim|={dx:.1e}")
     assert dx == 0.0, "fault-free PP run must be bit-identical to the simulation"
-    assert (res.measured_payload_bits == res.sent_bits).all()
+    assert (rep.extras["measured_payload_bits"] == rep.sent_bits_payload).all()
 
     # --- partial participation with injected dropout -----------------------
     fault = FaultSpec(drop_prob=0.2, seed=7)
     for policy in ["partial", "resample"]:
-        res = run_multiproc_pp(
-            cfg, tau=3, shape=shape, rounds=60, seed=0,
-            on_dropout=policy, fault=fault,
-        )
-        _, g = eval_full(z, jnp.asarray(res.x), cfg.lam)
-        gn = float(jnp.linalg.norm(g))
-        drops = sum(len(d) for d in res.dropped)
-        parts = sum(len(p) for p in res.participants)
+        rep = solve(base.replace(
+            tau=3, rounds=60, fault=fault, on_dropout=policy,
+        ))
+        drops = sum(len(d) for d in rep.dropped)
+        parts = sum(len(p) for p in rep.participants)
         print(f"tau=3 drop=20% on_dropout={policy}: contributions={parts} "
-              f"drops={drops} ||grad(x_final)||={gn:.2e}")
-        assert gn < 1e-9, "dropout-injected PP run must still converge"
+              f"drops={drops} ||grad(x_final)||={rep.final_grad_norm:.2e}")
+        assert rep.final_grad_norm < 1e-9, "dropout-injected PP run must still converge"
 
 
 if __name__ == "__main__":

@@ -1,10 +1,10 @@
 """Real multi-node FedNL: master + client OS processes over TCP localhost.
 
-This is the paper's Section-7 deployment in miniature — every round, each
-client process uplinks its compressed Hessian correction through the
-Section-7 wire codecs (repro.comm.wire) to the master socket, and the run is
-seed-aligned so the resulting iterates are identical to the single-node
-simulation (checked at the end).
+This is the paper's Section-7 deployment in miniature, driven through the
+declarative API: one ExperimentSpec per compressor with ``backend="star-tcp"``
+(master + one OS process per client, Section-7 wire codecs), and the *same
+spec* re-solved with ``backend="local"`` — the only field that changes — to
+check the TCP run reproduces the single-node simulation.
 
     PYTHONPATH=src python examples/multinode_tcp_fednl.py
 """
@@ -14,27 +14,34 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import numpy as np
 
+from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
 from repro.comm.cost import DEFAULT_COST
-from repro.core import FedNLConfig, run_fednl
-from repro.launch.multiproc import _build_problem, run_multiproc
 
 
 def main():
     shape = (24, 8, 40)  # d, n_clients, n_i: 8 client processes
+    base = ExperimentSpec(
+        data=DataSpec(shape=shape, seed=0),
+        backend="star-tcp",
+        rounds=12,
+        tol=1e-14,
+        seed=0,
+    )
     for comp in ["topk", "randseqk", "natural"]:
-        cfg = FedNLConfig(compressor=comp, lam=1e-3)
-        res = run_multiproc(cfg, shape=shape, rounds=12, tol=1e-14, seed=0)
-        ref = run_fednl(_build_problem("", shape, 0), cfg, rounds=12, tol=1e-14, seed=0)
-        r = min(res.rounds, ref.rounds)
-        dx = float(np.max(np.abs(res.x - ref.x)))
+        spec = base.replace(compressor=CompressorSpec(comp))
+        rep = solve(spec)
+        ref = solve(spec.replace(backend="local"))
+        r = min(rep.rounds, ref.rounds)
+        dx = float(np.max(np.abs(rep.x - ref.x)))
         comm_ms = DEFAULT_COST.round_s(
-            float(res.measured_payload_bits[-1]), shape[0] * 64, shape[1]
+            float(rep.extras["measured_payload_bits"][-1]), shape[0] * 64, shape[1]
         ) * 1e3
-        print(f"{comp:9s}: {res.rounds} rounds over TCP, ||grad||={res.grad_norms[-1]:.2e}, "
-              f"uplink={res.measured_frame_bytes.sum() / 1e3:.1f} kB framed, "
+        print(f"{comp:9s}: {rep.rounds} rounds over TCP, ||grad||={rep.grad_norms[-1]:.2e}, "
+              f"uplink={rep.extras['measured_frame_bytes'].sum() / 1e3:.1f} kB framed, "
               f"cost-model {comm_ms:.2f} ms/round, max|x_tcp - x_sim|={dx:.1e}")
         assert dx <= 1e-8, "TCP run must reproduce the simulation trajectory"
-        assert (res.measured_payload_bits[:r] == res.sent_bits[:r]).all()
+        assert (rep.extras["measured_payload_bits"][:r]
+                == rep.sent_bits_payload[:r]).all()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,10 @@
 """Quickstart: train L2-regularized logistic regression with FedNL in ~seconds.
 
     PYTHONPATH=src python examples/quickstart.py [--compressor topk]
+
+One declarative ExperimentSpec describes the whole run; solve() executes it.
+Change only ``backend=`` ("local" | "sharded" | "star-loopback" | "star-tcp")
+to re-run the identical experiment on another execution backend.
 """
 
 import argparse
@@ -10,8 +14,8 @@ import jax
 jax.config.update("jax_enable_x64", True)  # FedNL is an FP64 algorithm
 import jax.numpy as jnp
 
-from repro.core import FedNLConfig, run_fednl, newton_baseline
-from repro.data import make_synthetic_logreg, add_intercept, partition_clients
+from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
+from repro.core import newton_baseline
 
 
 def main():
@@ -19,24 +23,32 @@ def main():
     ap.add_argument("--compressor", default="topk",
                     choices=["topk", "randk", "randseqk", "toplek", "natural", "identity"])
     ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--backend", default="local")
     args = ap.parse_args()
 
     # a small federated problem: 8 clients x 40 samples, d = 24
-    x, y = make_synthetic_logreg("tiny", seed=0)
-    z = jnp.asarray(partition_clients(add_intercept(x), y, 8, 40, seed=0))
-    print(f"problem: {z.shape[0]} clients x {z.shape[1]} samples, d={z.shape[2]}")
+    spec = ExperimentSpec(
+        data=DataSpec(dataset="tiny", seed=0),
+        compressor=CompressorSpec(args.compressor, k_multiplier=8.0),
+        backend=args.backend,
+        rounds=args.rounds,
+        tol=1e-14,
+    )
+    d, n, n_i = spec.data.dims()
+    print(f"problem: {n} clients x {n_i} samples, d={d}")
 
-    cfg = FedNLConfig(compressor=args.compressor, k_multiplier=8.0, lam=1e-3,
-                      option="B")
-    res = run_fednl(z, cfg, rounds=args.rounds, tol=1e-14)
-    print(f"FedNL(B)/{args.compressor}: {res.rounds} rounds, "
-          f"||grad|| = {res.grad_norms[-1]:.2e}, "
-          f"solve {res.wall_time_s:.2f}s (init {res.init_time_s:.2f}s)")
-    for r in range(0, res.rounds, max(1, res.rounds // 10)):
-        print(f"  round {r:3d}  ||grad|| = {res.grad_norms[r]:.3e}")
+    # build the problem once, shared with the centralized baseline below
+    # (star-tcp workers rebuild their shards from the seed instead)
+    z = spec.data.build()
+    rep = solve(spec) if args.backend == "star-tcp" else solve(spec, z=z)
+    print(f"FedNL(B)/{args.compressor}@{rep.backend}: {rep.rounds} rounds, "
+          f"||grad|| = {rep.grad_norms[-1]:.2e}, "
+          f"solve {rep.wall_time_s:.2f}s (init {rep.init_time_s:.2f}s)")
+    for r in range(0, rep.rounds, max(1, rep.rounds // 10)):
+        print(f"  round {r:3d}  ||grad|| = {rep.records[r].grad_norm:.3e}")
 
     nb = newton_baseline(z, 1e-3)
-    err = float(jnp.linalg.norm(jnp.asarray(res.x) - jnp.asarray(nb.x)))
+    err = float(jnp.linalg.norm(jnp.asarray(rep.x) - jnp.asarray(nb.x)))
     print(f"distance to centralized Newton solution: {err:.2e}")
 
 

@@ -1,0 +1,78 @@
+"""CI gate: user-reachable entry points must go through repro.api.solve.
+
+    python scripts/check_api_migration.py
+
+Greps the user-facing layers (examples/, scripts/, benchmarks/, the launch
+CLIs) for direct calls to the legacy per-variant drivers.  Those drivers
+still exist — the api backends wrap them, repro.core stays the independent
+bit-parity reference, and tests may exercise them deliberately — but an
+*entry point* hand-building a legacy driver call is a regression to the
+pre-facade world (a new scenario would again mean a new driver), so it
+fails CI.  Allowlisted call sites are the wrapping layers themselves.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# entry-point layers that must speak ExperimentSpec/solve() only
+SCANNED = ["examples", "scripts", "benchmarks", "src/repro/launch"]
+
+# legacy per-variant drivers (the api backends are their only sanctioned
+# non-test callers; repro/ and tests/ are intentionally not scanned)
+LEGACY_CALLS = [
+    r"\brun_fednl\s*\(",
+    r"\brun_fednl_pp\s*\(",
+    r"\brun_loopback\s*\(",
+    r"\brun_pp_loopback\s*\(",
+    r"\brun_multiproc\s*\(",
+    r"\brun_multiproc_pp\s*\(",
+    r"\brun_star_master\s*\(",
+    r"\bmake_fednl_round\s*\(",
+    r"\bmake_fednl_ls_round\s*\(",
+    r"\bmake_fednl_pp_round\s*\(",
+    r"\bmake_sharded_fednl_round\s*\(",
+]
+
+# deliberate exceptions, each with a reason
+ALLOWLIST = {
+    # generates the reference pins the api parity suite is checked AGAINST —
+    # it must keep using the independent legacy driver, not the facade
+    "scripts/gen_golden_traces.py",
+    # self-check of the comm layer against the independent reference driver
+    "scripts/smoke_comm.py",
+    # this checker's own pattern table
+    "scripts/check_api_migration.py",
+    # the TCP driver the star-tcp backend wraps: run_multiproc[_pp] live
+    # here, and its master_fn closures call the star loops directly
+    "src/repro/launch/multiproc.py",
+}
+
+PATTERN = re.compile("|".join(LEGACY_CALLS))
+
+
+def main() -> int:
+    bad: list[str] = []
+    for layer in SCANNED:
+        for path in sorted((ROOT / layer).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in ALLOWLIST:
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if PATTERN.search(line) and not line.lstrip().startswith("#"):
+                    bad.append(f"{rel}:{lineno}: {line.strip()}")
+    if bad:
+        print("legacy driver calls reachable outside the facade "
+              "(migrate to repro.api.solve or allowlist with a reason):")
+        print("\n".join(f"  {b}" for b in bad))
+        return 1
+    print(f"api migration clean: {', '.join(SCANNED)} go through solve()")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,23 +1,28 @@
-import sys, time
+"""Single-node FedNL smoke: every compressor through the one solve() facade.
+
+    PYTHONPATH=src python scripts/smoke_fednl.py
+"""
 
 import jax
 
 jax.config.update("jax_enable_x64", True)
-import jax.numpy as jnp
-import numpy as np
 
-from repro.data import make_synthetic_logreg, add_intercept, partition_clients
-from repro.core import FedNLConfig, run_fednl, newton_baseline
+from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
+from repro.core import newton_baseline
 
-x, y = make_synthetic_logreg("tiny", seed=1)
-z = jnp.asarray(partition_clients(add_intercept(x), y, 8, 40, seed=1))
+spec = ExperimentSpec(
+    data=DataSpec(dataset="tiny", seed=1),
+    rounds=60,
+    tol=1e-14,
+    seed=0,
+)
+z = spec.data.build()
 print("z", z.shape, z.dtype)
 
 for comp in ["identity", "topk", "randk", "randseqk", "toplek", "natural"]:
-    cfg = FedNLConfig(compressor=comp, lam=1e-3, option="B")
-    res = run_fednl(z, cfg, rounds=60, tol=1e-14)
-    print(f"{comp:10s} rounds={res.rounds:3d} gn={res.grad_norms[-1]:.3e} "
-          f"f={res.f_vals[-1]:.8f} wall={res.wall_time_s:.2f}s init={res.init_time_s:.2f}s")
+    rep = solve(spec.replace(compressor=CompressorSpec(comp)), z=z)
+    print(f"{comp:10s} rounds={rep.rounds:3d} gn={rep.grad_norms[-1]:.3e} "
+          f"f={rep.f_vals[-1]:.8f} wall={rep.wall_time_s:.2f}s init={rep.init_time_s:.2f}s")
 
 nb = newton_baseline(z, 1e-3)
 print(f"newton     rounds={nb.rounds} gn={nb.grad_norms[-1]:.3e} f={nb.f_vals[-1]:.8f}")

@@ -1,0 +1,52 @@
+# The declarative experiment API (DESIGN.md §8): one frozen ExperimentSpec
+# describing algorithm x data x compressor x accounting x backend, one
+# solve(spec) facade returning the unified RunReport, and registries that
+# make algorithms/backends/compressors pluggable strategy objects.
+#
+# Import note: this package is imported *by* repro.core (the accounting
+# shims), so nothing here may import repro.core at module level — built-in
+# algorithm/backend registration happens lazily on first registry lookup.
+from repro.api.accounting import (
+    ACCOUNTINGS,
+    make_bits_fn,
+    payload_bits_fn,
+    wire_bits_fn,
+)
+from repro.api.facade import solve
+from repro.api.registry import (
+    Algorithm,
+    Backend,
+    get_algorithm,
+    get_backend,
+    list_algorithms,
+    list_backends,
+    register_algorithm,
+    register_backend,
+    register_compressor,
+)
+from repro.api.report import RoundRecord, RunReport
+from repro.api.spec import CompressorSpec, DataSpec, ExperimentSpec
+from repro.comm.transport import FaultSpec
+
+__all__ = [
+    "ACCOUNTINGS",
+    "Algorithm",
+    "Backend",
+    "CompressorSpec",
+    "DataSpec",
+    "ExperimentSpec",
+    "FaultSpec",
+    "RoundRecord",
+    "RunReport",
+    "get_algorithm",
+    "get_backend",
+    "list_algorithms",
+    "list_backends",
+    "make_bits_fn",
+    "payload_bits_fn",
+    "wire_bits_fn",
+    "register_algorithm",
+    "register_backend",
+    "register_compressor",
+    "solve",
+]

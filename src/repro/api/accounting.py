@@ -1,0 +1,58 @@
+"""Unified uplink bit accounting for the FedNL family (DESIGN.md §8).
+
+Single source of truth for the two accounting models every runner reports:
+
+  payload  Section-7 Hessian payload bits (``message_bits``), equal to the
+           measured wire payload bytes of ``repro.comm.wire``; the FedNL-PP
+           uplink additionally carries the (d + 1) FP64 ``dl || dg`` section
+           (``pp_message_bits``).
+  wire     full framed uplink bytes including the protocol header
+           (``frame_bits`` / ``pp_frame_bits``).
+
+Both are *exact* closed-form models of the byte streams the star transports
+actually emit (asserted against measured bytes in tests/test_comm.py and
+tests/test_comm_pp.py) and jit-compatible in ``sent_elems``.
+
+This module collapses the previously duplicated ``core.fednl.make_bits_fn``
+and ``core.fednl_pp.make_pp_bits_fn``; those names remain as thin deprecated
+re-exports for back-compat.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.compressors.core import FP_BITS, Compressor, message_bits
+
+ACCOUNTINGS = ("payload", "wire")
+
+
+def payload_bits_fn(comp: Compressor, d: int, pp: bool = False) -> Callable:
+    """Section-7 payload bits per uplink message (PP adds the dl/dg section)."""
+    if pp:
+        return lambda s_e: message_bits(comp, s_e) + (d + 1) * FP_BITS
+    return lambda s_e: message_bits(comp, s_e)
+
+
+def wire_bits_fn(comp: Compressor, d: int, pp: bool = False) -> Callable:
+    """Full framed uplink bits per message (protocol header + padding)."""
+    from repro.comm.wire import frame_bits, pp_frame_bits
+
+    if pp:
+        return lambda s_e: pp_frame_bits(comp, s_e, d)
+    return lambda s_e: frame_bits(comp, s_e, d)
+
+
+def make_bits_fn(
+    comp: Compressor, d: int, accounting: str, pp: bool = False
+) -> Callable:
+    """Per-message wire-bit model selected by ``ExperimentSpec.accounting``
+    (equivalently ``FedNLConfig.accounting``); ``pp`` selects the FedNL-PP
+    triple pricing."""
+    if accounting == "payload":
+        return payload_bits_fn(comp, d, pp)
+    if accounting == "wire":
+        return wire_bits_fn(comp, d, pp)
+    raise ValueError(
+        f"unknown accounting {accounting!r}; use {' | '.join(ACCOUNTINGS)}"
+    )

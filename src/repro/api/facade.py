@@ -1,0 +1,56 @@
+"""solve(spec): the one entry point of the repro.
+
+Validates the spec against the registries, builds (or accepts) the federated
+problem, dispatches to the backend strategy, and returns the unified
+:class:`RunReport`.  Everything an entry script used to re-plumb — config
+projection, compressor choice, bits accounting, metrics collection — happens
+behind this call.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.api.registry import get_algorithm, get_backend
+from repro.api.report import RunReport
+from repro.api.spec import ExperimentSpec
+
+
+def solve(spec: ExperimentSpec, z=None, x0=None) -> RunReport:
+    """Run one experiment described by ``spec``.
+
+    ``z`` optionally supplies a pre-built problem array ``(n_clients, n_i, d)``
+    — e.g. LM backbone features (examples/fednl_probe.py) or a LIBSVM
+    round-trip — overriding ``spec.data``.  ``x0`` optionally overrides the
+    zero initial iterate (local backend only; the wire protocols start every
+    run from the INIT broadcast of the zero iterate).
+    """
+    # FedNL is an FP64 algorithm end-to-end; idempotent when already enabled
+    jax.config.update("jax_enable_x64", True)
+    algo = get_algorithm(spec.algorithm)
+    backend = get_backend(spec.backend)
+    if not backend.supports(algo):
+        raise ValueError(
+            f"backend {backend.name!r} does not support algorithm "
+            f"{algo.name!r} (it only speaks the protocols it implements)"
+        )
+    if x0 is not None and not backend.supports_x0:
+        raise ValueError(
+            f"backend {backend.name!r} does not support an x0 override (the "
+            "wire protocols start every run from the INIT broadcast of the "
+            "zero iterate)"
+        )
+    if spec.fault is not None and not backend.supports_faults:
+        raise ValueError(
+            f"backend {backend.name!r} cannot inject faults; a FaultSpec "
+            "needs a wire backend (star-loopback / star-tcp) — running it "
+            "fault-free here would silently change the experiment"
+        )
+    if z is not None and not backend.needs_problem:
+        raise ValueError(
+            f"backend {backend.name!r} rebuilds the problem from spec.data in "
+            "its worker processes; a pre-built z cannot be shipped to it"
+        )
+    if z is None and backend.needs_problem:
+        z = spec.data.build()
+    return backend.run(spec, algo, z, x0)

@@ -1,0 +1,170 @@
+"""Pluggable strategy registries: algorithm x backend x compressor.
+
+The facade is extension-by-registration (the factorization FL frameworks
+argue for — algorithm family and execution backend vary independently):
+
+  * :func:`register_algorithm` — an :class:`Algorithm` bundles the round
+    builder + state init the *local* and *sharded* execution strategies
+    consume, plus the capability flags wire backends use to decide whether
+    they speak its protocol;
+  * :func:`register_backend` — a :class:`Backend` strategy object turns
+    ``(spec, algorithm, problem)`` into a :class:`RunReport`;
+  * :func:`register_compressor` — inserts a ``(T, k) -> Compressor`` factory
+    into the shared ``repro.compressors`` registry every backend reads.
+
+Built-ins self-register on first lookup (``repro.api.backends`` import), so
+``import repro.api`` stays cheap and cycle-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """A registered FedNL-family algorithm.
+
+    ``kind`` fixes the metrics/protocol shape:
+      "full"  every round reports (grad_norm, f, l) — Algorithms 1/2;
+      "pp"    partial participation: rounds report (x, l); the gradient is a
+              post-run diagnostic — Algorithm 3.
+
+    ``init(z, cfg, x0, seed) -> state`` and
+    ``make_round(z, cfg, tau) -> round_fn`` are the jittable pieces the
+    simulation-style backends drive (``tau`` is ignored by "full"
+    algorithms).  Wire backends (star-*) implement their own client/master
+    event loops and consult only ``kind``/``line_search``.
+    """
+
+    name: str
+    kind: str  # "full" | "pp"
+    init: Callable
+    make_round: Callable
+    line_search: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("full", "pp"):
+            raise ValueError(f"unknown algorithm kind {self.kind!r}")
+
+
+class Backend:
+    """Execution-strategy interface: wraps an existing driver, returns RunReport.
+
+    Subclasses implement :meth:`run`; ``supports`` declares which algorithms
+    the backend can execute (wire backends only speak the protocols they
+    implement).  ``needs_problem`` is False for backends whose workers
+    rebuild the data themselves (star-tcp: nothing crosses the wire).
+    """
+
+    name: str = "?"
+    needs_problem: bool = True
+    # capability flags the facade checks so unsupported spec fields fail
+    # loudly instead of being silently ignored (extensible per backend)
+    supports_faults: bool = False  # transport-level dropout/straggler injection
+    supports_x0: bool = False  # accepts an initial-iterate override
+
+    def supports(self, algo: Algorithm) -> bool:
+        return True
+
+    def run(self, spec, algo: Algorithm, z, x0):
+        raise NotImplementedError
+
+
+class Registry:
+    """A named string -> strategy map with lazy built-in population."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, object] = {}
+
+    def register(self, name: str, entry, *, overwrite: bool = False) -> None:
+        # load builtins first so user registrations always layer on top of
+        # them — registering (or overwriting) a builtin name before the
+        # first lookup must not make the lazy builtin import collide later
+        _ensure_builtins()
+        if not overwrite and name in self._entries:
+            raise ValueError(f"{self.kind} {name!r} already registered")
+        self._entries[name] = entry
+
+    def get(self, name: str):
+        _ensure_builtins()
+        if name not in self._entries:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{sorted(self._entries)}"
+            )
+        return self._entries[name]
+
+    def names(self) -> list[str]:
+        _ensure_builtins()
+        return sorted(self._entries)
+
+
+ALGORITHMS = Registry("algorithm")
+BACKENDS = Registry("backend")
+
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded
+    if not _builtins_loaded:
+        # set before the import as a re-entrancy guard (backends.py calls
+        # register_* at module level), but on failure reset the flag AND roll
+        # back partial registrations: a transient import error must not
+        # poison the registries — the retry re-executes the module top level
+        # (Python drops failed imports from sys.modules), so leftovers would
+        # turn every later lookup into 'already registered'
+        _builtins_loaded = True
+        before = {r: set(r._entries) for r in (ALGORITHMS, BACKENDS)}
+        try:
+            # registers the built-in algorithms and backends on import
+            import repro.api.backends  # noqa: F401
+        except BaseException:
+            _builtins_loaded = False
+            for reg, names in before.items():
+                for leftover in set(reg._entries) - names:
+                    del reg._entries[leftover]
+            raise
+
+
+def register_algorithm(algo: Algorithm, *, overwrite: bool = False) -> Algorithm:
+    ALGORITHMS.register(algo.name, algo, overwrite=overwrite)
+    return algo
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    BACKENDS.register(backend.name, backend, overwrite=overwrite)
+    return backend
+
+
+def register_compressor(
+    name: str, make: Callable, *, overwrite: bool = False
+) -> None:
+    """Register a ``(T, k) -> Compressor`` factory under ``name`` in the
+    shared compressor registry (visible to every algorithm and backend,
+    including the legacy ``get_compressor`` path)."""
+    from repro.compressors.core import COMPRESSORS
+    from repro.compressors.core import CompressorSpec as _CoreCompressorSpec
+
+    if not overwrite and name in COMPRESSORS:
+        raise ValueError(f"compressor {name!r} already registered")
+    COMPRESSORS[name] = _CoreCompressorSpec(name, make)
+
+
+def get_algorithm(name: str) -> Algorithm:
+    return ALGORITHMS.get(name)
+
+
+def get_backend(name: str) -> Backend:
+    return BACKENDS.get(name)
+
+
+def list_algorithms() -> list[str]:
+    return ALGORITHMS.names()
+
+
+def list_backends() -> list[str]:
+    return BACKENDS.names()

@@ -1,0 +1,143 @@
+"""The one result type every backend returns: RunReport.
+
+Replaces the per-variant result zoo (``RunResult`` / ``PPRunResult`` /
+``StarRunResult`` / ``StarPPRunResult`` — kept as deprecated shims) with a
+single streaming record: one :class:`RoundRecord` per round carrying the
+metrics *every* algorithm/backend pair can report (grad norm, f, l, sent
+bits under BOTH accounting models, participation), plus backend-specific
+measurements in ``extras``.
+
+Fields an algorithm does not expose are ``None`` rather than faked: FedNL-PP
+never computes the global gradient per round (doing so would defeat partial
+participation), so its records carry the iterate ``x`` and ``l`` instead and
+``final_grad_norm`` is a single post-run diagnostic.
+
+Bit-parity contract: for a spec that maps onto a legacy driver, the
+``grad_norms`` / ``sent_bits`` / ``x_hist`` views reproduce that driver's
+arrays bit-for-bit (tests/test_api.py pins this against the golden traces).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    """Metrics of one communication round, as uniform as the algorithms allow."""
+
+    round: int
+    grad_norm: float | None = None  # None for PP (server never sees the gradient)
+    f: float | None = None
+    l: float | None = None
+    sent_elems: int | None = None  # payload elements uplinked this round
+    sent_bits: int = 0  # under the spec's accounting model (parity-critical)
+    sent_bits_payload: int | None = None  # Section-7 payload model
+    sent_bits_wire: int | None = None  # full framed uplink model
+    ls_steps: int | None = None  # fednl-ls backtracking trials
+    x: np.ndarray | None = None  # PP: the model the server produced this round
+    participants: tuple[int, ...] | None = None  # PP: contributing client ids
+    dropped: tuple[int, ...] | None = None  # PP: clients that dropped
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What solve(spec) returns: final model, per-round records, accounting."""
+
+    spec: Any  # the ExperimentSpec that produced this run
+    algorithm: str
+    backend: str
+    x: np.ndarray  # final model
+    records: list[RoundRecord]
+    rounds: int
+    wall_time_s: float
+    init_time_s: float
+    # PP only: lazily evaluated post-run ||grad f(x)|| diagnostic (the server
+    # never sees the gradient; star-tcp additionally has to rebuild the
+    # problem to evaluate it, so the work runs on first access, not per solve)
+    final_grad_norm_fn: Callable[[], float] | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    extras: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_grad_norm(self) -> float | None:
+        """Post-run ||grad f(x)||: the last recorded grad norm for
+        full-participation runs, the (cached) lazy diagnostic for PP."""
+        if "_final_grad_norm" not in self.__dict__:
+            if self.final_grad_norm_fn is not None:
+                self._final_grad_norm = float(self.final_grad_norm_fn())
+                # drop the thunk once cached: its closure pins the problem
+                # array, which must not live as long as the report does
+                self.final_grad_norm_fn = None
+            elif self.records and self.records[-1].grad_norm is not None:
+                self._final_grad_norm = self.records[-1].grad_norm
+            else:
+                self._final_grad_norm = None
+        return self._final_grad_norm
+
+    # --- array views (the legacy result-dataclass fields) -----------------
+
+    def _column(self, name: str) -> np.ndarray:
+        return np.asarray([getattr(r, name) for r in self.records])
+
+    @property
+    def grad_norms(self) -> np.ndarray:
+        return self._column("grad_norm")
+
+    @property
+    def f_vals(self) -> np.ndarray:
+        return self._column("f")
+
+    @property
+    def l_vals(self) -> np.ndarray:
+        return self._column("l")
+
+    @property
+    def sent_bits(self) -> np.ndarray:
+        return self._column("sent_bits")
+
+    @property
+    def sent_bits_payload(self) -> np.ndarray:
+        return self._column("sent_bits_payload")
+
+    @property
+    def sent_bits_wire(self) -> np.ndarray:
+        return self._column("sent_bits_wire")
+
+    @property
+    def x_hist(self) -> np.ndarray:
+        """(rounds, d) per-round iterates (PP backends)."""
+        return np.asarray([r.x for r in self.records])
+
+    @property
+    def participants(self) -> list[list[int]]:
+        return [list(r.participants or ()) for r in self.records]
+
+    @property
+    def dropped(self) -> list[list[int]]:
+        return [list(r.dropped or ()) for r in self.records]
+
+    def summary(self) -> str:
+        """One-line human summary (what the CLI entrypoints print).
+
+        Deliberately cheap: reports the PP grad diagnostic only if a caller
+        already evaluated it — never forces the lazy compute (which may
+        rebuild the whole problem on star-tcp)."""
+        gn_cached = self.__dict__.get("_final_grad_norm")
+        gn = (
+            f"||grad||={self.records[-1].grad_norm:.3e}"
+            if self.records and self.records[-1].grad_norm is not None
+            else f"||grad(x_final)||={gn_cached:.3e}"
+            if gn_cached is not None
+            else "||grad||=n/a"
+        )
+        mb = float(np.sum(self.sent_bits)) / 8e6 if self.records else 0.0
+        return (
+            f"{self.algorithm}@{self.backend}: rounds={self.rounds} {gn} "
+            f"uplink={mb:.2f} MB ({self.spec.accounting}) "
+            f"solve={self.wall_time_s:.2f}s init={self.init_time_s:.2f}s"
+        )

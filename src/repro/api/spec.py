@@ -1,0 +1,246 @@
+"""Declarative experiment description: one frozen dataclass per run.
+
+``ExperimentSpec`` is the single configuration object of the repro —
+algorithm x compressor x accounting x backend x faults in one value.  It is
+deliberately *data only* (strings, numbers, nested frozen dataclasses): a
+spec can be printed, hashed into a cache key, serialized with
+``dataclasses.asdict``, swept over with ``dataclasses.replace``, and re-run
+on a different execution backend by changing nothing but the ``backend``
+field.  ``repro.api.solve`` turns a spec into a :class:`repro.api.RunReport`.
+
+The algorithmic hyper-parameters map 1:1 onto :class:`FedNLConfig` (the
+jit-level config the round builders consume); :meth:`ExperimentSpec.fednl_config`
+performs that projection, so the facade never re-plumbs individual fields.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.comm.transport import FaultSpec
+from repro.api.accounting import ACCOUNTINGS
+
+# named problem shapes live in repro.data.DATASET_SHAPES (paper Tables 1-3)
+
+
+def _algorithm_kind(name: str) -> str | None:
+    """Registered ``Algorithm.kind`` ("full" | "pp"), or None when unknown.
+
+    Spec validation must not pre-empt solve()'s loud unknown-algorithm error,
+    so unregistered names skip the kind-dependent checks here.  Consulting
+    the registry (not a hard-coded name list) keeps ``register_algorithm``
+    first-class: a custom kind="pp" algorithm gets tau/fault/tol validation
+    identical to the built-in fednl-pp.
+    """
+    from repro.api.registry import ALGORITHMS
+
+    try:
+        return ALGORITHMS.get(name).kind
+    except KeyError:
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Where the federated problem comes from.
+
+    Exactly one source:
+      * ``dataset`` — a named synthetic shape from ``repro.data.DATASET_SHAPES``
+        (w8a / a9a / phishing / tiny), regenerated deterministically from
+        ``seed`` (this is the only source the star-tcp backend supports:
+        workers rebuild their shard from the seed, no data crosses the wire);
+      * ``shape`` — an explicit ``(d, n_clients, n_i)`` synthetic instance;
+      * ``libsvm`` — a real LIBSVM file on disk, partitioned into
+        ``clients`` x ``per_client`` shards.
+
+    ``seed`` drives both the synthetic generator and the u.a.r. reshuffle of
+    ``partition_clients`` (the paper's preprocessing pipeline).
+    """
+
+    dataset: str = "tiny"
+    shape: tuple[int, int, int] | None = None
+    libsvm: str | None = None
+    clients: int | None = None
+    per_client: int | None = None
+    seed: int = 0
+
+    def dims(self) -> tuple[int, int, int]:
+        """(d, n_clients, n_i) of the problem this spec builds."""
+        if self.libsvm is not None:
+            if self.clients is None or self.per_client is None:
+                raise ValueError("libsvm data needs clients and per_client")
+            from repro.data import parse_libsvm
+
+            x, _ = parse_libsvm(self.libsvm)
+            return x.shape[1] + 1, self.clients, self.per_client
+        if self.shape is not None:
+            return tuple(self.shape)
+        from repro.data import DATASET_SHAPES
+
+        return DATASET_SHAPES[self.dataset]
+
+    def build(self):
+        """Materialize z: (n_clients, n_i, d) label-absorbed design matrices."""
+        import jax.numpy as jnp
+
+        from repro.data import (
+            DATASET_SHAPES,
+            add_intercept,
+            make_synthetic_logreg,
+            parse_libsvm,
+            partition_clients,
+        )
+
+        if self.libsvm is not None:
+            if self.clients is None or self.per_client is None:
+                raise ValueError("libsvm data needs clients and per_client")
+            x, y = parse_libsvm(self.libsvm)
+            n, n_i = self.clients, self.per_client
+        else:
+            name_or_dims = self.shape if self.shape is not None else self.dataset
+            if isinstance(name_or_dims, str):
+                _, n, n_i = DATASET_SHAPES[name_or_dims]
+            else:
+                _, n, n_i = name_or_dims
+            x, y = make_synthetic_logreg(name_or_dims, seed=self.seed)
+        return jnp.asarray(
+            partition_clients(add_intercept(x), y, n, n_i, seed=self.seed)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorSpec:
+    """Which compressor a spec runs, in paper units.
+
+    ``name`` must be registered (six built-ins; ``repro.api.register_compressor``
+    adds more).  ``k_multiplier`` is the paper's K = k_multiplier * d sparsity
+    budget; ``alpha`` overrides the compressor-recommended Hessian learning
+    rate (None keeps the scaled-form default of 1.0).
+    """
+
+    name: str = "topk"
+    k_multiplier: float = 8.0
+    alpha: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One declarative FedNL experiment: solve(spec) runs it anywhere.
+
+    Backends (``repro.api.register_backend`` adds more):
+      local          single-process simulation (vmapped clients, jitted round)
+      sharded        shard_mapped clients across mesh devices
+      star-loopback  full wire protocol over in-process loopback transport
+      star-tcp       master + one OS process per client over TCP localhost
+
+    Algorithms (``repro.api.register_algorithm`` adds more):
+      fednl / fednl-ls / fednl-pp (Algorithms 1-3 of the paper).
+    """
+
+    # --- objective -------------------------------------------------------
+    objective: str = "logreg"  # L2-regularized logistic regression
+    lam: float = 1e-3  # L2 regularization strength
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+
+    # --- algorithm -------------------------------------------------------
+    algorithm: str = "fednl"  # registered name: fednl | fednl-ls | fednl-pp
+    compressor: CompressorSpec = dataclasses.field(default_factory=CompressorSpec)
+    option: str = "B"  # master step rule: "A" (projection) | "B" (l-shift)
+    mu: float = 1e-3  # strong-convexity lower bound for Option A
+    hess0: str = "exact"  # "exact" | "zero" H_i^0 initialization
+    use_kernel: bool = False  # route Hessian oracle through the Pallas wrapper
+    # line-search parameters (fednl-ls)
+    ls_c: float = 0.49
+    ls_gamma: float = 0.5
+    ls_max_steps: int = 30
+    ls_tol: float = 1e-12
+
+    # --- participation (fednl-pp) ---------------------------------------
+    tau: int | None = None  # sampled clients per round (None -> n // 2)
+    on_dropout: str = "partial"  # "partial" | "resample" master fallback
+    fault: FaultSpec | None = None  # dropout/straggler injection
+
+    # --- accounting + execution backend ---------------------------------
+    accounting: str = "payload"  # "payload" | "wire" sent_bits model
+    backend: str = "local"  # registered backend name
+    aggregate: str = "dense_psum"  # sharded collective: dense_psum | sparse_allgather
+    devices: int | None = None  # sharded mesh size (None -> all local devices)
+    host: str = "127.0.0.1"  # star-tcp bind address
+
+    # --- run control -----------------------------------------------------
+    rounds: int = 100
+    # grad-norm early stop (0 = run all rounds).  Full-participation
+    # algorithms only: the PP server never sees the global gradient, so a
+    # nonzero tol on a PP spec is rejected rather than silently ignored.
+    tol: float = 0.0
+    seed: int = 0  # algorithm PRNG seed (client sampling + compression)
+
+    def __post_init__(self):
+        if self.objective != "logreg":
+            raise ValueError(
+                f"unknown objective {self.objective!r}; only 'logreg' is "
+                "implemented (the paper's problem class)"
+            )
+        if self.accounting not in ACCOUNTINGS:
+            raise ValueError(
+                f"unknown accounting {self.accounting!r}; use "
+                f"{' | '.join(ACCOUNTINGS)}"
+            )
+        if self.option not in ("A", "B"):
+            raise ValueError(f"unknown option {self.option!r}; use 'A' | 'B'")
+        if self.hess0 not in ("exact", "zero"):
+            raise ValueError(f"unknown hess0 {self.hess0!r}")
+        if self.on_dropout not in ("partial", "resample"):
+            raise ValueError(f"unknown on_dropout {self.on_dropout!r}")
+        if self.rounds < 0:
+            raise ValueError("rounds must be >= 0")
+        kind = _algorithm_kind(self.algorithm)
+        needs_tau = kind == "pp"
+        if kind == "full" and (self.tau is not None or self.fault is not None):
+            raise ValueError(
+                f"tau/fault only apply to partial participation, not "
+                f"{self.algorithm!r}"
+            )
+        if needs_tau and self.tol > 0.0:
+            raise ValueError(
+                "tol-based early stopping is undefined for partial "
+                "participation (the server never sees the global gradient); "
+                "bound the run with rounds instead"
+            )
+
+    # --- projections ------------------------------------------------------
+
+    def fednl_config(self):
+        """Project onto the jit-level :class:`repro.core.fednl.FedNLConfig`."""
+        from repro.core.fednl import FedNLConfig
+
+        return FedNLConfig(
+            compressor=self.compressor.name,
+            k_multiplier=self.compressor.k_multiplier,
+            alpha=self.compressor.alpha,
+            option=self.option,
+            mu=self.mu,
+            lam=self.lam,
+            hess0=self.hess0,
+            use_kernel=self.use_kernel,
+            ls_c=self.ls_c,
+            ls_gamma=self.ls_gamma,
+            ls_max_steps=self.ls_max_steps,
+            ls_tol=self.ls_tol,
+            accounting=self.accounting,
+        )
+
+    def tau_for(self, n_clients: int) -> int:
+        """Resolve the participation size (default: half the cohort)."""
+        tau = self.tau if self.tau is not None else max(1, n_clients // 2)
+        if not 0 < tau <= n_clients:
+            raise ValueError(f"need 0 < tau <= n, got tau={tau}, n={n_clients}")
+        return tau
+
+    def replace(self, **changes: Any) -> "ExperimentSpec":
+        """Functional update — ``spec.replace(backend='star-tcp')`` re-runs the
+        identical experiment on another backend."""
+        return dataclasses.replace(self, **changes)
+
+

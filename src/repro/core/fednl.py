@@ -34,7 +34,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.compressors import get_compressor, Compressor
-from repro.compressors.core import message_bits
 from repro.linalg import (
     pack_triu,
     unpack_triu,
@@ -69,6 +68,14 @@ class FedNLConfig:
     # to the measured wire payload — see repro.comm.wire); "wire" = full
     # framed uplink bytes incl. protocol header + grad + l + f sections
     accounting: str = "payload"
+
+    def __post_init__(self):
+        # inline (not repro.api.ACCOUNTINGS): config construction must not
+        # pull the api package into the core layer as a side effect
+        if self.accounting not in ("payload", "wire"):
+            raise ValueError(
+                f"unknown accounting {self.accounting!r}; use 'payload' | 'wire'"
+            )
 
     def k_for(self, d: int) -> int:
         return max(1, min(triu_size(d), int(self.k_multiplier * d)))
@@ -117,23 +124,17 @@ class RoundMetrics(NamedTuple):
     f: jax.Array
     l: jax.Array
     sent_elems: jax.Array  # total payload elements uplinked this round
-    sent_bits: jax.Array  # total wire bits uplinked this round (Section 7 encodings)
+    sent_bits: jax.Array  # total uplink bits under FedNLConfig.accounting
+    sent_bits_payload: jax.Array  # Section-7 payload model (repro.api.accounting)
+    sent_bits_wire: jax.Array  # full framed uplink model
 
 
 def make_bits_fn(comp: Compressor, d: int, accounting: str) -> Callable:
-    """Per-message wire-bit model selected by FedNLConfig.accounting.
+    """Deprecated alias of :func:`repro.api.accounting.make_bits_fn` (non-PP
+    form), kept for back-compat; new code should import from repro.api."""
+    from repro.api.accounting import make_bits_fn as _make_bits_fn
 
-    Both options are *exact* models of the repro.comm wire format (asserted
-    against measured bytes in tests/test_comm.py), jit-compatible because the
-    encodings have closed-form sizes in sent_elems.
-    """
-    if accounting == "payload":
-        return lambda s_e: message_bits(comp, s_e)
-    if accounting == "wire":
-        from repro.comm.wire import frame_bits
-
-        return lambda s_e: frame_bits(comp, s_e, d)
-    raise ValueError(f"unknown accounting {accounting!r}; use 'payload' | 'wire'")
+    return _make_bits_fn(comp, d, accounting, pp=False)
 
 
 def client_round(
@@ -182,7 +183,10 @@ def make_fednl_round(
     n_clients, _, d = z.shape
     comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
-    bits_fn = make_bits_fn(comp, d, cfg.accounting)
+    from repro.api.accounting import payload_bits_fn, wire_bits_fn
+
+    pay_fn = payload_bits_fn(comp, d)
+    wire_fn = wire_bits_fn(comp, d)
 
     def round_fn(state: FedNLState) -> tuple[FedNLState, RoundMetrics]:
         key, sub = jax.random.split(state.key)
@@ -202,13 +206,16 @@ def make_fednl_round(
         h_global_new = state.h_global + alpha * s
 
         sent_total = jnp.sum(sent_i)
-        bits_total = jnp.sum(jax.vmap(bits_fn)(sent_i))
+        bits_payload = jnp.sum(jax.vmap(pay_fn)(sent_i))
+        bits_wire = jnp.sum(jax.vmap(wire_fn)(sent_i))
         metrics = RoundMetrics(
             grad_norm=jnp.linalg.norm(grad),
             f=f,
             l=l,
             sent_elems=sent_total,
-            sent_bits=bits_total,
+            sent_bits=bits_payload if cfg.accounting == "payload" else bits_wire,
+            sent_bits_payload=bits_payload,
+            sent_bits_wire=bits_wire,
         )
         new_state = FedNLState(
             x=x_new,

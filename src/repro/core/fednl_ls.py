@@ -27,8 +27,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.accounting import payload_bits_fn, wire_bits_fn
 from repro.compressors import get_compressor
-from repro.core.fednl import FedNLConfig, FedNLState, client_round, make_bits_fn
+from repro.core.fednl import FedNLConfig, FedNLState, client_round
 from repro.linalg import (
     triu_size,
     unpack_triu,
@@ -44,7 +45,9 @@ class LSRoundMetrics(NamedTuple):
     l: jax.Array
     ls_steps: jax.Array
     sent_elems: jax.Array
-    sent_bits: jax.Array
+    sent_bits: jax.Array  # under FedNLConfig.accounting
+    sent_bits_payload: jax.Array
+    sent_bits_wire: jax.Array
 
 
 def make_fednl_ls_round(
@@ -53,7 +56,8 @@ def make_fednl_ls_round(
     n_clients, _, d = z.shape
     comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
-    bits_fn = make_bits_fn(comp, d, cfg.accounting)
+    pay_fn = payload_bits_fn(comp, d)
+    wire_fn = wire_bits_fn(comp, d)
 
     def f_global(x: jax.Array) -> jax.Array:
         return jnp.mean(jax.vmap(lambda zi: logreg_f(zi, x, cfg.lam))(z))
@@ -105,13 +109,17 @@ def make_fednl_ls_round(
         x_new = state.x + t_final * direction
         h_global_new = state.h_global + alpha * s
 
+        bits_payload = jnp.sum(jax.vmap(pay_fn)(sent_i))
+        bits_wire = jnp.sum(jax.vmap(wire_fn)(sent_i))
         metrics = LSRoundMetrics(
             grad_norm=grad_norm,
             f=f0,
             l=l,
             ls_steps=steps,
             sent_elems=jnp.sum(sent_i),
-            sent_bits=jnp.sum(jax.vmap(bits_fn)(sent_i)),
+            sent_bits=bits_payload if cfg.accounting == "payload" else bits_wire,
+            sent_bits_payload=bits_payload,
+            sent_bits_wire=bits_wire,
         )
         new_state = FedNLState(
             x=x_new,

@@ -30,7 +30,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.compressors import get_compressor, Compressor
-from repro.compressors.core import FP_BITS, message_bits
 from repro.core.fednl import FedNLConfig, _client_oracles
 from repro.linalg import (
     triu_size,
@@ -55,8 +54,11 @@ class FedNLPPState(NamedTuple):
 class PPRoundMetrics(NamedTuple):
     x: jax.Array  # the model the server just produced
     l: jax.Array
+    idx: jax.Array  # (tau,) sampled client ids this round
     sent_elems: jax.Array
-    sent_bits: jax.Array
+    sent_bits: jax.Array  # under FedNLConfig.accounting
+    sent_bits_payload: jax.Array
+    sent_bits_wire: jax.Array
 
 
 def fednl_pp_init(
@@ -91,22 +93,11 @@ def fednl_pp_init(
 
 
 def make_pp_bits_fn(comp: Compressor, d: int, accounting: str) -> Callable:
-    """Per-uplink wire-bit model for the PP triple, selected by
-    FedNLConfig.accounting — the PP analogue of fednl.make_bits_fn.
+    """Deprecated alias of :func:`repro.api.accounting.make_bits_fn` with
+    ``pp=True``, kept for back-compat; new code should import from repro.api."""
+    from repro.api.accounting import make_bits_fn as _make_bits_fn
 
-    "payload": Section-7 Hessian bits + the (d + 1) FP64 dl/dg section
-    (== wire.pp_message_bits, the measured PP_UPDATE payload).  "wire": the
-    full framed PP_UPDATE incl. protocol header (== wire.pp_frame_bits).
-    Both jit-compatible closed forms, asserted against measured bytes in
-    tests/test_comm_pp.py.
-    """
-    if accounting == "payload":
-        return lambda s_e: message_bits(comp, s_e) + (d + 1) * FP_BITS
-    if accounting == "wire":
-        from repro.comm.wire import pp_frame_bits
-
-        return lambda s_e: pp_frame_bits(comp, s_e, d)
-    raise ValueError(f"unknown accounting {accounting!r}; use 'payload' | 'wire'")
+    return _make_bits_fn(comp, d, accounting, pp=True)
 
 
 def make_fednl_pp_round(
@@ -116,7 +107,10 @@ def make_fednl_pp_round(
     t = triu_size(d)
     comp = get_compressor(cfg.compressor, t, cfg.k_for(d))
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
-    bits_fn = make_pp_bits_fn(comp, d, cfg.accounting)
+    from repro.api.accounting import payload_bits_fn, wire_bits_fn
+
+    pay_fn = payload_bits_fn(comp, d, pp=True)
+    wire_fn = wire_bits_fn(comp, d, pp=True)
     eye = jnp.eye(d)
 
     def participate(zi, h_i, x, ck):
@@ -162,13 +156,18 @@ def make_fednl_pp_round(
             key=key,
             round=state.round + 1,
         )
+        # each message is the Algorithm-3 triple S_i || dl_i || dg_i; the
+        # bit models price the whole uplink (repro.api.accounting)
+        bits_payload = jnp.sum(jax.vmap(pay_fn)(sent_sel))
+        bits_wire = jnp.sum(jax.vmap(wire_fn)(sent_sel))
         metrics = PPRoundMetrics(
             x=x,
             l=state.l_global,
+            idx=idx,
             sent_elems=jnp.sum(sent_sel),
-            # each message is the Algorithm-3 triple S_i || dl_i || dg_i;
-            # bits_fn prices the whole uplink per cfg.accounting
-            sent_bits=jnp.sum(jax.vmap(bits_fn)(sent_sel)),
+            sent_bits=bits_payload if cfg.accounting == "payload" else bits_wire,
+            sent_bits_payload=bits_payload,
+            sent_bits_wire=bits_wire,
         )
         return new_state, metrics
 

@@ -5,6 +5,13 @@ once and iterates in Python, recording per-round history (grad norm, f, bits)
 with optional early stopping at a gradient-norm tolerance — the analogue of
 the paper's `bin_fednl_local` runner.
 
+Entry points should use ``repro.api.solve`` (the declarative facade; its
+local backend replays these loops op-for-op).  `run_fednl` / `run_fednl_pp`
+deliberately stay as *independent reference implementations*: the api parity
+suite (tests/test_api.py) and the star-protocol tests prove the facade and
+the wire paths against them bit-for-bit, so they must not themselves route
+through the facade.
+
 Baselines (the paper compares against CVXPY solvers / Spark / Ray; those are
 unavailable offline, so we implement the relevant solver archetypes directly):
   * `newton_baseline` — centralized exact Newton with backtracking (the

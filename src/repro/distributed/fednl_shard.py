@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.api.accounting import payload_bits_fn, wire_bits_fn
 from repro.compressors import get_compressor
 from repro.compressors.core import scatter_add_sparse
 from repro.core.fednl import (
@@ -43,7 +44,6 @@ from repro.core.fednl import (
     FedNLState,
     client_round,
     fednl_init,
-    make_bits_fn,
     master_step,
 )
 from repro.linalg import triu_size, frob_norm_from_packed
@@ -84,7 +84,8 @@ def make_sharded_fednl_step(
     t = triu_size(d)
     comp = get_compressor(cfg.compressor, t, cfg.k_for(d))
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
-    bits_fn = make_bits_fn(comp, d, cfg.accounting)
+    pay_fn = payload_bits_fn(comp, d)
+    wire_fn = wire_bits_fn(comp, d)
     n_dev = mesh.shape[axis]
     if n_clients % n_dev:
         raise ValueError(f"n_clients={n_clients} not divisible by mesh axis {axis}={n_dev}")
@@ -132,20 +133,22 @@ def make_sharded_fednl_step(
         l = jax.lax.psum(jnp.sum(l_i), axis) / n_clients
         f = jax.lax.psum(jnp.sum(f_i), axis) / n_clients
         sent = jax.lax.psum(jnp.sum(sent_i), axis)
-        # uplink wire bits under the Section-7 encodings (repro.comm.wire);
+        # uplink wire bits under the Section-7 encodings (repro.api.accounting);
         # cfg.accounting selects payload-only vs full-frame accounting
-        bits = jax.lax.psum(jnp.sum(jax.vmap(bits_fn)(sent_i)), axis)
+        bits_payload = jax.lax.psum(jnp.sum(jax.vmap(pay_fn)(sent_i)), axis)
+        bits_wire = jax.lax.psum(jnp.sum(jax.vmap(wire_fn)(sent_i)), axis)
 
         x_new = master_step(x, h_global, grad, l, cfg)
         h_global_new = h_global + alpha * s
         gn = jnp.linalg.norm(grad)
-        return h_loc_new, x_new, h_global_new, gn, f, l, sent, bits
+        return (h_loc_new, x_new, h_global_new, gn, f, l, sent,
+                bits_payload, bits_wire)
 
     return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(), P(), P()),
-        out_specs=(P(axis), P(), P(), P(), P(), P(), P(), P()),
+        out_specs=(P(axis), P(), P(), P(), P(), P(), P(), P(), P()),
         check_rep=False,
     )
 
@@ -162,14 +165,18 @@ def make_sharded_fednl_round(
 
     def round_fn(state: FedNLState):
         key, sub = jax.random.split(state.key)
-        h_loc_new, x_new, h_global_new, gn, f, l, sent, bits = sharded(
+        (h_loc_new, x_new, h_global_new, gn, f, l, sent,
+         bits_payload, bits_wire) = sharded(
             z, state.h_local, state.x, state.h_global, sub
         )
         new_state = FedNLState(
             x=x_new, h_local=h_loc_new, h_global=h_global_new,
             key=key, round=state.round + 1,
         )
+        bits = bits_payload if cfg.accounting == "payload" else bits_wire
         return new_state, {"grad_norm": gn, "f": f, "l": l,
-                           "sent_elems": sent, "sent_bits": bits}
+                           "sent_elems": sent, "sent_bits": bits,
+                           "sent_bits_payload": bits_payload,
+                           "sent_bits_wire": bits_wire}
 
     return round_fn

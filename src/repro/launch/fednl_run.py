@@ -4,25 +4,21 @@
         --dataset w8a --compressor topk --rounds 1000 --tol 1e-15
 
 Accepts either a named synthetic dataset shape (w8a/a9a/phishing/tiny) or a
-real LIBSVM file via --libsvm PATH --clients N --per-client M.
+real LIBSVM file via --libsvm PATH --clients N --per-client M.  A thin shell
+around ``repro.api.solve``: the flags populate one declarative
+ExperimentSpec; ``--backend`` re-runs the identical experiment elsewhere.
 """
 
 import argparse
 
-import jax
-
-jax.config.update("jax_enable_x64", True)
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import FedNLConfig, run_fednl
-from repro.data import (
-    DATASET_SHAPES,
-    make_synthetic_logreg,
-    parse_libsvm,
-    add_intercept,
-    partition_clients,
+from repro.api import (
+    CompressorSpec,
+    DataSpec,
+    ExperimentSpec,
+    list_backends,
+    solve,
 )
+from repro.data import DATASET_SHAPES
 
 
 def main():
@@ -38,33 +34,42 @@ def main():
     ap.add_argument("--rounds", type=int, default=1000)
     ap.add_argument("--tol", type=float, default=0.0)
     ap.add_argument("--line-search", action="store_true")
+    ap.add_argument("--backend", default="local", choices=list_backends())
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    if args.libsvm:
-        x, y = parse_libsvm(args.libsvm)
-        n, n_i = args.clients, args.per_client
-        if n is None or n_i is None:
-            raise SystemExit("--libsvm requires --clients and --per-client")
-    else:
-        d, n, n_i = DATASET_SHAPES[args.dataset]
-        x, y = make_synthetic_logreg(args.dataset, seed=args.seed)
-    z = jnp.asarray(partition_clients(add_intercept(x), y, n, n_i, seed=args.seed))
-    print(f"problem: n={n} clients, n_i={n_i}, d={z.shape[-1]}")
-
-    cfg = FedNLConfig(
-        compressor=args.compressor,
-        k_multiplier=args.k_multiplier,
-        option=args.option,
+    if args.libsvm and (args.clients is None or args.per_client is None):
+        raise SystemExit("--libsvm requires --clients and --per-client")
+    spec = ExperimentSpec(
         lam=args.lam,
+        data=DataSpec(
+            dataset=args.dataset,
+            libsvm=args.libsvm,
+            clients=args.clients,
+            per_client=args.per_client,
+            seed=args.seed,
+        ),
+        algorithm="fednl-ls" if args.line_search else "fednl",
+        compressor=CompressorSpec(args.compressor, args.k_multiplier),
+        option=args.option,
         mu=args.lam,
+        backend=args.backend,
+        rounds=args.rounds,
+        tol=args.tol,
+        seed=args.seed,
     )
-    res = run_fednl(z, cfg, rounds=args.rounds, tol=args.tol,
-                    line_search=args.line_search, seed=args.seed)
-    print(f"rounds={res.rounds} ||grad||={res.grad_norms[-1]:.3e} "
-          f"f={res.f_vals[-1]:.8f}")
-    print(f"init={res.init_time_s:.2f}s solve={res.wall_time_s:.2f}s "
-          f"uplink={np.sum(res.sent_bits) / 8e6:.1f} MB")
+    if args.libsvm and args.backend != "star-tcp":
+        # parse the LIBSVM file once and hand the problem straight to solve
+        # (star-tcp rebuilds in its workers and rejects libsvm anyway)
+        z = spec.data.build()
+        n, n_i, d = z.shape
+        print(f"problem: n={n} clients, n_i={n_i}, d={d}")
+        rep = solve(spec, z=z)
+    else:
+        d, n, n_i = spec.data.dims()
+        print(f"problem: n={n} clients, n_i={n_i}, d={d}")
+        rep = solve(spec)
+    print(rep.summary())
 
 
 if __name__ == "__main__":

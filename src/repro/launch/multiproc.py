@@ -33,22 +33,11 @@ from repro.core.fednl import FedNLConfig
 
 
 def _build_problem(dataset: str, shape, seed: int):
-    import jax.numpy as jnp
+    # one data pipeline for every backend: the shards a TCP worker builds
+    # must be bit-identical to what solve() materializes everywhere else
+    from repro.api.spec import DataSpec
 
-    from repro.data import (
-        DATASET_SHAPES,
-        add_intercept,
-        make_synthetic_logreg,
-        partition_clients,
-    )
-
-    name_or_dims = shape if shape is not None else dataset
-    if isinstance(name_or_dims, str):
-        d, n, n_i = DATASET_SHAPES[name_or_dims]
-    else:
-        d, n, n_i = name_or_dims
-    x, y = make_synthetic_logreg(name_or_dims, seed=seed)
-    return jnp.asarray(partition_clients(add_intercept(x), y, n, n_i, seed=seed))
+    return DataSpec(dataset=dataset or "tiny", shape=shape, seed=seed).build()
 
 
 def _client_entry(
@@ -62,6 +51,7 @@ def _client_entry(
     port: int,
     pp: bool = False,
     fault_dict: dict | None = None,
+    data_seed: int | None = None,
 ) -> None:
     """Client process: build shard, dial the master, serve rounds."""
     import jax
@@ -69,7 +59,7 @@ def _client_entry(
     jax.config.update("jax_enable_x64", True)  # FedNL is FP64 end-to-end
     from repro.comm.transport import connect_to_master
 
-    z = _build_problem(dataset, shape, seed)
+    z = _build_problem(dataset, shape, seed if data_seed is None else data_seed)
     conn = connect_to_master(host, port, client_id)
     if pp:
         from repro.comm.star_pp import StarPPClient
@@ -103,17 +93,20 @@ def _run_with_clients(
     master_fn,
     pp: bool = False,
     fault_dict: dict | None = None,
+    data_seed: int | None = None,
 ):
     """Shared scaffold: bind, spawn one process per client, run, join.
 
     ``master_fn(conns, d) -> result`` is the hub loop (full or PP).
+    ``data_seed`` decouples the synthetic-data seed from the algorithm PRNG
+    seed (default: same, the historical behaviour).
     """
     import jax
 
     jax.config.update("jax_enable_x64", True)
     from repro.comm.transport import TCPMaster
 
-    z = _build_problem(dataset, shape, seed)
+    z = _build_problem(dataset, shape, seed if data_seed is None else data_seed)
     n_clients, _, d = z.shape
 
     master = TCPMaster(n_clients, host=host)
@@ -139,6 +132,7 @@ def _run_with_clients(
                     master.port,
                     pp,
                     fault_dict,
+                    data_seed,
                 ),
                 daemon=True,
             )
@@ -170,17 +164,22 @@ def run_multiproc(
     tol: float = 0.0,
     seed: int = 0,
     host: str = "127.0.0.1",
+    data_seed: int | None = None,
 ):
     """Library entry: spawn client processes, run the master loop, join.
 
     Returns the :class:`repro.comm.star.StarRunResult` of the master.
+    (Prefer ``repro.api.solve`` with ``backend='star-tcp'`` — this is the
+    driver that backend wraps.)
     """
     from repro.comm.star import run_star_master
 
     def master_fn(conns, d):
         return run_star_master(conns, d, cfg, rounds=rounds, tol=tol)
 
-    return _run_with_clients(cfg, dataset, shape, seed, host, master_fn)
+    return _run_with_clients(
+        cfg, dataset, shape, seed, host, master_fn, data_seed=data_seed
+    )
 
 
 def run_multiproc_pp(
@@ -193,11 +192,14 @@ def run_multiproc_pp(
     host: str = "127.0.0.1",
     on_dropout: str = "partial",
     fault=None,
+    data_seed: int | None = None,
 ):
     """FedNL-PP over TCP localhost: tau-of-n sampling per round, optional
     fault injection (``fault``: a :class:`repro.comm.transport.FaultSpec`).
 
     Returns the :class:`repro.comm.star_pp.StarPPRunResult` of the master.
+    (Prefer ``repro.api.solve`` with ``backend='star-tcp'`` — this is the
+    driver that backend wraps.)
     """
     from repro.comm.star_pp import StarPPMaster
 
@@ -216,55 +218,14 @@ def run_multiproc_pp(
         master_fn,
         pp=True,
         fault_dict=dataclasses.asdict(fault) if fault is not None else None,
+        data_seed=data_seed,
     )
-
-
-def _main_pp(args, cfg: FedNLConfig) -> None:
-    from repro.comm.transport import FaultSpec
-
-    fault = None
-    if args.drop_prob > 0 or args.straggler_prob > 0:
-        fault = FaultSpec(
-            drop_prob=args.drop_prob,
-            straggler_prob=args.straggler_prob,
-            straggler_delay_s=args.straggler_delay,
-            seed=args.seed,
-        )
-    res = run_multiproc_pp(
-        cfg,
-        tau=args.tau,
-        dataset=args.dataset,
-        rounds=args.rounds,
-        seed=args.seed,
-        on_dropout=args.on_dropout,
-        fault=fault,
-    )
-    drops = sum(len(d) for d in res.dropped)
-    parts = sum(len(p) for p in res.participants)
-    kb = res.measured_frame_bytes.sum() / 1e3
-    print(f"rounds={res.rounds} tau={args.tau} contributions={parts} "
-          f"drops={drops} wall={res.wall_time_s:.2f}s")
-    print(f"uplink: {kb:.1f} kB framed, payload bits measured=="
-          f"{'analytic' if (res.measured_payload_bits == res.sent_bits).all() else 'MISMATCH'}")
-
-    if args.check:
-        import jax.numpy as jnp
-        import numpy as np
-
-        from repro.core import eval_full, run_fednl_pp
-
-        z = _build_problem(args.dataset, None, args.seed)
-        _, g = eval_full(z, jnp.asarray(res.x), cfg.lam)
-        print(f"||grad(x_final)||={float(jnp.linalg.norm(g)):.3e}")
-        if fault is None:
-            ref = run_fednl_pp(z, cfg, tau=args.tau, rounds=args.rounds,
-                               seed=args.seed)
-            dx = float(np.max(np.abs(res.x_hist - ref.x_hist)))
-            print(f"vs single-node PP: max|x_tcp - x_sim|={dx:.3e} "
-                  "(fault-free runs are bit-identical; target 0)")
 
 
 def main() -> None:
+    """CLI: build one declarative ExperimentSpec, solve it on star-tcp, and
+    (with --check) re-solve the *same spec* on the local backend — the
+    cross-backend reproducibility claim as a one-field change."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--algo", default="fednl", choices=["fednl", "fednl-pp"])
     ap.add_argument("--dataset", default="tiny")
@@ -287,45 +248,75 @@ def main() -> None:
     ap.add_argument("--straggler-delay", type=float, default=0.05)
     args = ap.parse_args()
 
-    cfg = FedNLConfig(
-        compressor=args.compressor,
-        k_multiplier=args.k_multiplier,
-        option=args.option,
+    import numpy as np
+
+    from repro.api import (
+        CompressorSpec,
+        DataSpec,
+        ExperimentSpec,
+        FaultSpec,
+        solve,
+    )
+
+    pp = args.algo == "fednl-pp"
+    fault = None
+    if pp and (args.drop_prob > 0 or args.straggler_prob > 0):
+        fault = FaultSpec(
+            drop_prob=args.drop_prob,
+            straggler_prob=args.straggler_prob,
+            straggler_delay_s=args.straggler_delay,
+            seed=args.seed,
+        )
+    spec = ExperimentSpec(
         lam=args.lam,
+        data=DataSpec(dataset=args.dataset, seed=args.seed),
+        algorithm=args.algo,
+        compressor=CompressorSpec(args.compressor, args.k_multiplier),
+        option=args.option,
         mu=args.lam,
+        tau=args.tau if (pp and args.tau > 0) else None,
+        on_dropout=args.on_dropout,
+        fault=fault,
+        backend="star-tcp",
+        rounds=args.rounds,
+        tol=args.tol,
+        seed=args.seed,
     )
-    if args.algo == "fednl-pp":
-        if args.tau <= 0:
-            from repro.data import DATASET_SHAPES
-
-            args.tau = max(1, DATASET_SHAPES[args.dataset][1] // 2)
-        _main_pp(args, cfg)
-        return
-
-    res = run_multiproc(
-        cfg, dataset=args.dataset, rounds=args.rounds, tol=args.tol, seed=args.seed
-    )
-    if res.rounds == 0:
+    rep = solve(spec)
+    if rep.rounds == 0:
         print("rounds=0 (nothing to run; INIT/STOP handshake only)")
         return
-    mb = res.measured_frame_bytes.sum() / 1e6
-    print(f"rounds={res.rounds} ||grad||={res.grad_norms[-1]:.3e} "
-          f"f={res.f_vals[-1]:.8f} wall={res.wall_time_s:.2f}s")
-    print(f"uplink: measured {mb:.2f} MB framed, "
-          f"payload bits measured=={'analytic' if (res.measured_payload_bits == res.sent_bits).all() else 'MISMATCH'}")
+    print(rep.summary())
+    frame_kb = rep.extras["measured_frame_bytes"].sum() / 1e3
+    bits_match = (rep.extras["measured_payload_bits"] == rep.sent_bits_payload).all()
+    print(f"uplink: measured {frame_kb:.1f} kB framed, payload bits "
+          f"measured=={'analytic' if bits_match else 'MISMATCH'}")
+    if pp:
+        parts = sum(len(p) for p in rep.participants)
+        drops = sum(len(d) for d in rep.dropped)
+        print(f"tau={rep.extras['tau']} contributions={parts} drops={drops}")
 
     if args.check:
-        import numpy as np
-
-        from repro.core import run_fednl
-
-        z = _build_problem(args.dataset, None, args.seed)
-        ref = run_fednl(z, cfg, rounds=args.rounds, tol=args.tol, seed=args.seed)
-        r = min(res.rounds, ref.rounds)
-        dx = float(np.max(np.abs(res.x - ref.x)))
-        dg = float(np.max(np.abs(res.grad_norms[:r] - ref.grad_norms[:r])))
-        print(f"vs single-node: max|x_tcp - x_sim|={dx:.3e} "
-              f"max|gn_tcp - gn_sim|={dg:.3e} (paper target <= 1e-8)")
+        if pp:
+            # the PP diagnostic rebuilds the problem on the master; only pay
+            # for it when the user asked for the parity check
+            print(f"||grad(x_final)||={rep.final_grad_norm:.3e}")
+        if pp and fault is not None:
+            # no fault-free reference to compare a faulted trajectory against
+            print("--check skipped: faulted PP runs diverge from the "
+                  "fault-free simulation by design")
+            return
+        ref = solve(spec.replace(backend="local", fault=None))
+        if pp:
+            dx = float(np.max(np.abs(rep.x_hist - ref.x_hist)))
+            print(f"vs single-node PP: max|x_tcp - x_sim|={dx:.3e} "
+                  "(fault-free runs are bit-identical; target 0)")
+        else:
+            r = min(rep.rounds, ref.rounds)
+            dx = float(np.max(np.abs(rep.x - ref.x)))
+            dg = float(np.max(np.abs(rep.grad_norms[:r] - ref.grad_norms[:r])))
+            print(f"vs single-node: max|x_tcp - x_sim|={dx:.3e} "
+                  f"max|gn_tcp - gn_sim|={dg:.3e} (paper target <= 1e-8)")
 
 
 if __name__ == "__main__":

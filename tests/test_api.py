@@ -1,0 +1,367 @@
+"""repro.api: the declarative ExperimentSpec -> solve() facade.
+
+Parity contract (the point of the facade): solve(spec) adds *zero* numerical
+surface on top of the drivers it wraps —
+
+  * local + star-loopback backends reproduce tests/golden/fednl_traces.json
+    BIT-for-bit (float.hex comparison, same as test_golden_traces.py);
+  * the PP backends reproduce ``run_fednl_pp`` bit-for-bit fault-free, and
+    the faulted star path reproduces ``run_pp_loopback`` with the same
+    FaultSpec exactly;
+  * a spec re-runs on a different backend by changing only the ``backend``
+    field (the acceptance criterion of the API redesign).
+
+Plus registry contracts: unknown names fail loudly, registration makes
+custom algorithms/backends/compressors first-class.
+"""
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CompressorSpec,
+    DataSpec,
+    ExperimentSpec,
+    FaultSpec,
+    list_algorithms,
+    list_backends,
+    register_compressor,
+    solve,
+)
+from repro.api.accounting import make_bits_fn as unified_bits_fn
+from repro.api.registry import Algorithm, get_algorithm, get_backend
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "fednl_traces.json"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return json.loads(GOLDEN.read_text())
+
+
+def golden_spec(comp: str, rounds: int) -> ExperimentSpec:
+    """The exact problem/config the golden traces pin (see gen_golden_traces)."""
+    return ExperimentSpec(
+        data=DataSpec(dataset="tiny", seed=1),
+        compressor=CompressorSpec(comp),
+        rounds=rounds,
+        seed=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def z_tiny():
+    return DataSpec(dataset="tiny", seed=1).build()
+
+
+# ---------------------------------------------------------------------------
+# golden-trace parity: local + star-loopback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["local", "star-loopback"])
+@pytest.mark.parametrize("comp", ["topk", "randseqk", "toplek"])
+def test_solve_matches_golden_bitwise(golden, comp, backend):
+    spec = golden_spec(comp, golden["rounds"]).replace(backend=backend)
+    rep = solve(spec)
+    got_gn = [float(g).hex() for g in rep.grad_norms]
+    got_bits = [int(b) for b in rep.sent_bits]
+    assert got_gn == golden["traces"][comp]["grad_norms_hex"], (
+        f"solve(spec) on {backend} drifted from the golden grad-norm pin"
+    )
+    assert got_bits == golden["traces"][comp]["sent_bits"], (
+        f"solve(spec) on {backend} drifted from the golden sent_bits pin"
+    )
+
+
+def test_backend_swap_is_one_field(golden):
+    """Acceptance criterion: same spec, different backend, same trajectory."""
+    spec = golden_spec("topk", golden["rounds"])
+    local = solve(spec)
+    swapped = solve(spec.replace(backend="star-loopback"))
+    assert spec.replace(backend="star-loopback").backend == "star-loopback"
+    np.testing.assert_array_equal(local.x, swapped.x)
+    assert [g.hex() for g in local.grad_norms] == [
+        g.hex() for g in swapped.grad_norms
+    ]
+
+
+# ---------------------------------------------------------------------------
+# PP parity: local + star-loopback vs run_fednl_pp, with and without faults
+# ---------------------------------------------------------------------------
+
+def pp_spec(**overrides) -> ExperimentSpec:
+    base = dict(
+        algorithm="fednl-pp",
+        data=DataSpec(dataset="tiny", seed=1),
+        compressor=CompressorSpec("topk"),
+        rounds=8,
+        seed=0,
+        tau=3,
+    )
+    base.update(overrides)
+    return ExperimentSpec(**base)
+
+
+@pytest.mark.parametrize("backend", ["local", "star-loopback"])
+def test_pp_solve_matches_run_fednl_pp_bitwise(z_tiny, backend):
+    from repro.core import run_fednl_pp
+
+    spec = pp_spec(backend=backend)
+    ref = run_fednl_pp(z_tiny, spec.fednl_config(), tau=3, rounds=8, seed=0)
+    rep = solve(spec)
+    np.testing.assert_array_equal(rep.x_hist, ref.x_hist)
+    np.testing.assert_array_equal(rep.x, ref.x)
+    np.testing.assert_array_equal(rep.l_vals, ref.l_vals)
+    np.testing.assert_array_equal(
+        rep.sent_bits, ref.sent_bits.astype(np.int64)
+    )
+
+
+def test_pp_solve_with_faults_matches_direct_driver(z_tiny):
+    """The facade adds nothing on the faulted path either: same FaultSpec,
+    same trajectory/participation as calling run_pp_loopback directly."""
+    from repro.comm.star_pp import run_pp_loopback
+
+    fault = FaultSpec(drop_prob=0.25, seed=7)
+    spec = pp_spec(backend="star-loopback", rounds=12, fault=fault)
+    rep = solve(spec)
+    direct = run_pp_loopback(
+        z_tiny, spec.fednl_config(), tau=3, rounds=12, seed=0,
+        on_dropout="partial", fault=fault,
+    )
+    np.testing.assert_array_equal(rep.x_hist, direct.x_hist)
+    assert rep.participants == direct.participants
+    assert rep.dropped == direct.dropped
+    assert sum(len(d) for d in rep.dropped) > 0, "fault injection was a no-op"
+    # faults change the trajectory but not convergence (12 rounds at 25%
+    # drop: superlinear phase not yet entered — order-of-magnitude check)
+    assert rep.final_grad_norm < 1e-3
+
+
+def test_pp_local_records_participation(z_tiny):
+    rep = solve(pp_spec())
+    assert all(len(r.participants) == 3 for r in rep.records)
+    assert rep.rounds == 8 and rep.final_grad_norm is not None
+
+
+# ---------------------------------------------------------------------------
+# sharded backend: converges and reports both accounting models
+# ---------------------------------------------------------------------------
+
+def test_sharded_backend_runs_and_accounts(z_tiny):
+    spec = golden_spec("topk", 20).replace(backend="sharded", tol=1e-10)
+    rep = solve(spec)
+    assert rep.records[-1].grad_norm < 1e-10
+    assert rep.records[0].sent_bits == rep.records[0].sent_bits_payload
+    assert rep.records[0].sent_bits_wire > rep.records[0].sent_bits_payload
+
+
+# ---------------------------------------------------------------------------
+# unified accounting (satellite: one bits model, shims preserved)
+# ---------------------------------------------------------------------------
+
+def test_accounting_shims_delegate_to_unified():
+    from repro.compressors import get_compressor
+    from repro.core.fednl import make_bits_fn as legacy_full
+    from repro.core.fednl_pp import make_pp_bits_fn as legacy_pp
+    from repro.linalg import triu_size
+
+    d = 24
+    comp = get_compressor("topk", triu_size(d), 8 * d)
+    for acc in ("payload", "wire"):
+        assert int(legacy_full(comp, d, acc)(100)) == int(
+            unified_bits_fn(comp, d, acc)(100)
+        )
+        assert int(legacy_pp(comp, d, acc)(100)) == int(
+            unified_bits_fn(comp, d, acc, pp=True)(100)
+        )
+    with pytest.raises(ValueError):
+        unified_bits_fn(comp, d, "nope")
+
+
+def test_report_carries_both_accountings():
+    rep = solve(golden_spec("topk", 2))
+    wire = solve(golden_spec("topk", 2).replace(accounting="wire"))
+    # selected column honors the accounting field; both models always present
+    np.testing.assert_array_equal(rep.sent_bits, rep.sent_bits_payload)
+    np.testing.assert_array_equal(wire.sent_bits, wire.sent_bits_wire)
+    np.testing.assert_array_equal(rep.sent_bits_wire, wire.sent_bits_wire)
+
+
+# ---------------------------------------------------------------------------
+# spec + registry contracts
+# ---------------------------------------------------------------------------
+
+def test_builtin_registries_populated():
+    assert set(list_algorithms()) >= {"fednl", "fednl-ls", "fednl-pp"}
+    assert set(list_backends()) >= {
+        "local", "sharded", "star-loopback", "star-tcp",
+    }
+
+
+def test_unknown_names_fail_loudly():
+    with pytest.raises(KeyError, match="unknown algorithm"):
+        solve(ExperimentSpec(algorithm="fednl2"))
+    with pytest.raises(KeyError, match="unknown backend"):
+        solve(ExperimentSpec(backend="ray"))
+    with pytest.raises(ValueError, match="accounting"):
+        ExperimentSpec(accounting="bytes")
+    with pytest.raises(ValueError, match="objective"):
+        ExperimentSpec(objective="lasso")
+    with pytest.raises(ValueError, match="partial participation"):
+        ExperimentSpec(algorithm="fednl", tau=3)
+    # PP never sees the global gradient: a tol early stop must be rejected
+    # rather than silently ignored
+    with pytest.raises(ValueError, match="rounds instead"):
+        ExperimentSpec(algorithm="fednl-pp", tau=3, tol=1e-9)
+
+
+def test_backend_capability_is_checked():
+    # no LS wire protocol: star backends must refuse fednl-ls
+    with pytest.raises(ValueError, match="does not support"):
+        solve(ExperimentSpec(algorithm="fednl-ls", backend="star-loopback"))
+    # fault injection is transport-level: the local simulation must refuse a
+    # FaultSpec loudly rather than silently run the experiment fault-free
+    with pytest.raises(ValueError, match="cannot inject faults"):
+        solve(pp_spec(fault=FaultSpec(drop_prob=0.5, seed=7)))
+
+
+def test_wire_backends_refuse_overwritten_builtin():
+    """supports() is identity-based: re-registering 'fednl' with a custom
+    round must make the wire backends refuse loudly, not silently run the
+    builtin protocol under the custom algorithm's name."""
+    from repro.api import register_algorithm
+
+    base = get_algorithm("fednl")
+    custom = Algorithm(
+        name="fednl", kind="full", init=base.init, make_round=base.make_round
+    )
+    register_algorithm(custom, overwrite=True)
+    try:
+        with pytest.raises(ValueError, match="does not support"):
+            solve(golden_spec("topk", 1).replace(backend="star-loopback"))
+        with pytest.raises(ValueError, match="does not support"):
+            solve(golden_spec("topk", 1).replace(backend="sharded"))
+    finally:
+        register_algorithm(base, overwrite=True)
+
+
+def test_spec_is_frozen_and_replaceable():
+    spec = golden_spec("topk", 3)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.rounds = 7
+    assert spec.replace(rounds=7).rounds == 7
+    assert spec.rounds == 3
+
+
+def test_register_custom_algorithm_and_backend():
+    from repro.api.registry import ALGORITHMS, BACKENDS, Backend, register_backend
+
+    class EchoBackend(Backend):
+        name = "echo-test"
+        needs_problem = False
+
+        def run(self, spec, algo, z, x0):
+            return (spec, algo.name)
+
+    register_backend(EchoBackend())
+    try:
+        spec = ExperimentSpec(backend="echo-test", rounds=1)
+        got_spec, got_algo = solve(spec)
+        assert got_spec is spec and got_algo == "fednl"
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend(EchoBackend())
+    finally:
+        BACKENDS._entries.pop("echo-test", None)
+
+    algo = Algorithm(
+        name="fednl-echo", kind="full",
+        init=get_algorithm("fednl").init,
+        make_round=get_algorithm("fednl").make_round,
+    )
+    from repro.api import register_algorithm
+
+    register_algorithm(algo)
+    try:
+        rep = solve(ExperimentSpec(algorithm="fednl-echo", rounds=2,
+                                   data=DataSpec(dataset="tiny", seed=1)))
+        assert rep.rounds == 2
+    finally:
+        ALGORITHMS._entries.pop("fednl-echo", None)
+
+
+def test_register_custom_compressor_end_to_end():
+    from repro.compressors.core import COMPRESSORS, Compressor, identity
+
+    def make_id2(t, k):
+        return Compressor("identity2", lambda key, u: identity(u), alpha=1.0,
+                          delta=1.0, bits_per_elem=64, header_bits=0)
+
+    register_compressor("identity2", make_id2)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_compressor("identity2", make_id2)
+        rep = solve(ExperimentSpec(
+            data=DataSpec(dataset="tiny", seed=1),
+            compressor=CompressorSpec("identity2"), rounds=3,
+        ))
+        ref = solve(golden_spec("topk", 3).replace(
+            compressor=CompressorSpec("identity")
+        ))
+        # identity2 is identity by another name: identical trajectory
+        np.testing.assert_array_equal(rep.grad_norms, ref.grad_norms)
+    finally:
+        COMPRESSORS.pop("identity2", None)
+
+
+def test_x0_and_z_overrides(z_tiny):
+    x0 = np.full(z_tiny.shape[-1], 0.1)
+    rep = solve(golden_spec("topk", 3), z=z_tiny, x0=x0)
+    cold = solve(golden_spec("topk", 3), z=z_tiny)
+    assert not np.array_equal(rep.grad_norms, cold.grad_norms)
+    with pytest.raises(ValueError, match="x0"):
+        solve(golden_spec("topk", 2).replace(backend="star-loopback"), x0=x0)
+    with pytest.raises(ValueError, match="pre-built z"):
+        solve(golden_spec("topk", 2).replace(backend="star-tcp"), z=z_tiny)
+
+
+# ---------------------------------------------------------------------------
+# star-tcp through the facade (real sockets -> net marker)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.net
+def test_tcp_backend_matches_local_backend():
+    spec = ExperimentSpec(
+        data=DataSpec(shape=(12, 4, 20), seed=3),
+        compressor=CompressorSpec("topk"),
+        backend="star-tcp",
+        rounds=6,
+        seed=0,
+    )
+    tcp = solve(spec)
+    local = solve(spec.replace(backend="local"))
+    # full-participation TCP contract is <=1e-8 (test_comm.py); the PP star
+    # client is the bit-exact path (vmap-of-1 regime, test below)
+    np.testing.assert_allclose(tcp.x, local.x, atol=1e-8)
+    np.testing.assert_allclose(tcp.grad_norms, local.grad_norms, atol=1e-8)
+
+
+@pytest.mark.net
+def test_tcp_pp_backend_matches_local_backend():
+    spec = ExperimentSpec(
+        algorithm="fednl-pp",
+        data=DataSpec(shape=(12, 4, 20), seed=3),
+        compressor=CompressorSpec("topk"),
+        backend="star-tcp",
+        rounds=6,
+        tau=4,
+        seed=0,
+    )
+    tcp = solve(spec)
+    local = solve(spec.replace(backend="local"))
+    np.testing.assert_array_equal(tcp.x_hist, local.x_hist)
+    np.testing.assert_array_equal(tcp.x, local.x)
