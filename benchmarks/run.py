@@ -1,33 +1,77 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV and
+# record the machine-readable perf trajectory to BENCH_sweep.json.
 #
-#   PYTHONPATH=src python -m benchmarks.run [--quick]
+#   PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_sweep.json]
 #
+# --quick runs only the sweep-engine speedup benchmark (what CI records and
+# uploads as an artifact); the full run additionally times every paper table.
 # Tables 1-4 mirror the paper's Tables 1-3 + Appendix B progression; the
 # roofline rows read the dry-run sweep JSON (produced separately by
 # ``python -m repro.launch.dryrun --arch all --shape all --both-meshes
 # --json results/dryrun_all.json`` — that entry point needs its own process
 # because it forces 512 host devices).
+import argparse
+import json
 import sys
+import time
 
 
-def main() -> None:
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="sweep speedup benchmark only (skip the paper tables)")
+    ap.add_argument("--json", default="BENCH_sweep.json", metavar="PATH",
+                    help="where to write the machine-readable benchmark record")
+    args = ap.parse_args()
+
+    bench: dict = {"schema": 1, "tables": {}}
     rows = []
-    from benchmarks import tables
 
-    for fn in tables.ALL_TABLES:
-        try:
-            rows.extend(fn())
-        except Exception as e:  # noqa: BLE001 — report per-table
-            rows.append((f"{fn.__name__}/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+    if not args.quick:
+        from benchmarks import tables
 
-    from benchmarks import roofline_report
+        for fn in tables.ALL_TABLES:
+            t0 = time.perf_counter()
+            try:
+                table_rows = fn()
+                rows.extend(table_rows)
+                bench["tables"][fn.__name__] = {
+                    "wall_s": round(time.perf_counter() - t0, 3),
+                    "rows": len(table_rows),
+                }
+            except Exception as e:  # noqa: BLE001 — report per-table
+                rows.append((f"{fn.__name__}/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+                bench["tables"][fn.__name__] = {
+                    "wall_s": round(time.perf_counter() - t0, 3),
+                    "error": f"{type(e).__name__}:{e}",
+                }
 
-    rows.extend(roofline_report.roofline_rows())
+        from benchmarks import roofline_report
+
+        rows.extend(roofline_report.roofline_rows())
+
+    # the sweep-engine measurement itself: sequential-vs-batched on one grid
+    from benchmarks.tables import sweep_speedup_benchmark
+
+    sweep = sweep_speedup_benchmark()
+    bench["sweep"] = sweep
+    rows.append((
+        "sweep/solve_many_batched_speedup",
+        sweep["batched_s"] * 1e6 / sweep["n_specs"],
+        f"specs={sweep['n_specs']};speedup={sweep['speedup']}x;"
+        f"bit_parity={sweep['bit_parity']}",
+    ))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
+    with open(args.json, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.json}", file=sys.stderr)
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

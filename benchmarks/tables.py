@@ -1,4 +1,4 @@
-"""One benchmark per paper table, driven by declarative ExperimentSpecs.
+"""One benchmark per paper table, driven by declarative sweeps.
 
 Table 1 (single-node vanilla FedNL): per-compressor wall time on the
   W8A-shaped problem vs the reference-style NumPy loop — the x-speedup story.
@@ -11,12 +11,14 @@ Table 6 (FedNL-PP participation sweep): per-round uplink payload bits and
   wall time of the partial-participation star protocol across
   tau in {0.1n, 0.5n, n}, vs full-participation FedNL over the same wire.
 
-Sweeps are *lists of ExperimentSpecs* — each table builds its base spec and
-varies one field with ``spec.replace`` (compressor, backend, aggregate, tau),
-then runs everything through the one ``repro.api.solve`` facade; no table
-hand-builds per-variant configs or round loops anymore.
+Sweeps are *SweepSpecs* — each table builds its base spec, declares the
+varying axis with ``spec.grid(...)``, and runs the whole grid through ONE
+``solve_many`` call.  The measurement tables pin ``batch="never"`` so each
+spec is timed in isolation (batching would fold per-spec wall time into one
+shared program); ``sweep_speedup_benchmark`` below is the batched-vs-
+sequential measurement itself and feeds BENCH_sweep.json.
 
-Every function returns rows: (name, us_per_call, derived).
+Every table function returns rows: (name, us_per_call, derived).
 """
 
 from __future__ import annotations
@@ -26,7 +28,8 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
+from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve, solve_many
+from repro.api.accounting import sharded_uplink_bits
 from repro.baselines import run_fednl_numpy_reference
 from repro.core import newton_baseline, gd_baseline
 
@@ -59,9 +62,12 @@ def table1_singlenode():
     ref_per_round = ref_t / ref_rounds
     rows.append(("table1/reference_numpy_per_round", ref_per_round * 1e6,
                  f"rounds={ref_rounds}"))
-    sweep = [base.replace(compressor=CompressorSpec(c)) for c in ALL_COMPRESSORS]
-    for spec in sweep:
-        rep = solve(spec, z=z)
+    # batch="never": this table measures per-spec wall time, so every spec
+    # must own its program (the batched engine is measured separately by
+    # sweep_speedup_benchmark)
+    sweep = base.grid(compressor=ALL_COMPRESSORS, batch="never")
+    srep = solve_many(sweep)
+    for spec, rep in zip(srep.specs, srep.reports):
         per_round = rep.wall_time_s / rep.rounds
         speedup = ref_per_round / per_round
         rows.append((
@@ -74,27 +80,28 @@ def table1_singlenode():
 
 def table2_ls_vs_solvers():
     rows = []
-    sweep = [
-        _base_spec(
-            name,
-            seed=1,
-            algorithm="fednl-ls",
-            compressor=CompressorSpec("randseqk"),
-            option="A",
-            mu=1e-3,
-            rounds=60,
-            tol=1e-9,
-        )
-        for name in BENCH_SHAPES
-    ]
-    for name, spec in zip(BENCH_SHAPES, sweep):
-        z = spec.data.build()
-        rep = solve(spec, z=z)
+    base = _base_spec(
+        "w8a",
+        seed=1,
+        algorithm="fednl-ls",
+        compressor=CompressorSpec("randseqk"),
+        option="A",
+        mu=1e-3,
+        rounds=60,
+        tol=1e-9,
+    )
+    sweep = base.grid(
+        data=[DataSpec(shape=BENCH_SHAPES[n], seed=1) for n in BENCH_SHAPES],
+        batch="never",  # per-spec init/solve timing is the measurement
+    )
+    srep = solve_many(sweep)
+    for name, spec, rep in zip(BENCH_SHAPES, srep.specs, srep.reports):
         rows.append((
             f"table2/{name}/fednl_ls_randseqk",
             rep.wall_time_s * 1e6,
             f"init={rep.init_time_s:.2f}s;rounds={rep.rounds};gn={rep.grad_norms[-1]:.1e}",
         ))
+        z = spec.data.build()
         nb = newton_baseline(z, 1e-3, tol=1e-9)
         rows.append((
             f"table2/{name}/newton_centralized",
@@ -115,15 +122,14 @@ def table3_multinode():
     identical, wall time measures the sharded program)."""
     rows = []
     base = _base_spec("w8a", seed=2, backend="sharded", devices=1)
-    z = base.data.build()
-    d = z.shape[-1]
+    d, n_clients, _ = base.data.dims()
     t = d * (d + 1) // 2
     k = base.fednl_config().k_for(d)
-    for spec in [base.replace(aggregate=agg)
-                 for agg in ["dense_psum", "sparse_allgather"]]:
-        rep = solve(spec, z=z)
+    sweep = base.grid(aggregate=["dense_psum", "sparse_allgather"], batch="never")
+    srep = solve_many(sweep)
+    for spec, rep in zip(srep.specs, srep.reports):
         per_round = rep.wall_time_s / rep.rounds
-        payload = (k * 12 if spec.aggregate == "sparse_allgather" else t * 8) * z.shape[0]
+        payload = sharded_uplink_bits(spec.aggregate, t, k, n_clients) // 8
         rows.append((
             f"table3/{spec.aggregate}_per_round",
             per_round * 1e6,
@@ -205,12 +211,13 @@ def table5_wire_formats():
 
     rows = []
     base = _base_spec("phishing", seed=4, backend="star-loopback", rounds=3)
-    z = base.data.build()
-    n, _, d = z.shape
+    d, n, _ = base.data.dims()
     bcast_bits = d * 64
-    sweep = [base.replace(compressor=CompressorSpec(c)) for c in ALL_COMPRESSORS]
-    for spec in sweep:
-        rep = solve(spec, z=z)
+    # batch="never": per-spec event-loop timing (pool dispatch would
+    # interleave the runs and distort per-round wall time)
+    sweep = base.grid(compressor=ALL_COMPRESSORS, batch="never")
+    srep = solve_many(sweep)
+    for spec, rep in zip(srep.specs, srep.reports):
         per_round = rep.wall_time_s / rep.rounds
         measured = rep.extras["measured_payload_bits"]
         match = bool((measured == rep.sent_bits_payload).all())
@@ -235,11 +242,10 @@ def table6_pp_participation():
 
     rows = []
     base = _base_spec("phishing", seed=5, backend="star-loopback", rounds=6)
-    z = base.data.build()
-    n, _, d = z.shape
+    d, n, _ = base.data.dims()
     bcast_bits = d * 64
 
-    full = solve(base, z=z)
+    full = solve(base)
     rows.append((
         "table6/fednl_full_per_round",
         full.wall_time_s / full.rounds * 1e6,
@@ -247,12 +253,12 @@ def table6_pp_participation():
         f"cost_model_round="
         f"{DEFAULT_COST.round_s(float(full.extras['measured_payload_bits'][-1]), bcast_bits, n) * 1e3:.2f}ms",
     ))
-    sweep = [
-        base.replace(algorithm="fednl-pp", tau=max(1, int(frac * n)))
-        for frac in [0.1, 0.5, 1.0]
-    ]
-    for spec in sweep:
-        rep = solve(spec, z=z)
+    sweep = base.replace(algorithm="fednl-pp").grid(
+        tau=sorted({max(1, int(frac * n)) for frac in [0.1, 0.5, 1.0]}),
+        batch="never",
+    )
+    srep = solve_many(sweep)
+    for spec, rep in zip(srep.specs, srep.reports):
         per_round = rep.wall_time_s / rep.rounds
         measured = rep.extras["measured_payload_bits"]
         uplink_bits = float(measured[-1])
@@ -266,6 +272,39 @@ def table6_pp_participation():
             f"cost_model_round={wire_s * 1e3:.2f}ms",
         ))
     return rows
+
+
+def sweep_speedup_benchmark(n_seeds: int = 8, rounds: int = 20) -> dict:
+    """The headline measurement of the sweep engine: one seeds x compressors
+    grid run twice — sequentially (``batch="never"``: one trace/compile and
+    one device round-trip per spec, the pre-solve_many world) and batched
+    (``batch="auto"``: one compiled program per group) — plus a bit-parity
+    check between the two.  Feeds BENCH_sweep.json (benchmarks/run.py).
+    """
+    base = ExperimentSpec(data=DataSpec(dataset="tiny", seed=1), rounds=rounds)
+    axes = dict(seed=list(range(n_seeds)), compressor=["topk", "randseqk"])
+    sequential = solve_many(base.grid(batch="never", **axes))
+    batched = solve_many(base.grid(batch="auto", **axes))
+    parity = all(
+        [g.hex() for g in a.grad_norms] == [g.hex() for g in b.grad_norms]
+        and bool((a.x == b.x).all())
+        and list(a.sent_bits) == list(b.sent_bits)
+        for a, b in zip(batched.reports, sequential.reports)
+    )
+    return {
+        "n_specs": len(batched.reports),
+        "rounds": rounds,
+        "grid": {k: [str(v) for v in vs] for k, vs in axes.items()},
+        "sequential_s": round(sequential.wall_time_s, 3),
+        "batched_s": round(batched.wall_time_s, 3),
+        "speedup": round(sequential.wall_time_s / batched.wall_time_s, 2),
+        "specs_per_s_batched": round(
+            len(batched.reports) / batched.wall_time_s, 2
+        ),
+        "bit_parity": parity,
+        "batched_groups": batched.extras["n_groups"],
+        "log": batched.log,
+    }
 
 
 ALL_TABLES = [table1_singlenode, table2_ls_vs_solvers, table3_multinode,

@@ -1,14 +1,21 @@
-"""CI gate: user-reachable entry points must go through repro.api.solve.
+"""CI gate: user-reachable entry points must go through repro.api.solve,
+and sweeps must go through repro.api.solve_many.
 
     python scripts/check_api_migration.py
 
-Greps the user-facing layers (examples/, scripts/, benchmarks/, the launch
-CLIs) for direct calls to the legacy per-variant drivers.  Those drivers
-still exist — the api backends wrap them, repro.core stays the independent
-bit-parity reference, and tests may exercise them deliberately — but an
-*entry point* hand-building a legacy driver call is a regression to the
-pre-facade world (a new scenario would again mean a new driver), so it
+Rule 1 greps the user-facing layers (examples/, scripts/, benchmarks/, the
+launch CLIs) for direct calls to the legacy per-variant drivers.  Those
+drivers still exist — the api backends wrap them, repro.core stays the
+independent bit-parity reference, and tests may exercise them deliberately —
+but an *entry point* hand-building a legacy driver call is a regression to
+the pre-facade world (a new scenario would again mean a new driver), so it
 fails CI.  Allowlisted call sites are the wrapping layers themselves.
+
+Rule 2 flags sequential sweep loops — a ``solve(`` call inside a ``for``
+body in benchmarks/ or scripts/.  Looping solve() pays a fresh trace/compile
+and a device round-trip per spec; that is exactly what ``solve_many`` (one
+compiled program per batch group) exists to replace, so new sweep loops in
+the measurement layers fail CI.
 """
 
 from __future__ import annotations
@@ -54,6 +61,49 @@ ALLOWLIST = {
 
 PATTERN = re.compile("|".join(LEGACY_CALLS))
 
+# --- rule 2: sequential sweep loops ----------------------------------------
+
+# layers whose sweeps must be declarative (examples may loop solve() for
+# pedagogy; benchmarks and scripts are the measurement/CI surface)
+SWEEP_SCANNED = ["benchmarks", "scripts"]
+
+# solve( but not solve_many( and not a method call like facade.solve(
+SOLVE_CALL = re.compile(r"(?<![\w.])solve\s*\(")
+FOR_HEADER = re.compile(r"^(\s*)for\b.*:")
+
+SWEEP_ALLOWLIST = {
+    # the registry smoke must run each algorithm x backend pair in isolation
+    # (one pair failing must not abort the others), and the sweep smoke's
+    # parity reference deliberately IS the sequential path
+    "scripts/smoke_api.py",
+    # this checker's own pattern table
+    "scripts/check_api_migration.py",
+}
+
+
+def find_sweep_loops(text: str) -> list[tuple[int, str]]:
+    """Line numbers of ``solve(`` calls lexically inside a ``for`` body
+    (indentation-scoped, good enough for the flat scripts we scan), plus
+    comprehension/generator forms — ``[solve(s) for s in specs]`` is the
+    same one-trace-per-spec loop in its most idiomatic spelling."""
+    hits = []
+    open_loops: list[int] = []  # indent depths of active for-blocks
+    for lineno, line in enumerate(text.splitlines(), 1):
+        stripped = line.strip()
+        if not stripped or stripped.startswith("#"):
+            continue
+        indent = len(line) - len(line.lstrip())
+        open_loops = [i for i in open_loops if indent > i]
+        in_comprehension = (
+            SOLVE_CALL.search(line) and re.search(r"\bfor\b", line)
+        )
+        if SOLVE_CALL.search(line) and (open_loops or in_comprehension):
+            hits.append((lineno, stripped))
+        m = FOR_HEADER.match(line)
+        if m:
+            open_loops.append(len(m.group(1)))
+    return hits
+
 
 def main() -> int:
     bad: list[str] = []
@@ -65,12 +115,26 @@ def main() -> int:
             for lineno, line in enumerate(path.read_text().splitlines(), 1):
                 if PATTERN.search(line) and not line.lstrip().startswith("#"):
                     bad.append(f"{rel}:{lineno}: {line.strip()}")
+    sweep_bad: list[str] = []
+    for layer in SWEEP_SCANNED:
+        for path in sorted((ROOT / layer).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in SWEEP_ALLOWLIST:
+                continue
+            for lineno, line in find_sweep_loops(path.read_text()):
+                sweep_bad.append(f"{rel}:{lineno}: {line}")
     if bad:
         print("legacy driver calls reachable outside the facade "
               "(migrate to repro.api.solve or allowlist with a reason):")
         print("\n".join(f"  {b}" for b in bad))
+    if sweep_bad:
+        print("sequential sweep loops (one trace/compile per spec — migrate "
+              "to repro.api.solve_many or allowlist with a reason):")
+        print("\n".join(f"  {b}" for b in sweep_bad))
+    if bad or sweep_bad:
         return 1
-    print(f"api migration clean: {', '.join(SCANNED)} go through solve()")
+    print(f"api migration clean: {', '.join(SCANNED)} go through solve(); "
+          f"{', '.join(SWEEP_SCANNED)} sweep via solve_many()")
     return 0
 
 

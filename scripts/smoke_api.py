@@ -1,4 +1,5 @@
-"""CI gate: every registered algorithm x backend pair solves a 3-round spec.
+"""CI gate: every registered algorithm x backend pair solves a 3-round spec,
+and a solve_many sweep reproduces sequential solve() bit-for-bit.
 
     PYTHONPATH=src python scripts/smoke_api.py [--skip-tcp]
 
@@ -6,7 +7,15 @@ Walks the repro.api registries (so newly registered algorithms/backends are
 covered automatically), runs a 3-round solve() on a small synthetic problem
 for every pair the backend supports, and asserts the pair either completes
 with a well-formed RunReport or is *declared* unsupported — a pair that is
-reachable but crashes fails the gate.  Exits non-zero on any failure.
+reachable but crashes fails the gate.  Then runs a socket-free 2x2
+seed x compressor grid through ``solve_many`` on the local backend and
+asserts per-spec bit-parity with sequential ``solve()`` (the sweep engine's
+core contract).  Exits non-zero on any failure.
+
+NOTE the per-pair loop and the sweep parity reference below deliberately
+call solve() sequentially — each pair must fail in isolation, and the
+parity check needs the non-batched trajectories; this file is allowlisted
+in scripts/check_api_migration.py's sequential-sweep-loop rule.
 """
 
 import argparse
@@ -25,9 +34,39 @@ from repro.api import (
     list_algorithms,
     list_backends,
     solve,
+    solve_many,
 )
 
 SHAPE = (12, 4, 20)  # d, n_clients, n_i — 4 clients keeps TCP spawn cheap
+
+
+def sweep_smoke() -> int:
+    """Tier-1 sweep gate: 2x2 grid via solve_many == sequential solve()."""
+    base = ExperimentSpec(data=DataSpec(shape=SHAPE, seed=1), rounds=3)
+    sweep = base.grid(seed=[0, 1], compressor=["topk", "randseqk"])
+    rep = solve_many(sweep)
+    failures = 0
+    if rep.extras["batched_specs"] != 4:
+        failures += 1
+        print(f"sweep smoke FAIL: expected 4 batched specs, got "
+              f"{rep.extras['batched_specs']} (log: {rep.log})")
+    for i, spec in enumerate(sweep.specs()):
+        ref = solve(spec)
+        got, want = rep.reports[i], ref
+        same = (
+            [g.hex() for g in got.grad_norms] == [g.hex() for g in want.grad_norms]
+            and bool((got.x == want.x).all())
+            and list(got.sent_bits) == list(want.sent_bits)
+        )
+        if not same:
+            failures += 1
+            print(f"sweep smoke FAIL: spec[{i}] "
+                  f"(seed={spec.seed}, comp={spec.compressor.name}) drifted "
+                  f"from sequential solve()")
+    if not failures:
+        print(f"sweep smoke ok: {len(rep.reports)} specs bit-identical to "
+              f"sequential solve() ({rep.summary()})")
+    return failures
 
 
 def main() -> int:
@@ -68,6 +107,11 @@ def main() -> int:
             except Exception as e:  # noqa: BLE001 — report per-pair
                 failures += 1
                 print(f"{pair} FAIL {type(e).__name__}: {e}")
+    try:
+        failures += sweep_smoke()
+    except Exception as e:  # noqa: BLE001 — the gate must report, not crash
+        failures += 1
+        print(f"sweep smoke FAIL {type(e).__name__}: {e}")
     return 1 if failures else 0
 
 

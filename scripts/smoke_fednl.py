@@ -1,13 +1,16 @@
-"""Single-node FedNL smoke: every compressor through the one solve() facade.
+"""Single-node FedNL smoke: every compressor through one solve_many() sweep.
 
     PYTHONPATH=src python scripts/smoke_fednl.py
+
+(tol-based early stopping needs a per-round host sync, so the engine runs
+these specs per spec — the log shows the fallback decisions.)
 """
 
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
+from repro.api import DataSpec, ExperimentSpec, solve_many
 from repro.core import newton_baseline
 
 spec = ExperimentSpec(
@@ -19,10 +22,15 @@ spec = ExperimentSpec(
 z = spec.data.build()
 print("z", z.shape, z.dtype)
 
-for comp in ["identity", "topk", "randk", "randseqk", "toplek", "natural"]:
-    rep = solve(spec.replace(compressor=CompressorSpec(comp)), z=z)
-    print(f"{comp:10s} rounds={rep.rounds:3d} gn={rep.grad_norms[-1]:.3e} "
-          f"f={rep.f_vals[-1]:.8f} wall={rep.wall_time_s:.2f}s init={rep.init_time_s:.2f}s")
+sweep = spec.grid(
+    compressor=["identity", "topk", "randk", "randseqk", "toplek", "natural"]
+)
+srep = solve_many(sweep)
+for s, rep in zip(srep.specs, srep.reports):
+    print(f"{s.compressor.name:10s} rounds={rep.rounds:3d} "
+          f"gn={rep.grad_norms[-1]:.3e} f={rep.f_vals[-1]:.8f} "
+          f"wall={rep.wall_time_s:.2f}s init={rep.init_time_s:.2f}s")
+print(srep.summary())
 
 nb = newton_baseline(z, 1e-3)
 print(f"newton     rounds={nb.rounds} gn={nb.grad_norms[-1]:.3e} f={nb.f_vals[-1]:.8f}")

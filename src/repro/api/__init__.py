@@ -12,7 +12,7 @@ from repro.api.accounting import (
     payload_bits_fn,
     wire_bits_fn,
 )
-from repro.api.facade import solve
+from repro.api.facade import solve, solve_many
 from repro.api.registry import (
     Algorithm,
     Backend,
@@ -24,8 +24,9 @@ from repro.api.registry import (
     register_backend,
     register_compressor,
 )
-from repro.api.report import RoundRecord, RunReport
+from repro.api.report import RoundRecord, RunReport, SweepReport
 from repro.api.spec import CompressorSpec, DataSpec, ExperimentSpec
+from repro.api.sweep import SweepSpec
 from repro.comm.transport import FaultSpec
 
 __all__ = [
@@ -38,6 +39,8 @@ __all__ = [
     "FaultSpec",
     "RoundRecord",
     "RunReport",
+    "SweepReport",
+    "SweepSpec",
     "get_algorithm",
     "get_backend",
     "list_algorithms",
@@ -49,4 +52,5 @@ __all__ = [
     "register_backend",
     "register_compressor",
     "solve",
+    "solve_many",
 ]

@@ -22,9 +22,32 @@ from __future__ import annotations
 
 from typing import Callable
 
-from repro.compressors.core import FP_BITS, Compressor, message_bits
+from repro.compressors.core import FP_BITS, IDX_BITS, Compressor, message_bits
 
 ACCOUNTINGS = ("payload", "wire")
+
+SHARDED_AGGREGATES = ("dense_psum", "sparse_allgather")
+
+
+def sharded_uplink_bits(aggregate: str, t: int, k: int, n_clients: int) -> int:
+    """Per-round uplink bits of the sharded-collective round (DESIGN.md §7).
+
+    ``dense_psum`` all-reduces the full packed upper triangle (T FP64 words
+    per client); ``sparse_allgather`` gathers only the k compressed
+    ``(int32 idx, FP64 val)`` pairs per client.  One closed-form model shared
+    by the benchmark tables and the sharded round's own reporting — no
+    magic byte constants at call sites.
+    """
+    if aggregate == "dense_psum":
+        per_client = t * FP_BITS
+    elif aggregate == "sparse_allgather":
+        per_client = k * (FP_BITS + IDX_BITS)
+    else:
+        raise ValueError(
+            f"unknown aggregate {aggregate!r}; use "
+            f"{' | '.join(SHARDED_AGGREGATES)}"
+        )
+    return per_client * n_clients
 
 
 def payload_bits_fn(comp: Compressor, d: int, pp: bool = False) -> Callable:

@@ -34,6 +34,10 @@ from repro.api.registry import (
 )
 from repro.api.report import RoundRecord, RunReport
 from repro.core.fednl import fednl_init, make_fednl_round
+from repro.core.fednl_batch import (
+    make_fednl_batch_round,
+    make_fednl_ls_batch_round,
+)
 from repro.core.fednl_ls import make_fednl_ls_round
 from repro.core.fednl_pp import fednl_pp_init, make_fednl_pp_round
 from repro.core.runner import eval_full
@@ -48,6 +52,7 @@ FEDNL = register_algorithm(
         kind="full",
         init=fednl_init,
         make_round=lambda z, cfg, tau=None: make_fednl_round(z, cfg),
+        make_batch_round=make_fednl_batch_round,
     )
 )
 
@@ -58,6 +63,7 @@ FEDNL_LS = register_algorithm(
         line_search=True,
         init=fednl_init,
         make_round=lambda z, cfg, tau=None: make_fednl_ls_round(z, cfg),
+        make_batch_round=make_fednl_ls_batch_round,
     )
 )
 
@@ -438,7 +444,9 @@ class StarTCPBackend(Backend):
         return _star_full_report(spec, algo, res, self.name)
 
 
-register_backend(LocalBackend())
-register_backend(ShardedBackend())
-register_backend(StarLoopbackBackend())
-register_backend(StarTCPBackend())
+# bound instances: the sweep engine identity-checks against LOCAL_BACKEND
+# (an overwritten "local" registration must not be silently batched around)
+LOCAL_BACKEND = register_backend(LocalBackend())
+SHARDED_BACKEND = register_backend(ShardedBackend())
+STAR_LOOPBACK_BACKEND = register_backend(StarLoopbackBackend())
+STAR_TCP_BACKEND = register_backend(StarTCPBackend())

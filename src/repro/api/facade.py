@@ -1,34 +1,32 @@
-"""solve(spec): the one entry point of the repro.
+"""solve(spec) / solve_many(sweep): the two entry points of the repro.
 
-Validates the spec against the registries, builds (or accepts) the federated
-problem, dispatches to the backend strategy, and returns the unified
-:class:`RunReport`.  Everything an entry script used to re-plumb — config
-projection, compressor choice, bits accounting, metrics collection — happens
-behind this call.
+``solve`` validates one spec against the registries, builds (or accepts) the
+federated problem, dispatches to the backend strategy, and returns the
+unified :class:`RunReport`.  ``solve_many`` does the same for a whole
+:class:`SweepSpec` grid, grouping compatible specs into single compiled
+programs (``repro.api.batch``) and returning a :class:`SweepReport`.
+Everything an entry script used to re-plumb — config projection, compressor
+choice, bits accounting, metrics collection — happens behind these calls.
 """
 
 from __future__ import annotations
 
+from typing import Iterable
+
 import jax
 
-from repro.api.registry import get_algorithm, get_backend
-from repro.api.report import RunReport
+from repro.api.registry import Algorithm, Backend, get_algorithm, get_backend
+from repro.api.report import RunReport, SweepReport
 from repro.api.spec import ExperimentSpec
+from repro.api.sweep import SweepSpec
 
 
-def solve(spec: ExperimentSpec, z=None, x0=None) -> RunReport:
-    """Run one experiment described by ``spec``.
-
-    ``z`` optionally supplies a pre-built problem array ``(n_clients, n_i, d)``
-    — e.g. LM backbone features (examples/fednl_probe.py) or a LIBSVM
-    round-trip — overriding ``spec.data``.  ``x0`` optionally overrides the
-    zero initial iterate (local backend only; the wire protocols start every
-    run from the INIT broadcast of the zero iterate).
-    """
-    # FedNL is an FP64 algorithm end-to-end; idempotent when already enabled
-    jax.config.update("jax_enable_x64", True)
-    algo = get_algorithm(spec.algorithm)
-    backend = get_backend(spec.backend)
+def check_spec(
+    spec: ExperimentSpec, algo: Algorithm, backend: Backend, *, z=None, x0=None
+) -> None:
+    """The capability checks both entry points share — a spec that would
+    fail ``solve()`` fails ``solve_many()`` identically, before anything
+    runs."""
     if not backend.supports(algo):
         raise ValueError(
             f"backend {backend.name!r} does not support algorithm "
@@ -51,6 +49,52 @@ def solve(spec: ExperimentSpec, z=None, x0=None) -> RunReport:
             f"backend {backend.name!r} rebuilds the problem from spec.data in "
             "its worker processes; a pre-built z cannot be shipped to it"
         )
+
+
+def solve(spec: ExperimentSpec, z=None, x0=None) -> RunReport:
+    """Run one experiment described by ``spec``.
+
+    ``z`` optionally supplies a pre-built problem array ``(n_clients, n_i, d)``
+    — e.g. LM backbone features (examples/fednl_probe.py) or a LIBSVM
+    round-trip — overriding ``spec.data``.  ``x0`` optionally overrides the
+    zero initial iterate (local backend only; the wire protocols start every
+    run from the INIT broadcast of the zero iterate).
+    """
+    # FedNL is an FP64 algorithm end-to-end; idempotent when already enabled
+    jax.config.update("jax_enable_x64", True)
+    algo = get_algorithm(spec.algorithm)
+    backend = get_backend(spec.backend)
+    check_spec(spec, algo, backend, z=z, x0=x0)
     if z is None and backend.needs_problem:
         z = spec.data.build()
     return backend.run(spec, algo, z, x0)
+
+
+def solve_many(sweep: SweepSpec | Iterable[ExperimentSpec]) -> SweepReport:
+    """Run a whole sweep — a :class:`SweepSpec` grid (``spec.grid(...)``) or
+    any iterable of specs — and return a :class:`SweepReport` with one
+    :class:`RunReport` per spec in expansion order.
+
+    On the local backend, shape-compatible full-participation specs are
+    grouped and executed as ONE jitted scan program per group (bit-identical
+    per-spec results, compressor variation via ``lax.switch``, spec axis
+    sharded across local devices when available); wire-backend specs are
+    dispatched through a bounded worker pool; everything else falls back to
+    per-spec ``solve()`` — each decision recorded in ``SweepReport.log``.
+    """
+    jax.config.update("jax_enable_x64", True)
+    from repro.api.batch import run_sweep
+
+    if isinstance(sweep, SweepSpec):
+        specs, batch_mode, sweep_obj = sweep.specs(), sweep.batch, sweep
+    else:
+        specs, batch_mode, sweep_obj = tuple(sweep), "auto", None
+        for s in specs:
+            if not isinstance(s, ExperimentSpec):
+                raise TypeError(
+                    f"solve_many takes a SweepSpec or ExperimentSpecs, got "
+                    f"{type(s).__name__}"
+                )
+    if not specs:
+        raise ValueError("empty sweep: nothing to solve")
+    return run_sweep(specs, batch_mode, sweep_obj)

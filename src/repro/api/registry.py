@@ -36,6 +36,13 @@ class Algorithm:
     simulation-style backends drive (``tau`` is ignored by "full"
     algorithms).  Wire backends (star-*) implement their own client/master
     event loops and consult only ``kind``/``line_search``.
+
+    ``make_batch_round(cfg, comps, alpha) -> body(z, comp_idx, state)`` is
+    the optional sweep-batching hook: given the group-shared config, the
+    group's compressor table and the shared resolved alpha, it returns a
+    round body the ``solve_many`` engine maps over a stacked spec axis
+    (see ``repro.core.fednl_batch``).  Algorithms without it (``None``)
+    always take the per-spec fallback path in a sweep — never an error.
     """
 
     name: str
@@ -43,6 +50,7 @@ class Algorithm:
     init: Callable
     make_round: Callable
     line_search: bool = False
+    make_batch_round: Callable | None = None
 
     def __post_init__(self):
         if self.kind not in ("full", "pp"):

@@ -141,3 +141,88 @@ class RunReport:
             f"uplink={mb:.2f} MB ({self.spec.accounting}) "
             f"solve={self.wall_time_s:.2f}s init={self.init_time_s:.2f}s"
         )
+
+
+def _spec_get(spec: Any, path: str) -> Any:
+    """Resolve a dotted field path on a spec ('compressor.name', 'data.seed')."""
+    value = spec
+    for part in path.split("."):
+        value = getattr(value, part)
+    return value
+
+
+@dataclasses.dataclass
+class SweepReport:
+    """What ``solve_many`` returns: one RunReport per spec, in expansion
+    order, plus the engine's dispatch log and aggregation helpers.
+
+    ``log`` records every grouping/fallback decision (a spec that cannot
+    batch is run per-spec and logged — never silently dropped).
+    """
+
+    specs: tuple[Any, ...]  # the expanded ExperimentSpecs, expansion order
+    reports: list[RunReport]
+    log: list[str]
+    wall_time_s: float
+    sweep: Any = None  # the SweepSpec, when solve_many was given one
+    extras: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.reports)
+
+    def __iter__(self):
+        return iter(self.reports)
+
+    def __getitem__(self, i: int) -> RunReport:
+        return self.reports[i]
+
+    # --- aggregation helpers ---------------------------------------------
+
+    def group_by(self, *fields: str) -> dict[tuple, list[RunReport]]:
+        """Group reports by spec field paths, preserving expansion order
+        within each group: ``report.group_by("compressor.name")``."""
+        out: dict[tuple, list[RunReport]] = {}
+        for spec, rep in zip(self.specs, self.reports):
+            key = tuple(_spec_get(spec, f) for f in fields)
+            out.setdefault(key, []).append(rep)
+        return out
+
+    def table(self, *fields: str) -> list[dict[str, Any]]:
+        """One summary row per spec: the requested spec fields plus the
+        metrics every run reports (rounds, final grad norm where the
+        algorithm exposes it, total uplink bits, wall time)."""
+        rows = []
+        for spec, rep in zip(self.specs, self.reports):
+            row: dict[str, Any] = {f: _spec_get(spec, f) for f in fields}
+            last = rep.records[-1] if rep.records else None
+            row.update(
+                rounds=rep.rounds,
+                grad_norm=(last.grad_norm if last is not None else None),
+                sent_bits_total=int(np.sum(rep.sent_bits)) if rep.records else 0,
+                wall_time_s=rep.wall_time_s,
+            )
+            rows.append(row)
+        return rows
+
+    def round_table(self, column: str) -> np.ndarray:
+        """(n_specs, max_rounds) per-round metric table (``grad_norm``,
+        ``sent_bits``, ``f``, ...); shorter runs are padded with NaN."""
+        width = max((rep.rounds for rep in self.reports), default=0)
+        out = np.full((len(self.reports), width), np.nan)
+        for i, rep in enumerate(self.reports):
+            vals = [getattr(r, column) for r in rep.records]
+            out[i, : len(vals)] = [
+                np.nan if v is None else float(v) for v in vals
+            ]
+        return out
+
+    def summary(self) -> str:
+        batched = self.extras.get("batched_specs", 0)
+        return (
+            f"sweep: {len(self.reports)} specs in {self.wall_time_s:.2f}s "
+            f"({len(self.reports) / self.wall_time_s:.1f} specs/s; "
+            f"{batched} batched, {len(self.reports) - batched} fallback, "
+            f"{self.extras.get('n_groups', 0)} groups)"
+            if self.wall_time_s > 0
+            else f"sweep: {len(self.reports)} specs"
+        )

@@ -243,4 +243,15 @@ class ExperimentSpec:
         identical experiment on another backend."""
         return dataclasses.replace(self, **changes)
 
+    def grid(self, *, batch: str = "auto", **axes: Any) -> "SweepSpec":
+        """Expand this spec into a :class:`repro.api.SweepSpec` —
+        ``spec.grid(seed=range(4), compressor=["topk", "randk"])`` is the
+        whole compressor x seed table; ``solve_many`` runs it as one (or a
+        few) compiled programs.  Axis names are ExperimentSpec fields plus
+        the nested aliases (``compressor`` by name, ``k_multiplier``,
+        ``dataset``, ``data_seed``, ...)."""
+        from repro.api.sweep import grid as _grid
+
+        return _grid(self, batch=batch, **axes)
+
 

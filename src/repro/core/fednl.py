@@ -176,19 +176,24 @@ def master_step(
     return x - dx
 
 
-def make_fednl_round(
-    z: jax.Array, cfg: FedNLConfig
-) -> Callable[[FedNLState], tuple[FedNLState, RoundMetrics]]:
-    """Build the jittable single-round transition for problem data `z`."""
-    n_clients, _, d = z.shape
-    comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
-    alpha = comp.alpha if cfg.alpha is None else cfg.alpha
-    from repro.api.accounting import payload_bits_fn, wire_bits_fn
+def fednl_round_kernel(
+    cfg: FedNLConfig,
+    comp: Compressor,
+    alpha: float,
+    pay_fn: Callable,
+    wire_fn: Callable,
+) -> Callable[[jax.Array, FedNLState], tuple[FedNLState, RoundMetrics]]:
+    """Algorithm-1 round body with the problem data as an explicit operand.
 
-    pay_fn = payload_bits_fn(comp, d)
-    wire_fn = wire_bits_fn(comp, d)
+    ``make_fednl_round`` closes it over a fixed ``z`` (the single-experiment
+    path); the sweep batch engine (``repro.core.fednl_batch``) instead maps it
+    over a stacked spec axis, substituting a ``lax.switch``-dispatched
+    compressor and bit models.  The body is shared so the two paths cannot
+    drift: the batched trajectory is the sequential trajectory, op for op.
+    """
 
-    def round_fn(state: FedNLState) -> tuple[FedNLState, RoundMetrics]:
+    def round_fn(z: jax.Array, state: FedNLState) -> tuple[FedNLState, RoundMetrics]:
+        n_clients, _, d = z.shape
         key, sub = jax.random.split(state.key)
         client_keys = jax.random.split(sub, n_clients)
         f_i, grad_i, s_i, l_i, h_local_new, sent_i = jax.vmap(
@@ -227,3 +232,18 @@ def make_fednl_round(
         return new_state, metrics
 
     return round_fn
+
+
+def make_fednl_round(
+    z: jax.Array, cfg: FedNLConfig
+) -> Callable[[FedNLState], tuple[FedNLState, RoundMetrics]]:
+    """Build the jittable single-round transition for problem data `z`."""
+    _, _, d = z.shape
+    comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
+    alpha = comp.alpha if cfg.alpha is None else cfg.alpha
+    from repro.api.accounting import payload_bits_fn, wire_bits_fn
+
+    body = fednl_round_kernel(
+        cfg, comp, alpha, payload_bits_fn(comp, d), wire_bits_fn(comp, d)
+    )
+    return lambda state: body(z, state)

@@ -1,0 +1,131 @@
+"""Batched multi-spec FedNL rounds — the kernels behind ``solve_many``.
+
+One sweep group = many ``ExperimentSpec``s that share every trace-shaping
+hyper-parameter (shape, algorithm, option, alpha, rounds, ...) but vary in
+*runtime* values: PRNG seed, problem data, and compressor choice.  The batch
+round builders here turn the single-spec round kernels
+(:func:`repro.core.fednl.fednl_round_kernel`,
+:func:`repro.core.fednl_ls.fednl_ls_round_kernel`) into a body
+
+    body(z_i, comp_idx_i, state_i) -> (state_i', metrics_i)
+
+that the sweep engine (``repro.api.batch``) maps over a stacked spec axis and
+scans over rounds — the whole sweep becomes ONE compiled program.
+
+Bit-identity contract (measured, DESIGN.md §9): the acceptance bar for the
+sweep engine is that every per-spec trajectory equals the sequential
+``solve()`` trajectory BIT-for-bit.  On the XLA CPU backend that rules two
+layouts out and one in:
+
+  * ``jax.vmap`` over the spec axis batches the client matmuls and the master
+    Cholesky into different kernels (1-2 ulp drift from round 2 on);
+  * ``lax.switch`` with a dynamic index inside ``lax.scan`` re-fuses the
+    FP-heavy ops inside the conditional (same ulp drift);
+  * ``lax.map`` over the spec axis with the *whole* round in the shared
+    region is bit-exact — and so is a dynamic ``lax.switch`` that contains
+    ONLY the compressor's selection/rounding ops (top_k, gather, roll,
+    frexp/ldexp) and the integer bit accounting, because those are exact
+    regardless of fusion.
+
+Hence the split implemented here: the round kernel (oracles, means, Newton
+step, line search) stays in the mapped/scanned region; per-spec compressor
+variation enters through a *switched compressor* whose ``compress`` is the
+only conditional, indexed into the group's compressor table; the affine bit
+models are switched too (integer arithmetic — exact under any layout).
+``repro.api.batch`` additionally offers an opt-in ``vmap`` layout for
+accelerator throughput where the bit-identity guarantee is explicitly waived.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.compressors import Compressor
+from repro.core.fednl import FedNLConfig, fednl_round_kernel
+from repro.core.fednl_ls import fednl_ls_round_kernel
+
+
+def switched_compressor(comps: Sequence[Compressor], comp_idx) -> Compressor:
+    """A compressor whose ``compress`` is ``lax.switch(comp_idx, table)``.
+
+    ``sent_elems`` is normalized to int64 so every branch returns the same
+    pytree (TopLEK's data-dependent count vs the static-k compressors).
+    Only ``compress`` is meaningful on the returned object — the batch
+    kernels resolve alpha and the bit models separately (alpha is shared
+    across a group; bits go through :func:`switched_bits_fn`).
+    """
+    branches = [
+        (
+            lambda key, u, c=c: (
+                lambda u_hat, sent: (u_hat, jnp.asarray(sent, jnp.int64))
+            )(*c.compress(key, u))
+        )
+        for c in comps
+    ]
+    return dataclasses.replace(
+        comps[0],
+        name="switched(" + "|".join(c.name for c in comps) + ")",
+        compress=lambda key, u: jax.lax.switch(comp_idx, branches, key, u),
+        compress_sparse=None,
+    )
+
+
+def switched_bits_fn(bit_fns: Sequence[Callable], comp_idx) -> Callable:
+    """Per-spec uplink bit model: switch over the group's (affine, integer)
+    payload/wire models.  Integer arithmetic is exact under any compilation
+    layout, so this switch cannot break the bit-identity contract."""
+    branches = [
+        (lambda s_e, f=f: jnp.asarray(f(s_e), jnp.int64)) for f in bit_fns
+    ]
+    return lambda s_e: jax.lax.switch(comp_idx, branches, s_e)
+
+
+def make_fednl_batch_round(
+    cfg: FedNLConfig, comps: Sequence[Compressor], alpha: float
+) -> Callable:
+    """Batched Algorithm-1 round: ``body(z, comp_idx, state)``.
+
+    ``cfg`` supplies the group-shared hyper-parameters (its ``compressor`` /
+    ``k_multiplier`` fields are ignored — the per-spec compressor is selected
+    by ``comp_idx`` into ``comps``); ``alpha`` is the group-shared resolved
+    Hessian learning rate.
+    """
+    from repro.api.accounting import payload_bits_fn, wire_bits_fn
+
+    def body(z, comp_idx, state):
+        d = z.shape[-1]
+        kern = fednl_round_kernel(
+            cfg,
+            switched_compressor(comps, comp_idx),
+            alpha,
+            switched_bits_fn([payload_bits_fn(c, d) for c in comps], comp_idx),
+            switched_bits_fn([wire_bits_fn(c, d) for c in comps], comp_idx),
+        )
+        return kern(z, state)
+
+    return body
+
+
+def make_fednl_ls_batch_round(
+    cfg: FedNLConfig, comps: Sequence[Compressor], alpha: float
+) -> Callable:
+    """Batched Algorithm-2 round: ``body(z, comp_idx, state)`` (the Armijo
+    ``while_loop`` is bit-stable in the mapped region — DESIGN.md §9)."""
+    from repro.api.accounting import payload_bits_fn, wire_bits_fn
+
+    def body(z, comp_idx, state):
+        d = z.shape[-1]
+        kern = fednl_ls_round_kernel(
+            cfg,
+            switched_compressor(comps, comp_idx),
+            alpha,
+            switched_bits_fn([payload_bits_fn(c, d) for c in comps], comp_idx),
+            switched_bits_fn([wire_bits_fn(c, d) for c in comps], comp_idx),
+        )
+        return kern(z, state)
+
+    return body

@@ -50,19 +50,23 @@ class LSRoundMetrics(NamedTuple):
     sent_bits_wire: jax.Array
 
 
-def make_fednl_ls_round(
-    z: jax.Array, cfg: FedNLConfig
-) -> Callable[[FedNLState], tuple[FedNLState, LSRoundMetrics]]:
-    n_clients, _, d = z.shape
-    comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
-    alpha = comp.alpha if cfg.alpha is None else cfg.alpha
-    pay_fn = payload_bits_fn(comp, d)
-    wire_fn = wire_bits_fn(comp, d)
+def fednl_ls_round_kernel(
+    cfg: FedNLConfig,
+    comp,
+    alpha: float,
+    pay_fn: Callable,
+    wire_fn: Callable,
+) -> Callable[[jax.Array, FedNLState], tuple[FedNLState, LSRoundMetrics]]:
+    """Algorithm-2 round body with the problem data as an explicit operand
+    (same split as :func:`repro.core.fednl.fednl_round_kernel`: the sweep
+    batch engine maps this body over a stacked spec axis)."""
 
-    def f_global(x: jax.Array) -> jax.Array:
-        return jnp.mean(jax.vmap(lambda zi: logreg_f(zi, x, cfg.lam))(z))
+    def round_fn(z: jax.Array, state: FedNLState) -> tuple[FedNLState, LSRoundMetrics]:
+        n_clients, _, d = z.shape
 
-    def round_fn(state: FedNLState) -> tuple[FedNLState, LSRoundMetrics]:
+        def f_global(x: jax.Array) -> jax.Array:
+            return jnp.mean(jax.vmap(lambda zi: logreg_f(zi, x, cfg.lam))(z))
+
         key, sub = jax.random.split(state.key)
         client_keys = jax.random.split(sub, n_clients)
         f_i, grad_i, s_i, l_i, h_local_new, sent_i = jax.vmap(
@@ -131,3 +135,15 @@ def make_fednl_ls_round(
         return new_state, metrics
 
     return round_fn
+
+
+def make_fednl_ls_round(
+    z: jax.Array, cfg: FedNLConfig
+) -> Callable[[FedNLState], tuple[FedNLState, LSRoundMetrics]]:
+    _, _, d = z.shape
+    comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
+    alpha = comp.alpha if cfg.alpha is None else cfg.alpha
+    body = fednl_ls_round_kernel(
+        cfg, comp, alpha, payload_bits_fn(comp, d), wire_bits_fn(comp, d)
+    )
+    return lambda state: body(z, state)

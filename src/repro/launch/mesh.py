@@ -20,3 +20,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def data_axes(mesh) -> tuple[str, ...] | str:
     """The batch-sharding axis (pod folds into data on the multi-pod mesh)."""
     return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def sweep_mesh_devices(batch_size: int) -> int:
+    """How many local devices the sweep engine can shard a batch of
+    ``batch_size`` specs across: the largest device count that divides the
+    batch (1 = keep the batch on one device, no mesh needed)."""
+    n_dev = len(jax.devices())
+    while n_dev > 1 and batch_size % n_dev:
+        n_dev -= 1
+    return n_dev
+
+
+def make_sweep_mesh(n_dev: int):
+    """1-D mesh over the spec axis of a batched sweep (``solve_many``):
+    each device runs the identical scan program on its shard of the stacked
+    per-spec state — no collectives, embarrassingly parallel."""
+    return jax.make_mesh((n_dev,), ("sweep",))

@@ -28,6 +28,7 @@ import argparse
 import dataclasses
 import multiprocessing as mp
 import os
+import threading
 
 from repro.core.fednl import FedNLConfig
 
@@ -84,6 +85,11 @@ def _client_entry(
     client.run()
 
 
+# serializes the PYTHONPATH mutate-spawn-restore window across threads
+# (solve_many dispatches star-tcp specs from a worker pool)
+_SPAWN_ENV_LOCK = threading.Lock()
+
+
 def _run_with_clients(
     cfg: FedNLConfig,
     dataset: str,
@@ -114,30 +120,43 @@ def _run_with_clients(
     ctx = mp.get_context("spawn")
     # make `repro` importable in the children regardless of the parent's cwd
     src_dir = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    old_pp = os.environ.get("PYTHONPATH")
-    os.environ["PYTHONPATH"] = src_dir + (os.pathsep + old_pp if old_pp else "")
     procs = []
     try:
-        for i in range(n_clients):
-            p = ctx.Process(
-                target=_client_entry,
-                args=(
-                    i,
-                    n_clients,
-                    dataset,
-                    shape,
-                    dataclasses.asdict(cfg),
-                    seed,
-                    host,
-                    master.port,
-                    pp,
-                    fault_dict,
-                    data_seed,
-                ),
-                daemon=True,
+        # children capture os.environ at start(), so the PYTHONPATH mutation
+        # only needs to span the spawn loop; the lock makes concurrent runs
+        # (solve_many's star-tcp worker pool) safe against each other's
+        # mutate-and-restore
+        with _SPAWN_ENV_LOCK:
+            old_pp = os.environ.get("PYTHONPATH")
+            os.environ["PYTHONPATH"] = src_dir + (
+                os.pathsep + old_pp if old_pp else ""
             )
-            p.start()
-            procs.append(p)
+            try:
+                for i in range(n_clients):
+                    p = ctx.Process(
+                        target=_client_entry,
+                        args=(
+                            i,
+                            n_clients,
+                            dataset,
+                            shape,
+                            dataclasses.asdict(cfg),
+                            seed,
+                            host,
+                            master.port,
+                            pp,
+                            fault_dict,
+                            data_seed,
+                        ),
+                        daemon=True,
+                    )
+                    p.start()
+                    procs.append(p)
+            finally:
+                if old_pp is None:
+                    os.environ.pop("PYTHONPATH", None)
+                else:
+                    os.environ["PYTHONPATH"] = old_pp
         conns = master.accept_clients()
         result = master_fn(conns, d)
         for conn in conns.values():
@@ -146,10 +165,6 @@ def _run_with_clients(
             p.join(timeout=60)
         return result
     finally:
-        if old_pp is None:
-            os.environ.pop("PYTHONPATH", None)
-        else:
-            os.environ["PYTHONPATH"] = old_pp
         for p in procs:
             if p.is_alive():
                 p.terminate()

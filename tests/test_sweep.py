@@ -1,0 +1,255 @@
+"""SweepSpec -> solve_many: expansion contracts and engine bit-parity.
+
+Two layers of guarantees:
+
+  * spec layer: ``ExperimentSpec.grid`` expansion is validated like a
+    hand-built spec, and invalid axis values fail with the same
+    registry-backed errors as ``solve()`` (the hypothesis-driven expansion
+    properties live in tests/test_sweep_properties.py);
+  * engine layer: ``solve_many`` over seeds x compressors grids on the local
+    backend returns per-spec results BIT-identical to sequential ``solve()``
+    (the acceptance criterion of the sweep engine), mixed-backend sweeps
+    dispatch through pool/fallback without dropping specs, and the
+    aggregation helpers reshape the per-round records faithfully.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CompressorSpec,
+    DataSpec,
+    ExperimentSpec,
+    SweepSpec,
+    solve,
+    solve_many,
+)
+
+BASE = ExperimentSpec(data=DataSpec(dataset="tiny", seed=1), rounds=4)
+
+
+def assert_bit_identical(got, want):
+    assert [g.hex() for g in got.grad_norms] == [
+        g.hex() for g in want.grad_norms
+    ], "grad-norm trajectory drifted from sequential solve()"
+    np.testing.assert_array_equal(got.x, want.x)
+    assert list(got.sent_bits) == list(want.sent_bits)
+    assert list(got.sent_bits_wire) == list(want.sent_bits_wire)
+
+
+# ---------------------------------------------------------------------------
+# expansion contracts (fixed cases; properties in test_sweep_properties.py)
+# ---------------------------------------------------------------------------
+
+def test_grid_expansion_fixed_case():
+    sweep = BASE.grid(seed=[0, 1, 2], compressor=["topk", "randseqk"])
+    specs = sweep.specs()
+    assert len(specs) == sweep.n_specs == 6
+    assert specs == BASE.grid(seed=[0, 1, 2], compressor=["topk", "randseqk"]).specs()
+    assert len(set(specs)) == 6
+    assert [(s.seed, s.compressor.name) for s in specs] == [
+        (s, c) for s in [0, 1, 2] for c in ["topk", "randseqk"]
+    ]
+
+
+def test_grid_invalid_axis_values_fail_like_solve():
+    # spec-level validation errors surface at expansion, identical to
+    # hand-building the spec
+    with pytest.raises(ValueError, match="unknown option"):
+        BASE.grid(option=["A", "Z"]).specs()
+    with pytest.raises(ValueError, match="accounting"):
+        BASE.grid(accounting=["payload", "bytes"]).specs()
+    with pytest.raises(ValueError, match="partial participation"):
+        BASE.grid(tau=[2]).specs()  # tau on a full-participation algorithm
+    # registry-backed errors surface from solve_many exactly as from solve()
+    with pytest.raises(KeyError, match="unknown algorithm"):
+        solve_many(BASE.grid(algorithm=["fednl", "fednl2"]))
+    with pytest.raises(KeyError, match="unknown backend"):
+        solve_many(BASE.grid(backend=["local", "ray"]))
+    with pytest.raises(KeyError, match="unknown compressor"):
+        solve_many(BASE.grid(compressor=["topk", "bzip2"], rounds=[1]))
+
+
+def test_sweep_spec_shape_validation():
+    with pytest.raises(ValueError, match="unknown sweep axis"):
+        BASE.grid(compresor=["topk"])  # typo'd axis name
+    with pytest.raises(ValueError, match="duplicate values"):
+        BASE.grid(seed=[1, 1])
+    with pytest.raises(ValueError, match="no values"):
+        BASE.grid(seed=[])
+    with pytest.raises(ValueError, match="unknown batch mode"):
+        BASE.grid(seed=[0, 1], batch="eventually")
+    with pytest.raises(ValueError, match="duplicate sweep axis"):
+        SweepSpec(base=BASE, axes=(("seed", (0,)), ("seed", (1,))))
+    with pytest.raises(ValueError, match="duplicate specs"):
+        # distinct axis values that normalize to the same spec
+        BASE.grid(compressor=["topk", CompressorSpec("topk")]).specs()
+    # a SweepSpec is frozen data, like the ExperimentSpec it expands
+    sweep = BASE.grid(seed=[0, 1])
+    assert sweep.replace(batch="never").batch == "never"
+    assert sweep.batch == "auto"
+
+
+# ---------------------------------------------------------------------------
+# engine bit-parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_solve_many_8_spec_grid_bit_identical_to_sequential():
+    """>= 8 specs (seeds x compressors, local backend) through one batched
+    program == sequential solve(), bit for bit."""
+    sweep = BASE.grid(seed=[0, 1, 2, 3], compressor=["topk", "randseqk"])
+    rep = solve_many(sweep)
+    assert rep.extras["batched_specs"] == 8, rep.log
+    assert len(rep.reports) == 8
+    for spec, got in zip(sweep.specs(), rep.reports):
+        assert_bit_identical(got, solve(spec))
+        assert got.extras["sweep_batched"] is True
+        assert got.extras["compressor_branch"] == spec.compressor.name
+
+
+def test_solve_many_ls_and_data_axis_bit_identical():
+    """FedNL-LS batches too (Armijo while_loop in the mapped region), and a
+    data axis splits into per-dataset programs that stay bit-exact."""
+    sweep = BASE.replace(algorithm="fednl-ls", option="A").grid(
+        data_seed=[1, 2], compressor=["randseqk", "toplek"]
+    )
+    rep = solve_many(sweep)
+    assert rep.extras["batched_specs"] == 4
+    assert rep.extras["n_groups"] == 2  # one compiled program per DataSpec
+    for spec, got in zip(sweep.specs(), rep.reports):
+        ref = solve(spec)
+        assert_bit_identical(got, ref)
+        assert [r.ls_steps for r in got.records] == [
+            r.ls_steps for r in ref.records
+        ]
+
+
+def test_solve_many_mixed_backend_dispatch():
+    """Wire-backend specs go through the worker pool, local ones batch; no
+    spec is dropped and every result matches its sequential run."""
+    sweep = BASE.grid(backend=["local", "star-loopback"], seed=[0, 1])
+    rep = solve_many(sweep)
+    assert len(rep.reports) == 4
+    assert rep.extras["batched_specs"] == 2
+    assert any("pool" in line for line in rep.log)
+    for spec, got in zip(sweep.specs(), rep.reports):
+        assert got.backend == spec.backend
+        assert_bit_identical(got, solve(spec))
+
+
+def test_solve_many_fallbacks_are_logged_not_dropped():
+    """Incompatible specs (PP on local, tol early-stop) fall back per spec
+    with a logged reason."""
+    specs = [
+        BASE.replace(algorithm="fednl-pp", tau=3, rounds=3),
+        BASE.replace(tol=1e-10, rounds=30),
+        BASE.replace(seed=5),  # lone batchable spec -> sequential, logged
+    ]
+    rep = solve_many(specs)
+    assert len(rep.reports) == 3 and all(r is not None for r in rep.reports)
+    assert rep.extras["batched_specs"] == 0
+    assert sum("fallback" in line for line in rep.log) == 3
+    ref_pp = solve(specs[0])
+    np.testing.assert_array_equal(rep.reports[0].x_hist, ref_pp.x_hist)
+    assert rep.reports[1].rounds == solve(specs[1]).rounds  # early stop honored
+
+
+def test_solve_many_batch_never_and_list_input():
+    sweep = BASE.grid(seed=[0, 1], batch="never")
+    rep = solve_many(sweep)
+    assert rep.extras["batched_specs"] == 0
+    for spec, got in zip(sweep.specs(), rep.reports):
+        assert_bit_identical(got, solve(spec))
+    # plain spec lists are accepted too
+    as_list = solve_many(list(sweep.specs()))
+    assert len(as_list.reports) == 2
+    with pytest.raises(ValueError, match="empty sweep"):
+        solve_many([])
+    with pytest.raises(TypeError, match="SweepSpec or ExperimentSpecs"):
+        solve_many(["fednl"])
+
+
+def test_solve_many_vmap_mode_close_to_sequential():
+    """The opt-in vmap layout waives bit-identity but must stay within
+    float64 noise of the sequential trajectory."""
+    sweep = BASE.grid(seed=[0, 1], compressor=["topk", "randseqk"], batch="vmap")
+    rep = solve_many(sweep)
+    assert rep.extras["batched_specs"] == 4
+    for spec, got in zip(sweep.specs(), rep.reports):
+        ref = solve(spec)
+        np.testing.assert_allclose(got.x, ref.x, rtol=0, atol=1e-12)
+        np.testing.assert_allclose(
+            got.grad_norms, ref.grad_norms, rtol=1e-9, atol=1e-15
+        )
+        # the bit models are integer-exact in every layout
+        assert list(got.sent_bits) == list(ref.sent_bits)
+
+
+# ---------------------------------------------------------------------------
+# SweepReport aggregation
+# ---------------------------------------------------------------------------
+
+def test_sweep_report_aggregation_helpers():
+    sweep = BASE.grid(seed=[0, 1], compressor=["topk", "randseqk"])
+    rep = solve_many(sweep)
+    by_comp = rep.group_by("compressor.name")
+    assert set(by_comp) == {("topk",), ("randseqk",)}
+    assert all(len(v) == 2 for v in by_comp.values())
+    rows = rep.table("seed", "compressor.name")
+    assert len(rows) == 4
+    assert rows[0]["compressor.name"] == "topk" and rows[0]["rounds"] == 4
+    assert all(row["sent_bits_total"] > 0 for row in rows)
+    gn = rep.round_table("grad_norm")
+    assert gn.shape == (4, 4) and not np.isnan(gn).any()
+    np.testing.assert_array_equal(gn[0], rep.reports[0].grad_norms)
+    bits = rep.round_table("sent_bits")
+    assert (bits > 0).all()
+    assert "4 specs" in rep.summary()
+    assert rep[0] is rep.reports[0] and len(rep) == 4
+    assert [r for r in rep] == rep.reports
+
+
+@pytest.mark.slow
+def test_solve_many_shards_across_devices_bit_identical():
+    """With multiple (forced host) devices the spec axis is sharded across
+    the 1-D sweep mesh; trajectories stay bit-identical to sequential
+    solve() on the default single device.  Runs in a subprocess because
+    XLA_FLAGS must be set before jax initializes."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    code = r"""
+import json, os, sys
+import jax
+jax.config.update("jax_enable_x64", True)
+from repro.api import DataSpec, ExperimentSpec, solve_many
+assert jax.device_count() == 4, jax.device_count()
+base = ExperimentSpec(data=DataSpec(dataset="tiny", seed=1), rounds=4)
+rep = solve_many(base.grid(seed=[0, 1, 2, 3], compressor=["topk", "randseqk"]))
+assert rep.reports[0].extras["devices"] == 4, rep.reports[0].extras
+out = [[g.hex() for g in r.grad_norms] for r in rep.reports]
+print(json.dumps(out))
+"""
+    env = dict(
+        os.environ,
+        XLA_FLAGS=os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4",
+        JAX_PLATFORMS="cpu",
+    )
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    sharded = json.loads(proc.stdout.strip().splitlines()[-1])
+    base = ExperimentSpec(data=DataSpec(dataset="tiny", seed=1), rounds=4)
+    for traj, spec in zip(
+        sharded, base.grid(seed=[0, 1, 2, 3], compressor=["topk", "randseqk"]).specs()
+    ):
+        assert traj == [g.hex() for g in solve(spec).grad_norms], (
+            "device-sharded sweep drifted from the single-device trajectory"
+        )

@@ -1,0 +1,78 @@
+"""Property-based SweepSpec/grid contracts (hypothesis).
+
+tests/test_sweep.py pins the engine parity and fixed-shape expansion cases;
+this module lets hypothesis hunt the axis space for violations of the
+expansion contracts: count = axis product, determinism, duplicate-freedom,
+and declared-order variation.  Skips cleanly when hypothesis is absent
+(requirements-dev.txt / `pip install -e .[test]`).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.api import DataSpec, ExperimentSpec
+
+BASE = ExperimentSpec(data=DataSpec(dataset="tiny", seed=1), rounds=4)
+
+COMPRESSORS = ["identity", "topk", "randk", "randseqk", "toplek", "natural"]
+
+axes_strategy = st.fixed_dictionaries(
+    {},
+    optional={
+        "seed": st.lists(
+            st.integers(0, 10_000), min_size=1, max_size=5, unique=True
+        ),
+        "compressor": st.lists(
+            st.sampled_from(COMPRESSORS), min_size=1, max_size=6, unique=True
+        ),
+        "k_multiplier": st.lists(
+            st.sampled_from([1.0, 2.0, 4.0, 8.0]), min_size=1, max_size=3,
+            unique=True,
+        ),
+        "rounds": st.lists(
+            st.integers(0, 50), min_size=1, max_size=3, unique=True
+        ),
+        "option": st.lists(
+            st.sampled_from(["A", "B"]), min_size=1, max_size=2, unique=True
+        ),
+        "data_seed": st.lists(
+            st.integers(0, 100), min_size=1, max_size=3, unique=True
+        ),
+    },
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(axes=axes_strategy)
+def test_grid_expansion_count_is_axis_product(axes):
+    sweep = BASE.grid(**axes)
+    expected = 1
+    for values in axes.values():
+        expected *= len(values)
+    specs = sweep.specs()
+    assert len(specs) == expected == sweep.n_specs == len(sweep)
+
+
+@settings(max_examples=40, deadline=None)
+@given(axes=axes_strategy)
+def test_grid_expansion_deterministic_and_duplicate_free(axes):
+    first, second = BASE.grid(**axes).specs(), BASE.grid(**axes).specs()
+    assert first == second, "expansion must be deterministic"
+    assert len(set(first)) == len(first), "expansion must be duplicate-free"
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seeds=st.lists(st.integers(0, 100), min_size=1, max_size=4, unique=True),
+    comps=st.lists(
+        st.sampled_from(COMPRESSORS), min_size=1, max_size=4, unique=True
+    ),
+)
+def test_grid_axis_order_later_axes_vary_fastest(seeds, comps):
+    specs = BASE.grid(seed=seeds, compressor=comps).specs()
+    expected = [(s, c) for s in seeds for c in comps]
+    assert [(sp.seed, sp.compressor.name) for sp in specs] == expected
