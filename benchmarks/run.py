@@ -1,10 +1,13 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV and
-# record the machine-readable perf trajectory to BENCH_sweep.json.
+# record the machine-readable perf trajectory to BENCH_sweep.json +
+# BENCH_session.json.
 #
 #   PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_sweep.json]
+#       [--json-session BENCH_session.json]
 #
-# --quick runs only the sweep-engine speedup benchmark (what CI records and
-# uploads as an artifact); the full run additionally times every paper table.
+# --quick runs only the sweep-engine speedup benchmark and the session-mode
+# overhead benchmark (what CI records and uploads as artifacts); the full
+# run additionally times every paper table.
 # Tables 1-4 mirror the paper's Tables 1-3 + Appendix B progression; the
 # roofline rows read the dry-run sweep JSON (produced separately by
 # ``python -m repro.launch.dryrun --arch all --shape all --both-meshes
@@ -22,6 +25,9 @@ def main() -> int:
                     help="sweep speedup benchmark only (skip the paper tables)")
     ap.add_argument("--json", default="BENCH_sweep.json", metavar="PATH",
                     help="where to write the machine-readable benchmark record")
+    ap.add_argument("--json-session", default="BENCH_session.json",
+                    metavar="PATH",
+                    help="where to write the session-overhead benchmark record")
     args = ap.parse_args()
 
     bench: dict = {"schema": 1, "tables": {}}
@@ -51,7 +57,7 @@ def main() -> int:
         rows.extend(roofline_report.roofline_rows())
 
     # the sweep-engine measurement itself: sequential-vs-batched on one grid
-    from benchmarks.tables import sweep_speedup_benchmark
+    from benchmarks.tables import session_overhead_benchmark, sweep_speedup_benchmark
 
     sweep = sweep_speedup_benchmark()
     bench["sweep"] = sweep
@@ -62,6 +68,18 @@ def main() -> int:
         f"bit_parity={sweep['bit_parity']}",
     ))
 
+    # session-mode cost: per-round step overhead vs monolithic solve
+    session = {"schema": 1, **session_overhead_benchmark()}
+    for backend, m in session["backends"].items():
+        rows.append((
+            f"session/step_overhead_{backend}",
+            m["step1_us_per_round"],
+            f"solve={m['solve_us_per_round']}us/rd;"
+            f"run={m['session_run_us_per_round']}us/rd;"
+            f"step1_overhead={m['step1_overhead_us_per_round']}us/rd;"
+            f"bit_parity={m['bit_parity']}",
+        ))
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -69,7 +87,10 @@ def main() -> int:
     with open(args.json, "w") as f:
         json.dump(bench, f, indent=2)
         f.write("\n")
-    print(f"# wrote {args.json}", file=sys.stderr)
+    with open(args.json_session, "w") as f:
+        json.dump(session, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.json} and {args.json_session}", file=sys.stderr)
     return 0
 
 

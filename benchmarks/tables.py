@@ -307,5 +307,65 @@ def sweep_speedup_benchmark(n_seeds: int = 8, rounds: int = 20) -> dict:
     }
 
 
+def _session_overhead_one(backend: str, rounds: int) -> dict:
+    """Three executions of one spec, bit-identical trajectories:
+      solve      solve(spec) — open -> run -> close, chunked segment
+      run        an already-open session's run() (excludes open/compile)
+      step1      an already-open session stepped one round at a time — the
+                 worst case: every round pays record materialization (host
+                 sync) and observer-path bookkeeping
+
+    Not a sweep: the same spec is re-run per execution MODE (check_api_
+    migration's sequential-sweep rule watches for loops over specs)."""
+    import time
+
+    from repro.api import open_session
+
+    spec = ExperimentSpec(
+        data=DataSpec(dataset="tiny", seed=1), backend=backend, rounds=rounds
+    )
+    z = spec.data.build()
+
+    t0 = time.perf_counter()
+    rep = solve(spec, z=z)
+    solve_s = time.perf_counter() - t0
+
+    with open_session(spec, z=z) as s:
+        t0 = time.perf_counter()
+        run_rep = s.run()
+        run_s = time.perf_counter() - t0
+
+    with open_session(spec, z=z) as s:
+        t0 = time.perf_counter()
+        while s.round < rounds:
+            s.step(1)
+        step_rep = s.report()
+        step_s = time.perf_counter() - t0
+
+    parity = [g.hex() for g in rep.grad_norms] == [
+        g.hex() for g in run_rep.grad_norms
+    ] == [g.hex() for g in step_rep.grad_norms]
+    return {
+        "solve_us_per_round": round(solve_s * 1e6 / rounds, 1),
+        "session_run_us_per_round": round(run_s * 1e6 / rounds, 1),
+        "step1_us_per_round": round(step_s * 1e6 / rounds, 1),
+        "step1_overhead_us_per_round": round((step_s - run_s) * 1e6 / rounds, 1),
+        "bit_parity": parity,
+    }
+
+
+def session_overhead_benchmark(rounds: int = 30) -> dict:
+    """Session-mode cost tracking (BENCH_session.json): per-round overhead of
+    round-granular stepping vs the monolithic observer-free run, on the
+    local simulation and the star-loopback wire backend."""
+    return {
+        "rounds": rounds,
+        "backends": {
+            backend: _session_overhead_one(backend, rounds)
+            for backend in ["local", "star-loopback"]
+        },
+    }
+
+
 ALL_TABLES = [table1_singlenode, table2_ls_vs_solvers, table3_multinode,
               table4_progression, table5_wire_formats, table6_pp_participation]

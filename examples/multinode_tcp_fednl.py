@@ -6,15 +6,25 @@ declarative API: one ExperimentSpec per compressor with ``backend="star-tcp"``
 spec* re-solved with ``backend="local"`` — the only field that changes — to
 check the TCP run reproduces the single-node simulation.
 
+The second half drives the same deployment through the Session API
+(DESIGN.md §10): step a live multi-node run by hand, checkpoint the master
+mid-run, tear the whole process tree down, and resume from the checkpoint —
+the fresh client processes rebuild their state from the spec + replayed PRNG
+spine (no client state ever touches disk), bit-identical to an
+uninterrupted run.
+
     PYTHONPATH=src python examples/multinode_tcp_fednl.py
 """
+
+import tempfile
+from pathlib import Path
 
 import jax
 
 jax.config.update("jax_enable_x64", True)
 import numpy as np
 
-from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
+from repro.api import CompressorSpec, DataSpec, ExperimentSpec, open_session, solve
 from repro.comm.cost import DEFAULT_COST
 
 
@@ -42,6 +52,27 @@ def main():
         assert dx <= 1e-8, "TCP run must reproduce the simulation trajectory"
         assert (rep.extras["measured_payload_bits"][:r]
                 == rep.sent_bits_payload[:r]).all()
+
+    # --- pause and resume the multi-node run -------------------------------
+    spec = base.replace(compressor=CompressorSpec("topk"))
+    uninterrupted = solve(spec)
+    ckpt = Path(tempfile.mkdtemp()) / "tcp_master.fnlsess"
+    with open_session(spec) as session:  # spawns the 8 client processes
+        session.step(2)
+        session.step(3)  # step(2)+step(3): composable round driving
+        session.save(ckpt)  # serialize ONLY master-side state
+    # the `with` exit stopped the master and tore down every client process
+    print(f"checkpointed master at round 5 -> {ckpt.name} "
+          f"({ckpt.stat().st_size} bytes), cluster torn down")
+
+    with open_session(spec, restore=ckpt) as session:  # fresh cluster
+        resumed = session.run()
+    same = [g.hex() for g in resumed.grad_norms] == [
+        g.hex() for g in uninterrupted.grad_norms
+    ]
+    print(f"resumed round 5 -> {resumed.rounds}; clients rebuilt by PRNG-"
+          f"spine replay; bit-identical to uninterrupted run: {same}")
+    assert same, "kill -> resume must reproduce the uninterrupted trajectory"
 
 
 if __name__ == "__main__":

@@ -2,19 +2,31 @@
 
     PYTHONPATH=src python examples/quickstart.py [--compressor topk]
 
-One declarative ExperimentSpec describes the whole run; solve() executes it.
-Change only ``backend=`` ("local" | "sharded" | "star-loopback" | "star-tcp")
-to re-run the identical experiment on another execution backend.
+One declarative ExperimentSpec describes the whole run.  The simple path is
+still one call — ``solve(spec)`` — and changing only ``backend=`` ("local" |
+"sharded" | "star-loopback" | "star-tcp") re-runs the identical experiment on
+another execution backend.  The second half shows the incremental Session
+form of the same run (DESIGN.md §10): stream rounds through an observer,
+stop early on a custom criterion, checkpoint mid-run, resume bit-identically.
 """
 
 import argparse
+import tempfile
+from pathlib import Path
 
 import jax
 
 jax.config.update("jax_enable_x64", True)  # FedNL is an FP64 algorithm
 import jax.numpy as jnp
 
-from repro.api import CompressorSpec, DataSpec, ExperimentSpec, solve
+from repro.api import (
+    CompressorSpec,
+    DataSpec,
+    ExperimentSpec,
+    StopPolicy,
+    open_session,
+    solve,
+)
 from repro.core import newton_baseline
 
 
@@ -40,6 +52,8 @@ def main():
     # build the problem once, shared with the centralized baseline below
     # (star-tcp workers rebuild their shards from the seed instead)
     z = spec.data.build()
+
+    # --- the simple path: one declarative spec, one call -------------------
     rep = solve(spec) if args.backend == "star-tcp" else solve(spec, z=z)
     print(f"FedNL(B)/{args.compressor}@{rep.backend}: {rep.rounds} rounds, "
           f"||grad|| = {rep.grad_norms[-1]:.2e}, "
@@ -50,6 +64,36 @@ def main():
     nb = newton_baseline(z, 1e-3)
     err = float(jnp.linalg.norm(jnp.asarray(rep.x) - jnp.asarray(nb.x)))
     print(f"distance to centralized Newton solution: {err:.2e}")
+
+    # --- the incremental path: the SAME run, round by round ----------------
+    # An observer streams records as they are produced; run() accepts a
+    # custom early-stop criterion solve() has no field for (here: stop once
+    # the round's uplink is cheap AND the gradient dropped 6 orders).
+    session = open_session(spec) if args.backend == "star-tcp" else \
+        open_session(spec, z=z)
+    session.on_round(
+        lambda rec: rec.round % 10 == 0
+        and print(f"  [observer] round {rec.round:3d}  "
+                  f"||grad|| = {rec.grad_norm:.3e}")
+    )
+    session.step(5)  # drive a few rounds by hand...
+    ckpt = Path(tempfile.mkdtemp()) / "quickstart.fnlsess"
+    session.save(ckpt)  # ...checkpoint mid-run...
+    early = session.run(  # ...then finish under a custom stop criterion
+        until=StopPolicy(predicate=lambda rec: rec.grad_norm < 1e-6)
+    )
+    session.close()
+    print(f"session: stopped early at round {early.rounds} "
+          f"(||grad|| = {early.grad_norms[-1]:.2e}), checkpoint at round 5")
+
+    # resume the checkpoint under the original budget: bit-identical to the
+    # uninterrupted solve() above
+    with open_session(spec, restore=ckpt) as resumed:
+        rep2 = resumed.run()
+    same = [g.hex() for g in rep2.grad_norms] == [g.hex() for g in rep.grad_norms]
+    print(f"resumed from round 5 -> {rep2.rounds} rounds; "
+          f"bit-identical to solve(): {same}")
+    assert same, "save -> resume must reproduce the uninterrupted trajectory"
 
 
 if __name__ == "__main__":

@@ -16,6 +16,12 @@ body in benchmarks/ or scripts/.  Looping solve() pays a fresh trace/compile
 and a device round-trip per spec; that is exactly what ``solve_many`` (one
 compiled program per batch group) exists to replace, so new sweep loops in
 the measurement layers fail CI.
+
+Rule 3 flags direct ``<backend>.run(...)`` / ``<backend>.open(...)`` calls
+outside ``repro.api``.  The Backend strategy protocol is the facade's
+internal seam: entry points that grab a backend object and drive it by hand
+bypass spec validation, capability checks and the Session bookkeeping — use
+``solve(spec)`` or ``open_session(spec)`` instead.
 """
 
 from __future__ import annotations
@@ -81,6 +87,30 @@ SWEEP_ALLOWLIST = {
 }
 
 
+# --- rule 3: direct backend .run()/.open() calls outside repro.api ----------
+
+# the facade seam: a receiver that *is* a backend — `get_backend(...).run(`,
+# `some_backend.run(`, `STAR_TCP_BACKEND.open(` ... — driven by hand.  The
+# name heuristic deliberately requires "backend" in the receiver so event-
+# loop objects (client.run(), master.run(rounds)) stay out of scope.
+BACKEND_DRIVE = re.compile(
+    r"(?:\bget_backend\s*\([^)]*\)|\b\w*(?:backend|BACKEND)\w*)\s*\.\s*(?:run|open)\s*\("
+)
+
+# rule 3 scans the entry-point layers AND the library itself; only repro.api
+# (the facade/session machinery the rule protects) is exempt
+BACKEND_SCANNED = ["examples", "scripts", "benchmarks", "src/repro"]
+
+BACKEND_ALLOWLIST = {
+    # this checker's own pattern table
+    "scripts/check_api_migration.py",
+}
+
+
+def is_api_internal(rel: str) -> bool:
+    return rel.startswith("src/repro/api/")
+
+
 def find_sweep_loops(text: str) -> list[tuple[int, str]]:
     """Line numbers of ``solve(`` calls lexically inside a ``for`` body
     (indentation-scoped, good enough for the flat scripts we scan), plus
@@ -123,6 +153,15 @@ def main() -> int:
                 continue
             for lineno, line in find_sweep_loops(path.read_text()):
                 sweep_bad.append(f"{rel}:{lineno}: {line}")
+    backend_bad: list[str] = []
+    for layer in BACKEND_SCANNED:
+        for path in sorted((ROOT / layer).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in BACKEND_ALLOWLIST or is_api_internal(rel):
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if BACKEND_DRIVE.search(line) and not line.lstrip().startswith("#"):
+                    backend_bad.append(f"{rel}:{lineno}: {line.strip()}")
     if bad:
         print("legacy driver calls reachable outside the facade "
               "(migrate to repro.api.solve or allowlist with a reason):")
@@ -131,10 +170,16 @@ def main() -> int:
         print("sequential sweep loops (one trace/compile per spec — migrate "
               "to repro.api.solve_many or allowlist with a reason):")
         print("\n".join(f"  {b}" for b in sweep_bad))
-    if bad or sweep_bad:
+    if backend_bad:
+        print("direct backend .run()/.open() calls outside repro.api "
+              "(bypasses spec validation/capability checks — use solve() / "
+              "open_session(), or allowlist with a reason):")
+        print("\n".join(f"  {b}" for b in backend_bad))
+    if bad or sweep_bad or backend_bad:
         return 1
     print(f"api migration clean: {', '.join(SCANNED)} go through solve(); "
-          f"{', '.join(SWEEP_SCANNED)} sweep via solve_many()")
+          f"{', '.join(SWEEP_SCANNED)} sweep via solve_many(); no direct "
+          "backend .run()/.open() outside repro.api")
     return 0
 
 

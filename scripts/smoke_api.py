@@ -1,5 +1,6 @@
 """CI gate: every registered algorithm x backend pair solves a 3-round spec,
-and a solve_many sweep reproduces sequential solve() bit-for-bit.
+a solve_many sweep reproduces sequential solve() bit-for-bit, and the
+Session API's step composability holds (step 2 + step 3 == solve 5).
 
     PYTHONPATH=src python scripts/smoke_api.py [--skip-tcp]
 
@@ -10,7 +11,10 @@ with a well-formed RunReport or is *declared* unsupported — a pair that is
 reachable but crashes fails the gate.  Then runs a socket-free 2x2
 seed x compressor grid through ``solve_many`` on the local backend and
 asserts per-spec bit-parity with sequential ``solve()`` (the sweep engine's
-core contract).  Exits non-zero on any failure.
+core contract).  Finally steps a 5-round spec as 2 + 3 through
+``open_session`` on every session-capable socket-free backend, round-trips a
+mid-run checkpoint, and asserts bit parity against ``solve()`` (the
+DESIGN.md §10 numerics contract).  Exits non-zero on any failure.
 
 NOTE the per-pair loop and the sweep parity reference below deliberately
 call solve() sequentially — each pair must fail in isolation, and the
@@ -33,6 +37,7 @@ from repro.api import (
     get_backend,
     list_algorithms,
     list_backends,
+    open_session,
     solve,
     solve_many,
 )
@@ -66,6 +71,65 @@ def sweep_smoke() -> int:
     if not failures:
         print(f"sweep smoke ok: {len(rep.reports)} specs bit-identical to "
               f"sequential solve() ({rep.summary()})")
+    return failures
+
+
+def session_smoke() -> int:
+    """Tier-1 session gate: step(2)+step(3) == solve(rounds=5) bit-for-bit,
+    and a mid-run save -> restore continues identically, on every
+    session-capable socket-free backend x algorithm kind."""
+    import tempfile
+    from pathlib import Path
+
+    tmp = Path(tempfile.mkdtemp())
+    cases = [
+        ("fednl", "local"),
+        ("fednl-pp", "local"),
+        ("fednl", "sharded"),
+        ("fednl", "star-loopback"),
+        ("fednl-pp", "star-loopback"),
+    ]
+    failures = 0
+    for algo_name, backend_name in cases:
+        tag = f"session {algo_name:9s} x {backend_name:13s}"
+        spec = ExperimentSpec(
+            algorithm=algo_name,
+            data=DataSpec(shape=SHAPE, seed=1),
+            backend=backend_name,
+            rounds=5,
+            seed=0,
+            tau=2 if get_algorithm(algo_name).kind == "pp" else None,
+        )
+        try:
+            want = solve(spec)
+            with open_session(spec) as s:
+                s.step(2)
+                ck = tmp / f"{algo_name}-{backend_name}.fnlsess"
+                s.save(ck)
+                s.step(3)
+                stepped = s.report()
+            with open_session(spec, restore=ck) as s:
+                resumed = s.run()
+            for got, label in ((stepped, "step(2)+step(3)"),
+                               (resumed, "save@2 -> restore -> run")):
+                same = (
+                    got.rounds == want.rounds
+                    and bool((got.x == want.x).all())
+                    and list(got.sent_bits) == list(want.sent_bits)
+                    and all(
+                        (g.grad_norm is None and w.grad_norm is None)
+                        or float(g.grad_norm).hex() == float(w.grad_norm).hex()
+                        for g, w in zip(got.records, want.records)
+                    )
+                )
+                if not same:
+                    failures += 1
+                    print(f"{tag} FAIL: {label} drifted from solve(5)")
+        except Exception as e:  # noqa: BLE001 — report per-pair
+            failures += 1
+            print(f"{tag} FAIL {type(e).__name__}: {e}")
+            continue
+        print(f"{tag} ok  (2+3 == 5; checkpoint round-trip)")
     return failures
 
 
@@ -112,6 +176,11 @@ def main() -> int:
     except Exception as e:  # noqa: BLE001 — the gate must report, not crash
         failures += 1
         print(f"sweep smoke FAIL {type(e).__name__}: {e}")
+    try:
+        failures += session_smoke()
+    except Exception as e:  # noqa: BLE001 — the gate must report, not crash
+        failures += 1
+        print(f"session smoke FAIL {type(e).__name__}: {e}")
     return 1 if failures else 0
 
 

@@ -16,6 +16,7 @@ from repro.api.facade import solve, solve_many
 from repro.api.registry import (
     Algorithm,
     Backend,
+    SessionHandle,
     get_algorithm,
     get_backend,
     list_algorithms,
@@ -24,7 +25,15 @@ from repro.api.registry import (
     register_backend,
     register_compressor,
 )
-from repro.api.report import RoundRecord, RunReport, SweepReport
+from repro.api.report import RoundRecord, RunReport, RunReportBuilder, SweepReport
+from repro.api.session import (
+    Session,
+    SessionState,
+    StopPolicy,
+    load_state,
+    open_session,
+    save_state,
+)
 from repro.api.spec import CompressorSpec, DataSpec, ExperimentSpec
 from repro.api.sweep import SweepSpec
 from repro.comm.transport import FaultSpec
@@ -39,8 +48,16 @@ __all__ = [
     "FaultSpec",
     "RoundRecord",
     "RunReport",
+    "RunReportBuilder",
+    "Session",
+    "SessionHandle",
+    "SessionState",
+    "StopPolicy",
     "SweepReport",
     "SweepSpec",
+    "load_state",
+    "open_session",
+    "save_state",
     "get_algorithm",
     "get_backend",
     "list_algorithms",

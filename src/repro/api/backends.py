@@ -2,12 +2,16 @@
 
 Each backend is a strategy object wrapping an *existing* driver — the
 simulation round builders (``repro.core``), the sharded round
-(``repro.distributed``), the star event loops (``repro.comm.star[_pp]``) and
-the multi-process TCP launcher (``repro.launch.multiproc``) — and normalizing
-its output into :class:`repro.api.RunReport`.  No round loop is reimplemented
-here except the thin local streaming loop, which replays ``run_fednl`` /
-``run_fednl_pp`` op-for-op (the parity suite pins it to the golden traces
-bit-for-bit; ``repro.core.runner`` stays the independent reference).
+(``repro.distributed``), the star masters (``repro.comm.star[_pp]``) and the
+multi-process TCP client cluster (``repro.launch.multiproc``) — exposed at
+round granularity through ``Backend.open() -> SessionHandle`` (DESIGN.md
+§10).  ``solve()`` is the open -> run -> close composition of the same
+handles, so the streaming path IS the batch path: the parity suite pins it
+to the golden traces bit-for-bit and ``repro.core.runner`` stays the
+independent reference.  The simulation handles execute chunked segments
+between yields (metrics stay on-device until a chunk ends); the star handles
+drive the wire masters one protocol round per step and rebuild client state
+on restore by replaying broadcasts (no client state on disk).
 
 Capability matrix (what ``Backend.supports`` encodes):
 
@@ -29,10 +33,11 @@ import numpy as np
 from repro.api.registry import (
     Algorithm,
     Backend,
+    SessionHandle,
     register_algorithm,
     register_backend,
 )
-from repro.api.report import RoundRecord, RunReport
+from repro.api.report import RoundRecord
 from repro.core.fednl import fednl_init, make_fednl_round
 from repro.core.fednl_batch import (
     make_fednl_batch_round,
@@ -85,69 +90,87 @@ def _opt_int(value) -> int | None:
     return None if value is None else int(value)
 
 
-def _full_records_from_arrays(
-    grad_norms, f_vals, sent_bits, payload_bits, wire_bits
-) -> list[RoundRecord]:
-    """Uniform records from the per-round arrays a star/legacy result carries."""
-    return [
-        RoundRecord(
-            round=r,
-            grad_norm=float(grad_norms[r]),
-            f=float(f_vals[r]) if f_vals is not None else None,
-            sent_bits=int(sent_bits[r]),
-            sent_bits_payload=_opt_int(payload_bits[r] if payload_bits is not None else None),
-            sent_bits_wire=_opt_int(wire_bits[r] if wire_bits is not None else None),
-        )
-        for r in range(len(grad_norms))
-    ]
-
-
 def _pp_final_grad_norm(z, x, lam: float) -> float:
     _, g = eval_full(z, jnp.asarray(x), lam)
     return float(jnp.linalg.norm(g))
 
 
 # ---------------------------------------------------------------------------
+# restore helpers
+# ---------------------------------------------------------------------------
+
+def _state_arrays(state, prefix: str = "state.") -> dict[str, np.ndarray]:
+    """NamedTuple algorithm state -> checkpoint arrays."""
+    return {prefix + f: np.asarray(v) for f, v in zip(state._fields, state)}
+
+
+def _restored_state(state0, restore, place=jnp.asarray, prefix: str = "state."):
+    """Rebuild an algorithm-state NamedTuple from checkpoint arrays, using a
+    freshly initialized ``state0`` as the structural template (``place``
+    controls device placement — the sharded backend re-shards per field)."""
+    missing = [f for f in state0._fields if prefix + f not in restore.arrays]
+    if missing:
+        raise ValueError(
+            f"checkpoint is missing state arrays {missing} for backend "
+            f"{restore.backend!r} (truncated or foreign checkpoint?)"
+        )
+    return type(state0)(
+        **{
+            f: place(restore.arrays[prefix + f], ref)
+            for f, ref in zip(state0._fields, state0)
+        }
+    )
+
+
+# ---------------------------------------------------------------------------
 # local: the single-process simulation (vmapped clients, jitted round)
 # ---------------------------------------------------------------------------
 
-class LocalBackend(Backend):
-    """Streaming equivalent of ``run_fednl`` / ``run_fednl_pp``: identical
-    init -> jit -> warm-up -> iterate sequence (bit-parity pinned by
-    tests/test_api.py), but recording the unified per-round records with
-    both accounting models."""
+class _LocalSessionHandle(SessionHandle):
+    """Round-granular form of the ``run_fednl`` / ``run_fednl_pp`` loop:
+    identical init -> jit -> warm-up -> iterate sequence (bit-parity pinned
+    by tests/test_api.py).  ``step_rounds(n)`` executes one chunked segment:
+    metrics stay on-device until the chunk ends, so the chunk is the only
+    host sync and an observer-free ``run()`` keeps the monolithic solve's
+    deferred-sync profile."""
 
-    name = "local"
-    supports_x0 = True
-
-    def run(self, spec, algo: Algorithm, z, x0) -> RunReport:
-        cfg = spec.fednl_config()
-        tau = spec.tau_for(z.shape[0]) if algo.kind == "pp" else None
+    def __init__(self, spec, algo: Algorithm, z, x0, restore=None):
+        self._spec = spec
+        self._algo = algo
+        self._z = z
+        self._cfg = spec.fednl_config()
+        self._tau = spec.tau_for(z.shape[0]) if algo.kind == "pp" else None
+        self.round = int(restore.round) if restore is not None else 0
+        self.wall_time_s = 0.0
         t0 = time.perf_counter()
-        state = algo.init(z, cfg, x0=x0, seed=spec.seed)
-        round_fn = jax.jit(algo.make_round(z, cfg, tau))
-        # warm-up compile outside the timed loop (paper separates init/solve)
-        state_c, _ = round_fn(state)
+        state = algo.init(z, self._cfg, x0=x0, seed=spec.seed)
+        if restore is not None:
+            state = _restored_state(
+                state, restore, place=lambda arr, ref: jnp.asarray(arr)
+            )
+        self._state = state
+        self._round_fn = jax.jit(algo.make_round(z, self._cfg, self._tau))
+        # warm-up compile outside the solve clock (paper separates init/solve)
+        state_c, _ = self._round_fn(state)
         jax.block_until_ready(state_c)
-        init_time = time.perf_counter() - t0
+        self.init_time_s = time.perf_counter() - t0
 
-        # metrics stay on-device inside the timed loop: the tol check is the
-        # only per-round host sync, so a tol=0 run dispatches asynchronously
-        # and syncs once at the end (wall_time_s measures program throughput,
-        # not device->host latency per round)
+    def step_rounds(self, n: int) -> list[RoundRecord]:
         raw = []
         t1 = time.perf_counter()
-        if algo.kind == "full":
-            for r in range(spec.rounds):
-                state, m = round_fn(state)
-                raw.append(m)
-                if spec.tol > 0.0 and float(m.grad_norm) < spec.tol:
-                    break
-            jax.block_until_ready(state.x)
-            wall = time.perf_counter() - t1
-            records = [
+        for _ in range(n):
+            self._state, m = self._round_fn(self._state)
+            raw.append(m)
+        jax.block_until_ready(
+            self._state.x if self._algo.kind == "full" else self._state.h_global
+        )
+        self.wall_time_s += time.perf_counter() - t1
+        r0 = self.round
+        self.round += n
+        if self._algo.kind == "full":
+            return [
                 RoundRecord(
-                    round=r,
+                    round=r0 + i,
                     grad_norm=float(m.grad_norm),
                     f=float(m.f),
                     l=float(m.l),
@@ -157,28 +180,11 @@ class LocalBackend(Backend):
                     sent_bits_wire=int(m.sent_bits_wire),
                     ls_steps=_opt_int(getattr(m, "ls_steps", None)),
                 )
-                for r, m in enumerate(raw)
+                for i, m in enumerate(raw)
             ]
-            return RunReport(
-                spec=spec,
-                algorithm=algo.name,
-                backend=self.name,
-                x=np.asarray(state.x),
-                records=records,
-                rounds=len(records),
-                wall_time_s=wall,
-                init_time_s=init_time,
-            )
-
-        # --- pp: record the iterate trajectory; grad is a post-run diagnostic
-        for r in range(spec.rounds):
-            state, m = round_fn(state)
-            raw.append(m)
-        jax.block_until_ready(state.h_global)
-        wall = time.perf_counter() - t1
-        records = [
+        return [
             RoundRecord(
-                round=r,
+                round=r0 + i,
                 l=float(m.l),
                 sent_elems=int(m.sent_elems),
                 sent_bits=int(m.sent_bits),
@@ -188,79 +194,96 @@ class LocalBackend(Backend):
                 participants=tuple(int(i) for i in np.asarray(m.idx)),
                 dropped=(),
             )
-            for r, m in enumerate(raw)
+            for i, m in enumerate(raw)
         ]
-        # the deployable model: Algorithm-3 line 4 on the post-run invariants
+
+    def snapshot(self) -> tuple[dict, dict[str, np.ndarray]]:
+        return {"kind": self._algo.kind}, _state_arrays(self._state)
+
+    def finalize(self) -> dict:
+        if self._algo.kind == "full":
+            return {"x": np.asarray(self._state.x)}
+        # the deployable model: Algorithm-3 line 4 on the current invariants
         # (same eager ops as run_fednl_pp / the star master — bit-comparable)
         from repro.linalg import cholesky_solve, unpack_triu
 
+        z, state, lam = self._z, self._state, self._cfg.lam
         d = z.shape[-1]
         x_final = cholesky_solve(
             unpack_triu(state.h_global, d)
             + state.l_global * jnp.eye(d, dtype=jnp.float64),
             state.g_global,
         )
-        return RunReport(
-            spec=spec,
-            algorithm=algo.name,
-            backend=self.name,
-            x=np.asarray(x_final),
-            records=records,
-            rounds=len(records),
-            wall_time_s=wall,
-            init_time_s=init_time,
-            final_grad_norm_fn=lambda: _pp_final_grad_norm(z, x_final, cfg.lam),
-            extras={"tau": tau},
-        )
+        return {
+            "x": np.asarray(x_final),
+            "final_grad_norm_fn": lambda: _pp_final_grad_norm(z, x_final, lam),
+            "extras": {"tau": self._tau},
+        }
+
+
+class LocalBackend(Backend):
+    name = "local"
+    supports_x0 = True
+    supports_sessions = True
+
+    def open(self, spec, algo: Algorithm, z, x0, restore=None) -> SessionHandle:
+        return _LocalSessionHandle(spec, algo, z, x0, restore=restore)
 
 
 # ---------------------------------------------------------------------------
 # sharded: clients shard_mapped across mesh devices (repro.distributed)
 # ---------------------------------------------------------------------------
 
-class ShardedBackend(Backend):
-    name = "sharded"
+class _ShardedSessionHandle(SessionHandle):
+    """Same chunked-segment discipline as the local handle, over the
+    shard_mapped round; restore re-places each checkpoint array with the
+    sharding of a freshly initialized state."""
 
-    def supports(self, algo: Algorithm) -> bool:
-        # identity, not name: this backend drives make_sharded_fednl_round
-        # directly, so a re-registered custom "fednl" would silently run the
-        # builtin algorithm instead of algo.make_round
-        return algo is FEDNL  # no sharded LS/PP round builder yet
-
-    def run(self, spec, algo: Algorithm, z, x0) -> RunReport:
+    def __init__(self, spec, algo: Algorithm, z, x0, restore=None):
         from repro.distributed import (
             make_sharded_fednl_round,
             shard_problem,
             sharded_fednl_init,
         )
 
+        self._spec = spec
         cfg = spec.fednl_config()
-        n_dev = spec.devices if spec.devices is not None else jax.device_count()
+        self._n_dev = (
+            spec.devices if spec.devices is not None else jax.device_count()
+        )
+        self.round = int(restore.round) if restore is not None else 0
+        self.wall_time_s = 0.0
         t0 = time.perf_counter()
-        mesh = jax.make_mesh((n_dev,), ("data",))
+        mesh = jax.make_mesh((self._n_dev,), ("data",))
         zs = shard_problem(z, mesh)
         state = sharded_fednl_init(zs, cfg, mesh, seed=spec.seed)
-        round_fn = jax.jit(
+        if restore is not None:
+            state = _restored_state(
+                state,
+                restore,
+                place=lambda arr, ref: jax.device_put(arr, ref.sharding),
+            )
+        self._state = state
+        self._round_fn = jax.jit(
             make_sharded_fednl_round(zs, cfg, mesh, aggregate=spec.aggregate)
         )
-        state_c, _ = round_fn(state)
+        state_c, _ = self._round_fn(state)
         jax.block_until_ready(state_c.x)
-        init_time = time.perf_counter() - t0
+        self.init_time_s = time.perf_counter() - t0
 
-        # same deferred-sync discipline as LocalBackend: tol is the only
-        # per-round host sync, records materialize after the timed loop
+    def step_rounds(self, n: int) -> list[RoundRecord]:
         raw = []
         t1 = time.perf_counter()
-        for r in range(spec.rounds):
-            state, m = round_fn(state)
+        for _ in range(n):
+            self._state, m = self._round_fn(self._state)
             raw.append(m)
-            if spec.tol > 0.0 and float(m["grad_norm"]) < spec.tol:
-                break
-        jax.block_until_ready(state.x)
-        wall = time.perf_counter() - t1
-        records = [
+        jax.block_until_ready(self._state.x)
+        self.wall_time_s += time.perf_counter() - t1
+        r0 = self.round
+        self.round += n
+        return [
             RoundRecord(
-                round=r,
+                round=r0 + i,
                 grad_norm=float(m["grad_norm"]),
                 f=float(m["f"]),
                 l=float(m["l"]),
@@ -269,90 +292,233 @@ class ShardedBackend(Backend):
                 sent_bits_payload=int(m["sent_bits_payload"]),
                 sent_bits_wire=int(m["sent_bits_wire"]),
             )
-            for r, m in enumerate(raw)
+            for i, m in enumerate(raw)
         ]
-        return RunReport(
-            spec=spec,
-            algorithm=algo.name,
-            backend=self.name,
-            x=np.asarray(state.x),
-            records=records,
-            rounds=len(records),
-            wall_time_s=wall,
-            init_time_s=init_time,
-            extras={"devices": n_dev, "aggregate": spec.aggregate},
-        )
+
+    def snapshot(self) -> tuple[dict, dict[str, np.ndarray]]:
+        return {"kind": "full"}, _state_arrays(self._state)
+
+    def finalize(self) -> dict:
+        return {
+            "x": np.asarray(self._state.x),
+            "extras": {
+                "devices": self._n_dev,
+                "aggregate": self._spec.aggregate,
+            },
+        }
+
+
+class ShardedBackend(Backend):
+    name = "sharded"
+    supports_sessions = True
+
+    def supports(self, algo: Algorithm) -> bool:
+        # identity, not name: this backend drives make_sharded_fednl_round
+        # directly, so a re-registered custom "fednl" would silently run the
+        # builtin algorithm instead of algo.make_round
+        return algo is FEDNL  # no sharded LS/PP round builder yet
+
+    def open(self, spec, algo: Algorithm, z, x0, restore=None) -> SessionHandle:
+        return _ShardedSessionHandle(spec, algo, z, x0, restore=restore)
 
 
 # ---------------------------------------------------------------------------
 # star backends: the real wire protocol (loopback transport / TCP processes)
 # ---------------------------------------------------------------------------
 
-def _star_full_report(spec, algo, res, backend_name: str) -> RunReport:
-    """StarRunResult -> RunReport (sent_bits honors spec.accounting)."""
-    wire_bits = 8 * res.measured_frame_bytes
-    selected = res.sent_bits if spec.accounting == "payload" else wire_bits
-    records = _full_records_from_arrays(
-        res.grad_norms, res.f_vals, selected, res.sent_bits, wire_bits
-    )
-    return RunReport(
-        spec=spec,
-        algorithm=algo.name,
-        backend=backend_name,
-        x=np.asarray(res.x),
-        records=records,
-        rounds=res.rounds,
-        wall_time_s=res.wall_time_s,
-        init_time_s=0.0,  # INIT handshake is inside the event loop
-        extras={
-            "measured_payload_bits": res.measured_payload_bits,
-            "measured_frame_bytes": res.measured_frame_bytes,
-        },
-    )
+class _StarFullSessionHandle(SessionHandle):
+    """Full-participation star master held open at round granularity.
 
+    ``restore`` resumes from a checkpoint: the master's own state (x, H) is
+    deserialized, while the freshly built/spawned clients rebuild theirs by
+    replaying the checkpointed broadcast history through the normal wire
+    protocol (spec + PRNG spine; the replayed uplinks are consumed
+    undecoded).  ``closer`` releases the transport (TCP client cluster)."""
 
-def _star_pp_report(spec, algo, res, backend_name: str, z_fn, tau: int) -> RunReport:
-    """StarPPRunResult -> RunReport with participation per round.
+    def __init__(self, spec, master, restore=None, closer=None):
+        self._spec = spec
+        self._master = master
+        self._closer = closer
+        self._measured_pbits: list[int] = []
+        self._frame_bytes: list[int] = []
+        self.round = 0
+        self.wall_time_s = 0.0
+        t0 = time.perf_counter()
+        master.init_handshake()
+        if restore is not None:
+            for r, x_b in enumerate(restore.arrays["x_hist"]):
+                master.replay_round(r, x_b)
+            master.x = jnp.asarray(restore.arrays["x"])
+            master.h_global = jnp.asarray(restore.arrays["h_global"])
+            self._measured_pbits = [
+                int(b) for b in restore.arrays["measured_payload_bits"]
+            ]
+            self._frame_bytes = [
+                int(b) for b in restore.arrays["measured_frame_bytes"]
+            ]
+            self.round = int(restore.round)
+        self.init_time_s = time.perf_counter() - t0
 
-    ``z_fn`` lazily supplies the problem for the post-run grad diagnostic —
-    star-tcp masters never hold the data, so the rebuild only happens if the
-    caller actually reads ``final_grad_norm``."""
-    wire_bits = 8 * res.measured_frame_bytes
-    records = [
-        RoundRecord(
-            round=r,
-            l=float(res.l_hist[r]),
-            sent_bits=int(
-                res.sent_bits[r] if spec.accounting == "payload" else wire_bits[r]
+    def step_rounds(self, n: int) -> list[RoundRecord]:
+        recs = []
+        t1 = time.perf_counter()
+        for i in range(n):
+            r = self.round + i
+            m = self._master.step_round(r)
+            self._measured_pbits.append(m["measured_payload_bits"])
+            self._frame_bytes.append(m["measured_frame_bytes"])
+            wire_bits = 8 * m["measured_frame_bytes"]
+            recs.append(
+                RoundRecord(
+                    round=r,
+                    grad_norm=m["grad_norm"],
+                    f=m["f"],
+                    sent_bits=(
+                        m["sent_bits"]
+                        if self._spec.accounting == "payload"
+                        else wire_bits
+                    ),
+                    sent_bits_payload=m["sent_bits"],
+                    sent_bits_wire=wire_bits,
+                )
+            )
+        self.wall_time_s += time.perf_counter() - t1
+        self.round += n
+        return recs
+
+    def snapshot(self) -> tuple[dict, dict[str, np.ndarray]]:
+        m = self._master
+        d = m.d
+        return {"kind": "full"}, {
+            "x": np.asarray(m.x),
+            "h_global": np.asarray(m.h_global),
+            "x_hist": (
+                np.stack(m.x_hist)
+                if m.x_hist
+                else np.zeros((0, d), dtype=np.float64)
             ),
-            sent_bits_payload=int(res.sent_bits[r]),
-            sent_bits_wire=int(wire_bits[r]),
-            x=np.asarray(res.x_hist[r]),
-            participants=tuple(res.participants[r]),
-            dropped=tuple(res.dropped[r]),
-        )
-        for r in range(res.rounds)
-    ]
-    return RunReport(
-        spec=spec,
-        algorithm=algo.name,
-        backend=backend_name,
-        x=np.asarray(res.x),
-        records=records,
-        rounds=res.rounds,
-        wall_time_s=res.wall_time_s,
-        init_time_s=0.0,
-        final_grad_norm_fn=(
-            (lambda: _pp_final_grad_norm(z_fn(), res.x, spec.lam))
-            if z_fn is not None
-            else None
-        ),
-        extras={
-            "tau": tau,
-            "measured_payload_bits": res.measured_payload_bits,
-            "measured_frame_bytes": res.measured_frame_bytes,
-        },
-    )
+            "measured_payload_bits": np.asarray(self._measured_pbits, np.int64),
+            "measured_frame_bytes": np.asarray(self._frame_bytes, np.int64),
+        }
+
+    def finalize(self) -> dict:
+        return {
+            "x": np.asarray(self._master.x),
+            "extras": {
+                "measured_payload_bits": np.asarray(self._measured_pbits, np.int64),
+                "measured_frame_bytes": np.asarray(self._frame_bytes, np.int64),
+            },
+        }
+
+    def close(self) -> None:
+        self._master.stop()
+        if self._closer is not None:
+            self._closer()
+            self._closer = None
+
+
+class _StarPPSessionHandle(SessionHandle):
+    """FedNL-PP star master held open at round granularity.
+
+    Restore replays the checkpointed per-round iterates as SELECT traffic
+    (same PRNG spine, same fault draws — resampled replacements included),
+    rebuilding the sampled clients' (H_i, l_i, g_i) without any client
+    state on disk, then deserializes the master invariants."""
+
+    def __init__(self, spec, master, tau: int, z_fn, restore=None, closer=None):
+        self._spec = spec
+        self._master = master
+        self._tau = tau
+        self._z_fn = z_fn
+        self._closer = closer
+        self._measured_pbits: list[int] = []
+        self._frame_bytes: list[int] = []
+        self.round = 0
+        self.wall_time_s = 0.0
+        t0 = time.perf_counter()
+        master._init_handshake()
+        if restore is not None:
+            # the broadcast history rides in the records (every PP record
+            # carries its x) — no separate x_hist array in the checkpoint
+            for r, rec in enumerate(restore.records):
+                master.replay_round(r, rec.x)
+            master.h_global = jnp.asarray(restore.arrays["h_global"])
+            master.l_global = jnp.asarray(restore.arrays["l_global"])
+            master.g_global = jnp.asarray(restore.arrays["g_global"])
+            master.key = jnp.asarray(restore.arrays["key"])
+            self._measured_pbits = [
+                int(b) for b in restore.arrays["measured_payload_bits"]
+            ]
+            self._frame_bytes = [
+                int(b) for b in restore.arrays["measured_frame_bytes"]
+            ]
+            self.round = int(restore.round)
+        self.init_time_s = time.perf_counter() - t0
+
+    def step_rounds(self, n: int) -> list[RoundRecord]:
+        recs = []
+        t1 = time.perf_counter()
+        for i in range(n):
+            r = self.round + i
+            m = self._master.step_round(r)
+            self._measured_pbits.append(m["measured_payload_bits"])
+            self._frame_bytes.append(m["measured_frame_bytes"])
+            wire_bits = 8 * m["measured_frame_bytes"]
+            recs.append(
+                RoundRecord(
+                    round=r,
+                    l=float(m["l"]),
+                    sent_bits=(
+                        m["sent_bits"]
+                        if self._spec.accounting == "payload"
+                        else wire_bits
+                    ),
+                    sent_bits_payload=m["sent_bits"],
+                    sent_bits_wire=wire_bits,
+                    x=m["x"],
+                    participants=tuple(m["participants"]),
+                    dropped=tuple(m["dropped"]),
+                )
+            )
+        self.wall_time_s += time.perf_counter() - t1
+        self.round += n
+        return recs
+
+    def snapshot(self) -> tuple[dict, dict[str, np.ndarray]]:
+        m = self._master
+        return {"kind": "pp"}, {
+            "h_global": np.asarray(m.h_global),
+            "l_global": np.asarray(m.l_global),
+            "g_global": np.asarray(m.g_global),
+            "key": np.asarray(m.key),
+            "measured_payload_bits": np.asarray(self._measured_pbits, np.int64),
+            "measured_frame_bytes": np.asarray(self._frame_bytes, np.int64),
+        }
+
+    def finalize(self) -> dict:
+        x_final = np.asarray(self._master._solve_x())
+        z_fn, lam = self._z_fn, self._spec.lam
+        return {
+            "x": x_final,
+            # the master never holds the data (star-tcp); rebuild it lazily
+            # only if the caller reads the final_grad_norm diagnostic
+            "final_grad_norm_fn": (
+                (lambda: _pp_final_grad_norm(z_fn(), x_final, lam))
+                if z_fn is not None
+                else None
+            ),
+            "extras": {
+                "tau": self._tau,
+                "measured_payload_bits": np.asarray(self._measured_pbits, np.int64),
+                "measured_frame_bytes": np.asarray(self._frame_bytes, np.int64),
+            },
+        }
+
+    def close(self) -> None:
+        self._master.stop()
+        if self._closer is not None:
+            self._closer()
+            self._closer = None
 
 
 class StarLoopbackBackend(Backend):
@@ -361,6 +527,7 @@ class StarLoopbackBackend(Backend):
 
     name = "star-loopback"
     supports_faults = True
+    supports_sessions = True
 
     def supports(self, algo: Algorithm) -> bool:
         # identity, not name: the wire event loops implement the builtin
@@ -368,27 +535,29 @@ class StarLoopbackBackend(Backend):
         # not silently replaced by the builtin trajectory
         return algo is FEDNL or algo is FEDNL_PP  # no LS wire protocol
 
-    def run(self, spec, algo: Algorithm, z, x0) -> RunReport:
+    def open(self, spec, algo: Algorithm, z, x0, restore=None) -> SessionHandle:
+        n_clients, _, d = z.shape
+        cfg = spec.fednl_config()
         if algo.kind == "pp":
-            from repro.comm.star_pp import run_pp_loopback
+            from repro.comm.star_pp import StarPPMaster, make_pp_loopback_clients
 
-            tau = spec.tau_for(z.shape[0])
-            res = run_pp_loopback(
-                z,
-                spec.fednl_config(),
-                tau=tau,
-                rounds=spec.rounds,
-                seed=spec.seed,
-                on_dropout=spec.on_dropout,
-                fault=spec.fault,
+            tau = spec.tau_for(n_clients)
+            conns, drive = make_pp_loopback_clients(
+                z, cfg, seed=spec.seed, fault=spec.fault
             )
-            return _star_pp_report(spec, algo, res, self.name, lambda: z, tau)
-        from repro.comm.star import run_loopback
+            master = StarPPMaster(
+                conns, d, cfg, tau,
+                seed=spec.seed, on_dropout=spec.on_dropout, drive=drive,
+            )
+            return _StarPPSessionHandle(
+                spec, master, tau, lambda: z, restore=restore
+            )
 
-        res = run_loopback(
-            z, spec.fednl_config(), rounds=spec.rounds, tol=spec.tol, seed=spec.seed
-        )
-        return _star_full_report(spec, algo, res, self.name)
+        from repro.comm.star import StarMaster, make_loopback_clients
+
+        conns, drive = make_loopback_clients(z, cfg, seed=spec.seed)
+        master = StarMaster(conns, d, cfg, drive=drive)
+        return _StarFullSessionHandle(spec, master, restore=restore)
 
 
 class StarTCPBackend(Backend):
@@ -400,48 +569,58 @@ class StarTCPBackend(Backend):
     name = "star-tcp"
     needs_problem = False  # workers rebuild their shards from the data seed
     supports_faults = True
+    supports_sessions = True
 
     def supports(self, algo: Algorithm) -> bool:
         # identity, not name — same reasoning as StarLoopbackBackend
         return algo is FEDNL or algo is FEDNL_PP
 
-    def run(self, spec, algo: Algorithm, z, x0) -> RunReport:
+    def open(self, spec, algo: Algorithm, z, x0, restore=None) -> SessionHandle:
         if spec.data.libsvm is not None:
             raise ValueError(
                 "star-tcp workers rebuild synthetic data from spec.data.seed; "
                 "libsvm problems can only run on local/sharded/star-loopback"
             )
-        from repro.launch.multiproc import run_multiproc, run_multiproc_pp
+        import dataclasses as _dc
+
+        from repro.launch.multiproc import ClientCluster
 
         cfg = spec.fednl_config()
-        if algo.kind == "pp":
-            tau = spec.tau_for(spec.data.dims()[1])
-            res = run_multiproc_pp(
-                cfg,
-                tau=tau,
-                dataset=spec.data.dataset,
-                shape=spec.data.shape,
-                rounds=spec.rounds,
-                seed=spec.seed,
-                host=spec.host,
-                on_dropout=spec.on_dropout,
-                fault=spec.fault,
-                data_seed=spec.data.seed,
-            )
-            # the master never holds the data; rebuild it lazily only if the
-            # caller reads the final_grad_norm diagnostic
-            return _star_pp_report(spec, algo, res, self.name, spec.data.build, tau)
-        res = run_multiproc(
-            cfg,
-            dataset=spec.data.dataset,
-            shape=spec.data.shape,
-            rounds=spec.rounds,
-            tol=spec.tol,
-            seed=spec.seed,
+        pp = algo.kind == "pp"
+        cluster = ClientCluster(
+            spec.data.dataset,
+            spec.data.shape,
+            spec.seed,
             host=spec.host,
+            pp=pp,
+            fault_dict=(
+                _dc.asdict(spec.fault) if spec.fault is not None else None
+            ),
             data_seed=spec.data.seed,
+            cfg=cfg,
         )
-        return _star_full_report(spec, algo, res, self.name)
+        try:
+            if pp:
+                from repro.comm.star_pp import StarPPMaster
+
+                tau = spec.tau_for(spec.data.dims()[1])
+                master = StarPPMaster(
+                    cluster.conns, cluster.d, cfg, tau,
+                    seed=spec.seed, on_dropout=spec.on_dropout,
+                )
+                return _StarPPSessionHandle(
+                    spec, master, tau, spec.data.build,
+                    restore=restore, closer=cluster.close,
+                )
+            from repro.comm.star import StarMaster
+
+            master = StarMaster(cluster.conns, cluster.d, cfg)
+            return _StarFullSessionHandle(
+                spec, master, restore=restore, closer=cluster.close
+            )
+        except Exception:
+            cluster.close()
+            raise
 
 
 # bound instances: the sweep engine identity-checks against LOCAL_BACKEND

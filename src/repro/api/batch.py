@@ -16,6 +16,12 @@ Dispatch (batch mode "auto"):
             concurrently through a bounded thread pool — the event loops are
             I/O-bound, and every run owns its transport, so runs interleave
             without sharing state.
+  warm      local-backend fallback specs identical except ``rounds`` share
+            one trajectory prefix: a single warm-started session
+            (``repro.api.session``) steps to each round count in ascending
+            order and reports there — bit-identical to per-spec solves (the
+            DESIGN.md §10 step-composability contract) with the shared
+            prefix computed once.
   fallback  everything else (sharded, PP on local, tol early-stop, custom
             algorithms without a batch hook, ...) runs per spec through
             ``solve()`` — logged with the reason, never silently dropped.
@@ -54,9 +60,22 @@ _POOL_WIDTH = {"star-loopback": 4, "star-tcp": 2}
 
 @dataclasses.dataclass
 class _Plan:
-    kind: str  # "batch" | "pool" | "seq"
+    kind: str  # "batch" | "pool" | "warm" | "seq"
     indices: list[int]
     reason: str = ""
+
+
+def _warm_key(spec):
+    """Specs identical except ``rounds`` share one trajectory prefix: a
+    single session solves the longest and reports every intermediate spec
+    bit-identically (step composability, DESIGN.md §10).  None = ineligible."""
+    from repro.api.backends import LOCAL_BACKEND
+
+    if get_backend(spec.backend) is not LOCAL_BACKEND:
+        return None  # session reuse is a local-simulation optimization
+    if spec.tol > 0.0:
+        return None  # early stop can end runs before the shared prefix
+    return spec.replace(rounds=0)
 
 
 def _batch_blockers(spec, algo: Algorithm, backend) -> list[str]:
@@ -168,6 +187,30 @@ def plan_sweep(specs: Sequence, batch_mode: str) -> tuple[list[_Plan], list[str]
         plans.append(_Plan("batch", idxs, reason=f"group key {key[:3]}..."))
     for backend_name, idxs in pool_groups.items():
         plans.append(_Plan("pool", idxs, reason=backend_name))
+
+    # warm-start session reuse: fallback specs identical except `rounds` run
+    # as ONE session stepped to each round count in ascending order (skipped
+    # under batch="never", which promises per-spec timing)
+    if batch_mode != "never":
+        warm_groups: dict = {}
+        for i, reason in seq:
+            key = _warm_key(specs[i])
+            if key is not None:
+                warm_groups.setdefault(key, []).append(i)
+        warmed: set[int] = set()
+        for key, idxs in warm_groups.items():
+            if len(idxs) < 2:
+                continue
+            idxs.sort(key=lambda i: specs[i].rounds)
+            warmed.update(idxs)
+            plans.append(_Plan("warm", idxs, reason="rounds-prefix group"))
+            log.append(
+                f"warm-start session reuse: specs {idxs} differ only in "
+                f"rounds {[specs[i].rounds for i in idxs]} — one session, "
+                "reports emitted at each prefix"
+            )
+        seq = [(i, reason) for i, reason in seq if i not in warmed]
+
     for i, reason in seq:
         plans.append(_Plan("seq", [i], reason=reason))
         if batch_mode != "never":
@@ -359,6 +402,18 @@ def run_sweep(specs: Sequence, batch_mode: str, sweep: Any = None) -> SweepRepor
             for i, rep in zip(plan.indices, group_reports):
                 reports[i] = rep
             batched_specs += len(plan.indices)
+        elif plan.kind == "warm":
+            from repro.api.session import open_session
+
+            # one session for the whole rounds-prefix group: step to each
+            # spec's round count (ascending) and report it there — step
+            # composability makes every report bit-identical to its own
+            # solve() while the shared prefix is computed once
+            spec_max = specs[plan.indices[-1]]
+            with open_session(spec_max, z=z_for(spec_max)) as session:
+                for i in plan.indices:
+                    session.step(specs[i].rounds - session.round)
+                    reports[i] = session.report(spec=specs[i])
         elif plan.kind == "pool":
             width = min(_POOL_WIDTH[plan.reason], len(plan.indices))
             log.append(

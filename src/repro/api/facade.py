@@ -54,6 +54,12 @@ def check_spec(
 def solve(spec: ExperimentSpec, z=None, x0=None) -> RunReport:
     """Run one experiment described by ``spec``.
 
+    A thin wrapper over the Session protocol: ``open_session(spec).run()``
+    under the spec's rounds/tol — bit-identical to the historical monolithic
+    drivers (pinned by tests/test_api.py against the golden traces).  Use
+    :func:`repro.api.open_session` directly to step rounds incrementally,
+    observe records as they stream, or checkpoint/resume the run.
+
     ``z`` optionally supplies a pre-built problem array ``(n_clients, n_i, d)``
     — e.g. LM backbone features (examples/fednl_probe.py) or a LIBSVM
     round-trip — overriding ``spec.data``.  ``x0`` optionally overrides the
@@ -64,6 +70,13 @@ def solve(spec: ExperimentSpec, z=None, x0=None) -> RunReport:
     jax.config.update("jax_enable_x64", True)
     algo = get_algorithm(spec.algorithm)
     backend = get_backend(spec.backend)
+    if backend.supports_sessions:
+        # open_session runs the full validation (check_spec included) itself
+        from repro.api.session import open_session
+
+        with open_session(spec, z=z, x0=x0) as session:
+            return session.run()
+    # legacy run-to-completion backends (custom registrations without open())
     check_spec(spec, algo, backend, z=z, x0=x0)
     if z is None and backend.needs_problem:
         z = spec.data.build()

@@ -57,13 +57,56 @@ class Algorithm:
             raise ValueError(f"unknown algorithm kind {self.kind!r}")
 
 
+class SessionHandle:
+    """Round-granular execution driver a :meth:`Backend.open` returns.
+
+    A handle owns one live run: the compiled/connected round machinery plus
+    the evolving algorithm state.  ``repro.api.session.Session`` drives it;
+    nothing else should.  Contract (the DESIGN.md §10 numerics bar):
+    ``step_rounds(k)`` followed by ``step_rounds(m)`` must produce the same
+    state and records, bit for bit, as ``step_rounds(k + m)`` — backends are
+    free to execute each call as one chunked segment (deferred host sync),
+    but never to make the trajectory depend on the chunking.
+    """
+
+    #: rounds executed so far (monotone; a restored handle starts at the
+    #: checkpoint's round index, not 0)
+    round: int = 0
+    #: seconds spent building/compiling/handshaking before the first round
+    init_time_s: float = 0.0
+    #: cumulative seconds spent inside step_rounds (the solve-loop clock)
+    wall_time_s: float = 0.0
+
+    def step_rounds(self, n: int) -> list:
+        """Advance ``n`` rounds; return one RoundRecord per round executed."""
+        raise NotImplementedError
+
+    def snapshot(self) -> tuple[dict, dict]:
+        """Serializable backend state: ``(meta, arrays)`` — JSON-able scalars
+        and name -> numpy array.  Must capture everything needed to resume
+        bit-identically (model x, Hessian estimate/shift state, PRNG spine,
+        round index); accumulated records live in the Session, not here."""
+        raise NotImplementedError
+
+    def finalize(self) -> dict:
+        """Report tail for the CURRENT state: ``{"x": ndarray}`` plus
+        optional ``"extras"`` / ``"final_grad_norm_fn"``.  Must be callable
+        repeatedly (after any number of steps) without advancing state."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release transports/processes.  Idempotent."""
+
+
 class Backend:
     """Execution-strategy interface: wraps an existing driver, returns RunReport.
 
-    Subclasses implement :meth:`run`; ``supports`` declares which algorithms
-    the backend can execute (wire backends only speak the protocols they
-    implement).  ``needs_problem`` is False for backends whose workers
-    rebuild the data themselves (star-tcp: nothing crosses the wire).
+    Subclasses implement :meth:`open` (returning a :class:`SessionHandle`,
+    with ``supports_sessions = True``) or the legacy run-to-completion
+    :meth:`run`; ``supports`` declares which algorithms the backend can
+    execute (wire backends only speak the protocols they implement).
+    ``needs_problem`` is False for backends whose workers rebuild the data
+    themselves (star-tcp: nothing crosses the wire).
     """
 
     name: str = "?"
@@ -72,12 +115,26 @@ class Backend:
     # loudly instead of being silently ignored (extensible per backend)
     supports_faults: bool = False  # transport-level dropout/straggler injection
     supports_x0: bool = False  # accepts an initial-iterate override
+    supports_sessions: bool = False  # implements open() -> SessionHandle
 
     def supports(self, algo: Algorithm) -> bool:
         return True
 
+    def open(self, spec, algo: Algorithm, z, x0, restore=None) -> SessionHandle:
+        raise NotImplementedError(
+            f"backend {self.name!r} does not implement the Session protocol "
+            "(open); use solve(spec) / Backend.run"
+        )
+
     def run(self, spec, algo: Algorithm, z, x0):
-        raise NotImplementedError
+        """Run-to-completion entry.  Session-capable backends inherit this
+        open -> run -> close composition; legacy backends override it."""
+        if not self.supports_sessions:
+            raise NotImplementedError
+        from repro.api.session import Session
+
+        with Session(spec, algo, self, self.open(spec, algo, z, x0)) as s:
+            return s.run()
 
 
 class Registry:

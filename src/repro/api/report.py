@@ -143,6 +143,56 @@ class RunReport:
         )
 
 
+class RunReportBuilder:
+    """Incremental :class:`RunReport` construction (the Session path).
+
+    Records stream in one round at a time (``add``) or in chunked segments
+    (``extend``); ``build`` closes over the *current* tail — final model,
+    extras, the lazy PP grad diagnostic — so a session can emit a report
+    mid-run, keep stepping, and emit another.  Each build snapshots the
+    record list; later adds never mutate an already-built report.
+    """
+
+    def __init__(self, spec: Any, algorithm: str, backend: str):
+        self.spec = spec
+        self.algorithm = algorithm
+        self.backend = backend
+        self.records: list[RoundRecord] = []
+
+    def add(self, record: RoundRecord) -> RoundRecord:
+        self.records.append(record)
+        return record
+
+    def extend(self, records: list[RoundRecord]) -> list[RoundRecord]:
+        self.records.extend(records)
+        return records
+
+    def build(
+        self,
+        x: np.ndarray,
+        wall_time_s: float,
+        init_time_s: float,
+        final_grad_norm_fn: Callable[[], float] | None = None,
+        extras: dict[str, Any] | None = None,
+        spec: Any = None,
+    ) -> RunReport:
+        """Materialize a report from the records so far.  ``spec`` optionally
+        relabels the report (sweep warm-start reuse emits one report per
+        rounds-prefix spec from a single session)."""
+        return RunReport(
+            spec=self.spec if spec is None else spec,
+            algorithm=self.algorithm,
+            backend=self.backend,
+            x=np.asarray(x),
+            records=list(self.records),
+            rounds=len(self.records),
+            wall_time_s=wall_time_s,
+            init_time_s=init_time_s,
+            final_grad_norm_fn=final_grad_norm_fn,
+            extras=dict(extras) if extras else {},
+        )
+
+
 def _spec_get(spec: Any, path: str) -> Any:
     """Resolve a dotted field path on a spec ('compressor.name', 'data.seed')."""
     value = spec

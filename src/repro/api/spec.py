@@ -243,6 +243,41 @@ class ExperimentSpec:
         identical experiment on another backend."""
         return dataclasses.replace(self, **changes)
 
+    # fields a restored session may change: pure run control.  Everything
+    # else shapes the serialized state or the trajectory — algorithm, data,
+    # compressor, tau, fault model, accounting, backend (checkpoint layouts
+    # are backend-specific), seed — and must match the checkpoint exactly.
+    RESTORE_VARIABLE_FIELDS = frozenset({"rounds", "tol", "host"})
+
+    def check_restore_from(self, saved: "ExperimentSpec") -> None:
+        """Reject restore-incompatible spec/checkpoint combinations loudly.
+
+        A checkpoint resumes the *same experiment*: restoring a FedNL-PP
+        state into a spec with a different ``tau`` or compressor would
+        silently run an experiment neither the checkpoint nor the spec
+        describes.  Only :data:`RESTORE_VARIABLE_FIELDS` may differ (extend
+        the round budget, change the early-stop tol, rebind the TCP host).
+        """
+        mismatched = [
+            f.name
+            for f in dataclasses.fields(self)
+            if f.name not in self.RESTORE_VARIABLE_FIELDS
+            and getattr(self, f.name) != getattr(saved, f.name)
+        ]
+        if mismatched:
+            detail = "; ".join(
+                f"{name}: checkpoint ran with {getattr(saved, name)!r}, "
+                f"spec asks for {getattr(self, name)!r}"
+                for name in mismatched
+            )
+            raise ValueError(
+                f"spec is incompatible with the checkpoint it restores "
+                f"({detail}).  A checkpoint resumes the same experiment — "
+                f"only {sorted(self.RESTORE_VARIABLE_FIELDS)} may change on "
+                f"restore; to vary {', '.join(mismatched)}, start a fresh "
+                f"run (open_session / solve without restore)"
+            )
+
     def grid(self, *, batch: str = "auto", **axes: Any) -> "SweepSpec":
         """Expand this spec into a :class:`repro.api.SweepSpec` —
         ``spec.grid(seed=range(4), compressor=["topk", "randk"])`` is the

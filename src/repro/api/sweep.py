@@ -93,7 +93,8 @@ class SweepSpec:
              divergence from the sequential path is possible (DESIGN.md §9).
       never  run every spec sequentially through ``solve()`` in expansion
              order (per-spec timing stays meaningful — what the benchmark
-             tables use).
+             tables use; also disables the warm-started session reuse of
+             rounds-prefix fallback groups, see ``repro.api.batch``).
     """
 
     base: ExperimentSpec

@@ -150,6 +150,139 @@ class StarClient:
             self.conn.close()
 
 
+class StarMaster:
+    """Round-granular hub driver: INIT handshake, then one FedNL round per
+    :meth:`step_round` call.
+
+    ``run_star_master`` composes these into the classic closed event loop
+    (op-for-op what it always did); the session backends instead hold a
+    StarMaster open, stepping/pausing at will, serializing its master-side
+    state (x, H, the broadcast history) and replaying broadcasts so freshly
+    spawned clients rebuild their state from the spec + PRNG spine alone
+    (:meth:`replay_round` — no client state is ever written to disk).
+
+    ``drive`` is the loopback hook — called after every broadcast to let the
+    in-process clients consume their frames (a no-op over TCP, where clients
+    run in their own processes).
+    """
+
+    def __init__(
+        self,
+        conns: dict[int, Connection],
+        d: int,
+        cfg: FedNLConfig,
+        x0: jax.Array | None = None,
+        drive: Callable[[], None] | None = None,
+    ):
+        self.conns = conns
+        self.order = sorted(conns)  # aggregation order == sim's client axis
+        self.d = d
+        self.cfg = cfg
+        self.drive = drive
+        t = triu_size(d)
+        self.comp = get_compressor(cfg.compressor, t, cfg.k_for(d))
+        self.codec = wire.make_codec(self.comp, t)
+        self.alpha = self.comp.alpha if cfg.alpha is None else cfg.alpha
+        self.x = jnp.zeros(d, dtype=jnp.float64) if x0 is None else jnp.asarray(x0)
+        self.h_global = None
+        # broadcast iterates, one per completed round — the master-side
+        # record a resumed run replays to rebuild client state
+        self.x_hist: list[np.ndarray] = []
+        self._stopped = False
+
+    def _broadcast(self, frame: Frame) -> None:
+        for cid in self.order:
+            send_frame(self.conns[cid], frame)
+        if self.drive is not None:
+            self.drive()
+
+    def _collect(self, expect: MsgType) -> dict[int, Frame]:
+        got = {}
+        for cid in self.order:
+            frame = recv_frame(self.conns[cid])
+            if frame.type != expect or frame.client != cid:
+                raise ValueError(
+                    f"master expected {expect} from client {cid}, got "
+                    f"{frame.type} from {frame.client}"
+                )
+            got[cid] = frame
+        return got
+
+    def init_handshake(self) -> None:
+        """INIT broadcast; clients report H_i^0 for the chosen hess0 policy."""
+        self._broadcast(
+            Frame(type=MsgType.INIT, payload=protocol.pack_vector(self.x))
+        )
+        acks = self._collect(MsgType.INIT_ACK)
+        self.h_global = jnp.mean(
+            jnp.stack(
+                [protocol.unpack_vector(acks[cid].payload) for cid in self.order]
+            ),
+            axis=0,
+        )
+
+    def step_round(self, r: int) -> dict:
+        """One full protocol round: broadcast x, collect uplinks, aggregate,
+        Newton step.  Returns the round's scalar metrics + bit counters."""
+        self._broadcast(
+            Frame(type=MsgType.ROUND, round=r, payload=protocol.pack_vector(self.x))
+        )
+        self.x_hist.append(np.asarray(self.x))
+        ups = self._collect(MsgType.UPLINK)
+
+        grads, s_list, l_list, f_list = [], [], [], []
+        round_pbits = round_abits = round_fbytes = 0
+        for cid in self.order:
+            fr = ups[cid]
+            grad_i, l_i, f_i, hess_bytes = protocol.unpack_uplink(fr.payload, self.d)
+            s_list.append(self.codec.decode(hess_bytes, fr.sent_elems))
+            grads.append(grad_i)
+            l_list.append(l_i)
+            f_list.append(f_i)
+            round_pbits += fr.payload_bits
+            round_abits += int(message_bits(self.comp, fr.sent_elems))
+            round_fbytes += fr.wire_bytes
+
+        # identical jnp aggregation ops to make_fednl_round's master section
+        grad = jnp.mean(jnp.stack(grads), axis=0)
+        s = jnp.mean(jnp.stack(s_list), axis=0)
+        l = jnp.mean(jnp.stack(l_list))
+        f = jnp.mean(jnp.stack(f_list))
+
+        x_new = master_step(self.x, self.h_global, grad, l, self.cfg)
+        self.h_global = self.h_global + self.alpha * s
+        self.x = x_new
+
+        return {
+            "grad_norm": float(jnp.linalg.norm(grad)),
+            "f": float(f),
+            "sent_bits": round_abits,
+            "measured_payload_bits": round_pbits,
+            "measured_frame_bytes": round_fbytes,
+        }
+
+    def replay_round(self, r: int, x_bcast: np.ndarray) -> None:
+        """Resume support: re-broadcast a recorded iterate so clients replay
+        their round body (advancing their PRNG spine and H_i exactly as the
+        original run did); the uplinks are consumed UNdecoded — the master's
+        own state comes from the checkpoint, not from re-aggregation."""
+        self._broadcast(
+            Frame(
+                type=MsgType.ROUND,
+                round=r,
+                payload=protocol.pack_vector(jnp.asarray(x_bcast)),
+            )
+        )
+        self.x_hist.append(np.asarray(x_bcast))
+        self._collect(MsgType.UPLINK)
+
+    def stop(self) -> None:
+        """Broadcast STOP (idempotent) so client loops exit cleanly."""
+        if not self._stopped:
+            self._stopped = True
+            self._broadcast(Frame(type=MsgType.STOP))
+
+
 def run_star_master(
     conns: dict[int, Connection],
     d: int,
@@ -159,90 +292,29 @@ def run_star_master(
     x0: jax.Array | None = None,
     drive: Callable[[], None] | None = None,
 ) -> StarRunResult:
-    """The hub event loop: INIT handshake, then FedNL rounds until tol/rounds.
-
-    ``drive`` is the loopback hook — called after every broadcast to let the
-    in-process clients consume their frames (a no-op over TCP, where clients
-    run in their own processes).
-    """
-    n_clients = len(conns)
-    order = sorted(conns)  # aggregation order == simulation's client axis order
-    t = triu_size(d)
-    comp = get_compressor(cfg.compressor, t, cfg.k_for(d))
-    codec = wire.make_codec(comp, t)
-    alpha = comp.alpha if cfg.alpha is None else cfg.alpha
-
-    x = jnp.zeros(d, dtype=jnp.float64) if x0 is None else jnp.asarray(x0)
-
-    def broadcast(frame: Frame) -> None:
-        for cid in order:
-            send_frame(conns[cid], frame)
-        if drive is not None:
-            drive()
-
-    def collect(expect: MsgType) -> dict[int, Frame]:
-        got = {}
-        for cid in order:
-            frame = recv_frame(conns[cid])
-            if frame.type != expect or frame.client != cid:
-                raise ValueError(
-                    f"master expected {expect} from client {cid}, got "
-                    f"{frame.type} from {frame.client}"
-                )
-            got[cid] = frame
-        return got
-
-    # --- INIT handshake: clients report H_i^0 for the chosen hess0 policy ---
-    broadcast(Frame(type=MsgType.INIT, payload=protocol.pack_vector(x)))
-    acks = collect(MsgType.INIT_ACK)
-    h_global = jnp.mean(
-        jnp.stack([protocol.unpack_vector(acks[cid].payload) for cid in order]),
-        axis=0,
-    )
+    """The classic closed hub event loop: INIT handshake, then FedNL rounds
+    until tol/rounds, then STOP — a thin composition of :class:`StarMaster`
+    (bit-identical to the historical inline loop)."""
+    master = StarMaster(conns, d, cfg, x0=x0, drive=drive)
+    master.init_handshake()
 
     grad_norms, f_vals = [], []
     bits_analytic, bits_measured, frame_bytes = [], [], []
     t_start = time.perf_counter()
     for r in range(rounds):
-        broadcast(Frame(type=MsgType.ROUND, round=r, payload=protocol.pack_vector(x)))
-        ups = collect(MsgType.UPLINK)
-
-        grads, s_list, l_list, f_list = [], [], [], []
-        round_pbits = round_abits = round_fbytes = 0
-        for cid in order:
-            fr = ups[cid]
-            grad_i, l_i, f_i, hess_bytes = protocol.unpack_uplink(fr.payload, d)
-            s_list.append(codec.decode(hess_bytes, fr.sent_elems))
-            grads.append(grad_i)
-            l_list.append(l_i)
-            f_list.append(f_i)
-            round_pbits += fr.payload_bits
-            round_abits += int(message_bits(comp, fr.sent_elems))
-            round_fbytes += fr.wire_bytes
-
-        # identical jnp aggregation ops to make_fednl_round's master section
-        grad = jnp.mean(jnp.stack(grads), axis=0)
-        s = jnp.mean(jnp.stack(s_list), axis=0)
-        l = jnp.mean(jnp.stack(l_list))
-        f = jnp.mean(jnp.stack(f_list))
-
-        x_new = master_step(x, h_global, grad, l, cfg)
-        h_global = h_global + alpha * s
-
-        gn = float(jnp.linalg.norm(grad))
-        grad_norms.append(gn)
-        f_vals.append(float(f))
-        bits_analytic.append(round_abits)
-        bits_measured.append(round_pbits)
-        frame_bytes.append(round_fbytes)
-        x = x_new
-        if tol > 0.0 and gn < tol:
+        m = master.step_round(r)
+        grad_norms.append(m["grad_norm"])
+        f_vals.append(m["f"])
+        bits_analytic.append(m["sent_bits"])
+        bits_measured.append(m["measured_payload_bits"])
+        frame_bytes.append(m["measured_frame_bytes"])
+        if tol > 0.0 and m["grad_norm"] < tol:
             break
 
-    broadcast(Frame(type=MsgType.STOP))
+    master.stop()
     wall = time.perf_counter() - t_start
     return StarRunResult(
-        x=np.asarray(x),
+        x=np.asarray(master.x),
         grad_norms=np.asarray(grad_norms),
         f_vals=np.asarray(f_vals),
         rounds=len(grad_norms),
@@ -253,19 +325,13 @@ def run_star_master(
     )
 
 
-def run_loopback(
-    z: jax.Array,
-    cfg: FedNLConfig,
-    rounds: int = 100,
-    tol: float = 0.0,
-    seed: int = 0,
-) -> StarRunResult:
-    """Full protocol run over in-process loopback transport (one thread).
-
-    Every message crosses the encode -> frame -> decode path; only the
-    sockets are replaced by synchronous buffers.
-    """
-    n_clients, _, d = z.shape
+def make_loopback_clients(
+    z: jax.Array, cfg: FedNLConfig, seed: int = 0
+) -> tuple[dict[int, Connection], Callable[[], None]]:
+    """In-process client fleet: master-side conns + the ``drive`` hook that
+    lets them consume pending frames (shared by ``run_loopback`` and the
+    star-loopback session backend — one wiring, one drive discipline)."""
+    n_clients = z.shape[0]
     master_conns: dict[int, Connection] = {}
     clients: list[StarClient] = []
     for i in range(n_clients):
@@ -280,6 +346,23 @@ def run_loopback(
             if pending[i]:
                 pending[i] = c.serve_once()
 
+    return master_conns, drive
+
+
+def run_loopback(
+    z: jax.Array,
+    cfg: FedNLConfig,
+    rounds: int = 100,
+    tol: float = 0.0,
+    seed: int = 0,
+) -> StarRunResult:
+    """Full protocol run over in-process loopback transport (one thread).
+
+    Every message crosses the encode -> frame -> decode path; only the
+    sockets are replaced by synchronous buffers.
+    """
+    d = z.shape[-1]
+    master_conns, drive = make_loopback_clients(z, cfg, seed=seed)
     return run_star_master(
         master_conns, d, cfg, rounds=rounds, tol=tol, drive=drive
     )

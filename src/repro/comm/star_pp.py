@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -338,91 +339,141 @@ class StarPPMaster:
             ),
         )
 
-    def run(self, rounds: int) -> StarPPRunResult:
-        self._init_handshake()
-        n = self.n_clients
-        x_hist, l_hist = [], []
-        parts_hist, drops_hist = [], []
-        bits_analytic, bits_measured, frame_bytes = [], [], []
-        t_start = time.perf_counter()
-        for r in range(rounds):
-            x = self._solve_x()
-            l_pre = float(jnp.asarray(self.l_global))
-            key, k_sel, _k_comp = jax.random.split(self.key, 3)
-            self.key = key
-            idx = [
-                int(i)
-                for i in np.asarray(
-                    jax.random.choice(
-                        k_sel, n, shape=(self.tau,), replace=False
-                    )
+    def _sample_round(self, r: int, x) -> tuple[list[int], jax.Array]:
+        """Advance the PRNG spine one round and SELECT the sampled cohort —
+        identical split chain to ``make_fednl_pp_round``."""
+        key, k_sel, _k_comp = jax.random.split(self.key, 3)
+        self.key = key
+        idx = [
+            int(i)
+            for i in np.asarray(
+                jax.random.choice(
+                    k_sel, self.n_clients, shape=(self.tau,), replace=False
                 )
-            ]
-            for slot, cid in enumerate(idx):
-                self._select(cid, r, slot, x)
-            self._drive()
+            )
+        ]
+        for slot, cid in enumerate(idx):
+            self._select(cid, r, slot, x)
+        self._drive()
+        return idx, k_sel
 
-            pool = [c for c in self.order if c not in set(idx)]
-            attempt = 0
-            s_list, dl_list, dg_list = [], [], []
-            participants, dropped = [], []
-            round_abits = round_mbits = round_fbytes = 0
-            for slot, cid in enumerate(idx):
-                cur = cid
-                while True:
-                    fr = recv_frame(self.conns[cur])
-                    if fr.type == MsgType.PP_UPDATE:
+    def _collect_round(self, r: int, x, idx: list[int], k_sel, decode: bool):
+        """Collect one round's PP_UPDATE/DROP responses slot by slot,
+        resampling replacements per ``on_dropout``.  With ``decode=False``
+        (checkpoint replay) uplinks are consumed but not decoded — the frame
+        traffic drives the clients; the master state comes from elsewhere."""
+        pool = [c for c in self.order if c not in set(idx)]
+        attempt = 0
+        s_list, dl_list, dg_list = [], [], []
+        participants, dropped = [], []
+        round_abits = round_mbits = round_fbytes = 0
+        for slot, cid in enumerate(idx):
+            cur = cid
+            while True:
+                fr = recv_frame(self.conns[cur])
+                if fr.type == MsgType.PP_UPDATE:
+                    if decode:
                         hess_bytes, dl, dg = protocol.unpack_pp_update(
                             fr.payload, self.d
                         )
                         s_list.append(self.codec.decode(hess_bytes, fr.sent_elems))
                         dl_list.append(dl)
                         dg_list.append(dg)
-                        participants.append(cur)
-                        round_abits += int(
-                            wire.pp_message_bits(self.comp, fr.sent_elems, self.d)
-                        )
-                        round_mbits += fr.payload_bits
-                        round_fbytes += fr.wire_bytes
-                        break
-                    if fr.type != MsgType.DROP:
-                        raise ValueError(
-                            f"master expected PP_UPDATE/DROP, got {fr.type}"
-                        )
-                    dropped.append(cur)
-                    if self.on_dropout == "resample" and pool:
-                        # replacement inherits the slot (and its comp key)
-                        rk = jax.random.fold_in(k_sel, 1 + attempt)
-                        attempt += 1
-                        j = int(jax.random.randint(rk, (), 0, len(pool)))
-                        cur = pool.pop(j)
-                        self._select(cur, r, slot, x)
-                        self._drive()
-                        continue
-                    break  # partial: this slot contributes nothing
+                    participants.append(cur)
+                    round_abits += int(
+                        wire.pp_message_bits(self.comp, fr.sent_elems, self.d)
+                    )
+                    round_mbits += fr.payload_bits
+                    round_fbytes += fr.wire_bytes
+                    break
+                if fr.type != MsgType.DROP:
+                    raise ValueError(
+                        f"master expected PP_UPDATE/DROP, got {fr.type}"
+                    )
+                dropped.append(cur)
+                if self.on_dropout == "resample" and pool:
+                    # replacement inherits the slot (and its comp key)
+                    rk = jax.random.fold_in(k_sel, 1 + attempt)
+                    attempt += 1
+                    j = int(jax.random.randint(rk, (), 0, len(pool)))
+                    cur = pool.pop(j)
+                    self._select(cur, r, slot, x)
+                    self._drive()
+                    continue
+                break  # partial: this slot contributes nothing
+        return (s_list, dl_list, dg_list, participants, dropped,
+                round_abits, round_mbits, round_fbytes)
 
-            # Algorithm 3 lines 18-20 — identical jnp ops to the simulation;
-            # the /n normalization is fault-independent (zero-delta absentees)
-            if s_list:
-                self.h_global = self.h_global + (self.alpha / n) * jnp.sum(
-                    jnp.stack(s_list), axis=0
-                )
-                self.l_global = self.l_global + jnp.sum(jnp.stack(dl_list)) / n
-                self.g_global = self.g_global + jnp.sum(
-                    jnp.stack(dg_list), axis=0
-                ) / n
+    def step_round(self, r: int) -> dict:
+        """One Algorithm-3 round: solve x from the invariants, sample tau
+        clients, collect their deltas (dropout fallbacks included), update
+        the invariants.  Returns the round's record data."""
+        n = self.n_clients
+        x = self._solve_x()
+        l_pre = float(jnp.asarray(self.l_global))
+        idx, k_sel = self._sample_round(r, x)
+        (s_list, dl_list, dg_list, participants, dropped,
+         round_abits, round_mbits, round_fbytes) = self._collect_round(
+            r, x, idx, k_sel, decode=True
+        )
 
-            x_hist.append(np.asarray(x))
-            l_hist.append(l_pre)
-            parts_hist.append(participants)
-            drops_hist.append(dropped)
-            bits_analytic.append(round_abits)
-            bits_measured.append(round_mbits)
-            frame_bytes.append(round_fbytes)
+        # Algorithm 3 lines 18-20 — identical jnp ops to the simulation;
+        # the /n normalization is fault-independent (zero-delta absentees)
+        if s_list:
+            self.h_global = self.h_global + (self.alpha / n) * jnp.sum(
+                jnp.stack(s_list), axis=0
+            )
+            self.l_global = self.l_global + jnp.sum(jnp.stack(dl_list)) / n
+            self.g_global = self.g_global + jnp.sum(
+                jnp.stack(dg_list), axis=0
+            ) / n
 
+        return {
+            "x": np.asarray(x),
+            "l": l_pre,
+            "participants": participants,
+            "dropped": dropped,
+            "sent_bits": round_abits,
+            "measured_payload_bits": round_mbits,
+            "measured_frame_bytes": round_fbytes,
+        }
+
+    def replay_round(self, r: int, x_rec: np.ndarray) -> None:
+        """Resume support: re-drive round ``r`` with the RECORDED iterate so
+        freshly spawned clients replay their Algorithm-3 bodies (PRNG spine,
+        fault draws, H_i/l_i/g_i evolution) exactly as the original run —
+        the uplinks are consumed undecoded and the master invariants stay
+        untouched (they are restored from the checkpoint instead)."""
+        x = jnp.asarray(x_rec)
+        idx, k_sel = self._sample_round(r, x)
+        self._collect_round(r, x, idx, k_sel, decode=False)
+
+    def stop(self) -> None:
+        """Broadcast STOP so client loops exit cleanly (idempotent)."""
+        if getattr(self, "_stopped", False):
+            return
+        self._stopped = True
         for cid in self.order:
             send_frame(self.conns[cid], Frame(type=MsgType.STOP))
         self._drive()
+
+    def run(self, rounds: int) -> StarPPRunResult:
+        self._init_handshake()
+        x_hist, l_hist = [], []
+        parts_hist, drops_hist = [], []
+        bits_analytic, bits_measured, frame_bytes = [], [], []
+        t_start = time.perf_counter()
+        for r in range(rounds):
+            m = self.step_round(r)
+            x_hist.append(m["x"])
+            l_hist.append(m["l"])
+            parts_hist.append(m["participants"])
+            drops_hist.append(m["dropped"])
+            bits_analytic.append(m["sent_bits"])
+            bits_measured.append(m["measured_payload_bits"])
+            frame_bytes.append(m["measured_frame_bytes"])
+
+        self.stop()
         wall = time.perf_counter() - t_start
         return StarPPRunResult(
             x=np.asarray(self._solve_x()),
@@ -438,6 +489,34 @@ class StarPPMaster:
         )
 
 
+def make_pp_loopback_clients(
+    z: jax.Array,
+    cfg: FedNLConfig,
+    seed: int = 0,
+    fault: FaultSpec | None = None,
+) -> tuple[dict[int, Connection], Callable[[], None]]:
+    """In-process PP client fleet: master-side conns + the on-demand ``drive``
+    hook (only SELECTed clients have pending frames in a PP round).  Shared
+    by ``run_pp_loopback`` and the star-loopback session backend."""
+    n_clients = z.shape[0]
+    master_conns: dict[int, Connection] = {}
+    clients: list[StarPPClient] = []
+    for i in range(n_clients):
+        a, b = loopback_pair()
+        master_conns[i] = a
+        clients.append(
+            StarPPClient(i, n_clients, z[i], cfg, b, seed=seed, fault=fault)
+        )
+
+    def drive() -> None:
+        for c in clients:
+            while c.conn.pending():
+                if not c.serve_once():
+                    break
+
+    return master_conns, drive
+
+
 def run_pp_loopback(
     z: jax.Array,
     cfg: FedNLConfig,
@@ -450,25 +529,10 @@ def run_pp_loopback(
     """Full FedNL-PP protocol run over in-process loopback transport.
 
     Every message crosses encode -> frame -> decode; only sockets are
-    replaced by synchronous buffers.  Clients are driven on demand (only
-    SELECTed clients have pending frames in a PP round).
+    replaced by synchronous buffers.
     """
-    n_clients, _, d = z.shape
-    master_conns: dict[int, Connection] = {}
-    clients: list[StarPPClient] = []
-    for i in range(n_clients):
-        a, b = loopback_pair()
-        master_conns[i] = a
-        clients.append(
-            StarPPClient(i, n_clients, z[i], cfg, b, seed=seed, fault=fault)
-        )
-
-    def drive() -> None:
-        for i, c in enumerate(clients):
-            while c.conn.pending():
-                if not c.serve_once():
-                    break
-
+    d = z.shape[-1]
+    master_conns, drive = make_pp_loopback_clients(z, cfg, seed=seed, fault=fault)
     master = StarPPMaster(
         master_conns,
         d,

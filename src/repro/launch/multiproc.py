@@ -90,6 +90,108 @@ def _client_entry(
 _SPAWN_ENV_LOCK = threading.Lock()
 
 
+class ClientCluster:
+    """A live fleet of TCP client processes around one bound master socket.
+
+    Extracted from the closed run-everything scaffold so the star-tcp
+    Session backend can keep the cluster open across ``step()`` calls (and
+    across a save/resume boundary: a resumed session simply spawns a fresh
+    cluster — client state is rebuilt by protocol replay, never persisted).
+    ``run_multiproc[_pp]`` still compose it into the classic bind -> spawn ->
+    run -> join shape.
+    """
+
+    def __init__(
+        self,
+        dataset: str,
+        shape,
+        seed: int,
+        host: str = "127.0.0.1",
+        pp: bool = False,
+        fault_dict: dict | None = None,
+        data_seed: int | None = None,
+        cfg: FedNLConfig | None = None,
+    ):
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+        from repro.comm.transport import TCPMaster
+
+        # dims only — the master never holds the training data; workers
+        # rebuild their shard from the data seed
+        from repro.api.spec import DataSpec
+
+        d, n_clients, _ = DataSpec(
+            dataset=dataset or "tiny",
+            shape=shape,
+            seed=seed if data_seed is None else data_seed,
+        ).dims()
+        self.d = d
+        self.n_clients = n_clients
+        self._master = TCPMaster(n_clients, host=host)
+        # spawn (not fork): children must re-initialize the JAX runtime cleanly
+        ctx = mp.get_context("spawn")
+        # make `repro` importable in the children regardless of parent's cwd
+        src_dir = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        )
+        self.procs: list = []
+        self.conns: dict = {}
+        # spawn + accept under one guard: a mid-loop start() failure (fd/pid
+        # exhaustion under solve_many's concurrent star-tcp pool) must not
+        # leak the bound master socket or already-started children
+        try:
+            # children capture os.environ at start(), so the PYTHONPATH
+            # mutation only needs to span the spawn loop; the lock makes
+            # concurrent runs safe against each other's mutate-and-restore
+            with _SPAWN_ENV_LOCK:
+                old_pp = os.environ.get("PYTHONPATH")
+                os.environ["PYTHONPATH"] = src_dir + (
+                    os.pathsep + old_pp if old_pp else ""
+                )
+                try:
+                    for i in range(n_clients):
+                        p = ctx.Process(
+                            target=_client_entry,
+                            args=(
+                                i,
+                                n_clients,
+                                dataset,
+                                shape,
+                                dataclasses.asdict(cfg) if cfg is not None else {},
+                                seed,
+                                host,
+                                self._master.port,
+                                pp,
+                                fault_dict,
+                                data_seed,
+                            ),
+                            daemon=True,
+                        )
+                        p.start()
+                        self.procs.append(p)
+                finally:
+                    if old_pp is None:
+                        os.environ.pop("PYTHONPATH", None)
+                    else:
+                        os.environ["PYTHONPATH"] = old_pp
+            self.conns = self._master.accept_clients()
+        except Exception:
+            self.close(join_timeout=5)
+            raise
+
+    def close(self, join_timeout: float = 60) -> None:
+        """Close connections, join (then terminate) workers, unbind."""
+        for conn in self.conns.values():
+            conn.close()
+        for p in self.procs:
+            p.join(timeout=join_timeout)
+        for p in self.procs:
+            if p.is_alive():
+                p.terminate()
+        self._master.close()
+
+
 def _run_with_clients(
     cfg: FedNLConfig,
     dataset: str,
@@ -107,68 +209,20 @@ def _run_with_clients(
     ``data_seed`` decouples the synthetic-data seed from the algorithm PRNG
     seed (default: same, the historical behaviour).
     """
-    import jax
-
-    jax.config.update("jax_enable_x64", True)
-    from repro.comm.transport import TCPMaster
-
-    z = _build_problem(dataset, shape, seed if data_seed is None else data_seed)
-    n_clients, _, d = z.shape
-
-    master = TCPMaster(n_clients, host=host)
-    # spawn (not fork): children must re-initialize the JAX runtime cleanly
-    ctx = mp.get_context("spawn")
-    # make `repro` importable in the children regardless of the parent's cwd
-    src_dir = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    procs = []
+    cluster = ClientCluster(
+        dataset,
+        shape,
+        seed,
+        host=host,
+        pp=pp,
+        fault_dict=fault_dict,
+        data_seed=data_seed,
+        cfg=cfg,
+    )
     try:
-        # children capture os.environ at start(), so the PYTHONPATH mutation
-        # only needs to span the spawn loop; the lock makes concurrent runs
-        # (solve_many's star-tcp worker pool) safe against each other's
-        # mutate-and-restore
-        with _SPAWN_ENV_LOCK:
-            old_pp = os.environ.get("PYTHONPATH")
-            os.environ["PYTHONPATH"] = src_dir + (
-                os.pathsep + old_pp if old_pp else ""
-            )
-            try:
-                for i in range(n_clients):
-                    p = ctx.Process(
-                        target=_client_entry,
-                        args=(
-                            i,
-                            n_clients,
-                            dataset,
-                            shape,
-                            dataclasses.asdict(cfg),
-                            seed,
-                            host,
-                            master.port,
-                            pp,
-                            fault_dict,
-                            data_seed,
-                        ),
-                        daemon=True,
-                    )
-                    p.start()
-                    procs.append(p)
-            finally:
-                if old_pp is None:
-                    os.environ.pop("PYTHONPATH", None)
-                else:
-                    os.environ["PYTHONPATH"] = old_pp
-        conns = master.accept_clients()
-        result = master_fn(conns, d)
-        for conn in conns.values():
-            conn.close()
-        for p in procs:
-            p.join(timeout=60)
-        return result
+        return master_fn(cluster.conns, cluster.d)
     finally:
-        for p in procs:
-            if p.is_alive():
-                p.terminate()
-        master.close()
+        cluster.close()
 
 
 def run_multiproc(

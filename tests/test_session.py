@@ -1,0 +1,475 @@
+"""The Session API (DESIGN.md §10): open_session / step / observe / save / resume.
+
+The acceptance bar of the api_redesign PR, pinned here:
+
+  * step composability — ``step(k)`` then ``step(m)`` is bit-identical to
+    ``step(k + m)`` and to sequential ``solve()`` on every session-capable
+    backend (local, sharded, star-loopback; star-tcp under the net marker);
+  * checkpointing — save -> restore mid-run is bit-identical to an
+    uninterrupted run on every backend, including a faulted resampling
+    FedNL-PP run whose clients rebuild their state purely from the spec +
+    replayed PRNG spine (no client state on disk);
+  * serialization — the FNLS1 checkpoint is byte-stable (save -> load ->
+    save is the identity on bytes) across all registered algorithm x
+    compressor pairs (hypothesis widens the sweep when installed);
+  * validation — restore-incompatible spec/checkpoint combinations fail
+    loudly with the mismatched fields named;
+  * kill-and-resume — a star-tcp master process killed mid-run resumes from
+    its checkpoint in a fresh process, bit-identical (net marker).
+"""
+
+import dataclasses
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    FaultSpec,
+    StopPolicy,
+    load_state,
+    open_session,
+    save_state,
+    solve,
+    solve_many,
+)
+
+SHAPE = (12, 4, 20)  # d, n_clients, n_i — small enough for per-round stepping
+
+
+def full_spec(**overrides) -> ExperimentSpec:
+    base = dict(data=DataSpec(shape=SHAPE, seed=1), rounds=6, seed=0)
+    base.update(overrides)
+    return ExperimentSpec(**base)
+
+
+def pp_spec(**overrides) -> ExperimentSpec:
+    return full_spec(algorithm="fednl-pp", tau=3, **overrides)
+
+
+def assert_reports_bit_identical(got, want):
+    assert got.rounds == want.rounds
+    for g, w in zip(got.records, want.records):
+        assert (g.grad_norm is None) == (w.grad_norm is None)
+        if g.grad_norm is not None:
+            assert float(g.grad_norm).hex() == float(w.grad_norm).hex()
+        assert g.sent_bits == w.sent_bits
+        assert g.sent_bits_payload == w.sent_bits_payload
+        assert g.sent_bits_wire == w.sent_bits_wire
+        if g.x is not None or w.x is not None:
+            np.testing.assert_array_equal(g.x, w.x)
+        assert g.participants == w.participants
+        assert g.dropped == w.dropped
+    np.testing.assert_array_equal(got.x, want.x)
+
+
+# ---------------------------------------------------------------------------
+# step composability: step(k) + step(m) == step(k+m) == solve()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["local", "sharded", "star-loopback"])
+def test_step_composability_full(backend):
+    spec = full_spec(backend=backend)
+    want = solve(spec)
+    with open_session(spec) as s:
+        s.step(2)
+        s.step(3)
+        s.step(1)
+        got = s.report()
+    assert_reports_bit_identical(got, want)
+
+
+@pytest.mark.parametrize("backend", ["local", "star-loopback"])
+def test_step_composability_pp(backend):
+    spec = pp_spec(backend=backend)
+    want = solve(spec)
+    with open_session(spec) as s:
+        s.step(1)
+        s.step(5)
+        got = s.report()
+    assert_reports_bit_identical(got, want)
+    np.testing.assert_array_equal(got.x_hist, want.x_hist)
+
+
+def test_run_is_solve_and_reports_are_cumulative():
+    spec = full_spec()
+    want = solve(spec)
+    with open_session(spec) as s:
+        mid = s.run(until=3)
+        assert mid.rounds == 3
+        full = s.run()  # continues from round 3 under the spec budget
+        assert full.rounds == spec.rounds
+    assert_reports_bit_identical(full, want)
+    # the mid-run report is exactly solve() of the 3-round prefix spec
+    assert_reports_bit_identical(
+        mid, solve(spec.replace(rounds=3))
+    )
+
+
+# ---------------------------------------------------------------------------
+# observers + stop policies
+# ---------------------------------------------------------------------------
+
+def test_observer_streams_records_in_order():
+    spec = full_spec()
+    seen = []
+    with open_session(spec) as s:
+        s.on_round(lambda rec: seen.append(rec.round))
+        s.step(2)
+        s.run()
+    assert seen == list(range(spec.rounds))
+
+
+def test_run_until_tol_matches_solve_early_stop():
+    spec = full_spec(rounds=40, tol=1e-10)
+    want = solve(spec)
+    with open_session(spec) as s:
+        got = s.run()
+    assert got.rounds == want.rounds < 40
+    assert_reports_bit_identical(got, want)
+    # explicit float `until` behaves like a spec tol
+    with open_session(spec.replace(tol=0.0)) as s:
+        got2 = s.run(until=1e-10)
+    assert got2.rounds == want.rounds
+
+
+def test_run_until_predicate_and_policy():
+    spec = full_spec(rounds=30)
+    stop_at = []
+    with open_session(spec) as s:
+        got = s.run(
+            until=StopPolicy(
+                predicate=lambda rec: stop_at.append(rec.round) or rec.round >= 3
+            )
+        )
+    assert got.rounds == 4  # the stopping round is included
+    with pytest.raises(TypeError, match="until must be"):
+        with open_session(spec) as s:
+            s.run(until="forever")
+
+
+def test_run_until_tol_rejected_for_pp():
+    with open_session(pp_spec()) as s:
+        with pytest.raises(ValueError, match="partial participation"):
+            s.run(until=1e-9)
+
+
+def test_closed_session_refuses_steps():
+    s = open_session(full_spec())
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.step()
+
+
+# ---------------------------------------------------------------------------
+# save -> restore mid-run == uninterrupted run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["local", "sharded", "star-loopback"])
+def test_save_restore_midrun_full(tmp_path, backend):
+    spec = full_spec(backend=backend)
+    want = solve(spec)
+    ck = tmp_path / "mid.fnlsess"
+    with open_session(spec) as s:
+        s.step(3)
+        s.save(ck)
+    with open_session(spec, restore=ck) as s:
+        assert s.round == 3 and len(s.records) == 3
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+
+
+@pytest.mark.parametrize("backend", ["local", "star-loopback"])
+def test_save_restore_midrun_pp(tmp_path, backend):
+    spec = pp_spec(backend=backend)
+    want = solve(spec)
+    ck = tmp_path / "mid.fnlsess"
+    with open_session(spec) as s:
+        s.step(4)
+        s.save(ck)
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+    assert got.final_grad_norm == want.final_grad_norm
+
+
+def test_save_restore_faulted_resample_pp(tmp_path):
+    """Clients rebuild PRNG spine AND fault-injector state via replay: a
+    resampling run with 30% dropout restores bit-identically."""
+    spec = pp_spec(
+        backend="star-loopback",
+        rounds=10,
+        fault=FaultSpec(drop_prob=0.3, seed=7),
+        on_dropout="resample",
+    )
+    want = solve(spec)
+    assert sum(len(d) for d in want.dropped) > 0, "fault injection was a no-op"
+    ck = tmp_path / "faulted.fnlsess"
+    with open_session(spec) as s:
+        s.step(5)
+        s.save(ck)
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+    assert got.participants == want.participants
+    assert got.dropped == want.dropped
+
+
+def test_restore_can_extend_rounds(tmp_path):
+    """rounds is run control, not state: a checkpoint resumes under a larger
+    budget and matches the long solve exactly."""
+    short, long = full_spec(rounds=4), full_spec(rounds=9)
+    want = solve(long)
+    ck = tmp_path / "short.fnlsess"
+    with open_session(short) as s:
+        s.step(4)
+        s.save(ck)
+    with open_session(long, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+
+
+# ---------------------------------------------------------------------------
+# serialization: byte stability across algorithm x compressor pairs
+# ---------------------------------------------------------------------------
+
+ALGO_BACKEND = [("fednl", "local"), ("fednl-ls", "local"), ("fednl-pp", "local"),
+                ("fednl", "star-loopback"), ("fednl-pp", "star-loopback")]
+COMPRESSORS = ["topk", "randk", "randseqk", "toplek", "natural", "identity"]
+
+
+def _roundtrip_bytes(spec, tmp_path, tag):
+    p1 = tmp_path / f"{tag}.a"
+    p2 = tmp_path / f"{tag}.b"
+    with open_session(spec) as s:
+        s.step(2)
+        s.save(p1)
+    save_state(load_state(p1), p2)
+    return p1.read_bytes(), p2.read_bytes()
+
+
+@pytest.mark.parametrize("algo,backend", ALGO_BACKEND)
+@pytest.mark.parametrize("comp", COMPRESSORS)
+def test_checkpoint_byte_stable_registered_pairs(tmp_path, algo, backend, comp):
+    """save -> load -> save is the identity on bytes for every registered
+    algorithm x compressor pair (the FNLS1 determinism contract)."""
+    from repro.api import CompressorSpec
+
+    spec = full_spec(
+        algorithm=algo,
+        backend=backend,
+        compressor=CompressorSpec(comp),
+        tau=3 if algo == "fednl-pp" else None,
+        rounds=3,
+    )
+    a, b = _roundtrip_bytes(spec, tmp_path, f"{algo}-{backend}-{comp}")
+    assert a == b
+    # and the loaded state itself round-trips structurally
+    st = load_state(tmp_path / f"{algo}-{backend}-{comp}.a")
+    assert st.spec == spec and st.round == 2 and len(st.records) == 2
+
+
+try:
+    from hypothesis import given, settings, strategies as st_h
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        comp=st_h.sampled_from(COMPRESSORS),
+        algo=st_h.sampled_from(["fednl", "fednl-ls", "fednl-pp"]),
+        seed=st_h.integers(min_value=0, max_value=2**31 - 1),
+        steps=st_h.integers(min_value=0, max_value=3),
+    )
+    def test_checkpoint_byte_stable_property(tmp_path_factory, comp, algo, seed, steps):
+        """hypothesis sweep: byte stability holds for arbitrary seeds and
+        save points, not just the pinned grid above."""
+        from repro.api import CompressorSpec
+
+        tmp = tmp_path_factory.mktemp("fnlsess")
+        spec = full_spec(
+            algorithm=algo,
+            compressor=CompressorSpec(comp),
+            tau=2 if algo == "fednl-pp" else None,
+            rounds=3,
+            seed=seed,
+        )
+        p1, p2 = tmp / "a", tmp / "b"
+        with open_session(spec) as s:
+            s.step(steps)
+            s.save(p1)
+        save_state(load_state(p1), p2)
+        assert p1.read_bytes() == p2.read_bytes()
+except ImportError:  # property tests need hypothesis (requirements-dev.txt)
+    pass
+
+
+def test_load_rejects_foreign_files(tmp_path):
+    p = tmp_path / "notacheckpoint"
+    p.write_bytes(b"PK\x03\x04 definitely a zip")
+    with pytest.raises(ValueError, match="bad magic"):
+        load_state(p)
+
+
+# ---------------------------------------------------------------------------
+# restore validation: incompatible combinations fail loudly
+# ---------------------------------------------------------------------------
+
+def test_restore_incompatible_specs_rejected(tmp_path):
+    spec = pp_spec(rounds=4)
+    ck = tmp_path / "pp.fnlsess"
+    with open_session(spec) as s:
+        s.step(2)
+        s.save(ck)
+    # different tau: the checkpointed invariants assume the original cohort
+    with pytest.raises(ValueError, match="tau"):
+        open_session(spec.replace(tau=2), restore=ck)
+    # different compressor: client H_i evolution would not match the spine
+    from repro.api import CompressorSpec
+
+    with pytest.raises(ValueError, match="compressor"):
+        open_session(
+            spec.replace(compressor=CompressorSpec("randk")), restore=ck
+        )
+    # different backend: checkpoint layouts are backend-specific
+    with pytest.raises(ValueError, match="backend"):
+        open_session(spec.replace(backend="star-loopback"), restore=ck)
+    # different seed: a different trajectory altogether
+    with pytest.raises(ValueError, match="seed"):
+        open_session(spec.replace(seed=1), restore=ck)
+    # the error is actionable: names the field and both values
+    with pytest.raises(ValueError, match="checkpoint ran with"):
+        open_session(spec.replace(seed=1), restore=ck)
+    # rounds/tol ARE allowed to change (run control)
+    with open_session(spec.replace(rounds=6), restore=ck) as s:
+        assert s.run().rounds == 6
+
+
+def test_restore_refuses_x0_override(tmp_path):
+    spec = full_spec()
+    ck = tmp_path / "f.fnlsess"
+    with open_session(spec) as s:
+        s.save(ck)
+    with pytest.raises(ValueError, match="x0"):
+        open_session(spec, x0=np.zeros(SHAPE[0]), restore=ck)
+
+
+def test_session_on_legacy_backend_fails_loudly():
+    from repro.api.registry import BACKENDS, Backend, register_backend
+
+    class LegacyBackend(Backend):
+        name = "legacy-test"
+        needs_problem = False
+
+        def run(self, spec, algo, z, x0):
+            return "ran"
+
+    register_backend(LegacyBackend())
+    try:
+        assert solve(ExperimentSpec(backend="legacy-test")) == "ran"
+        with pytest.raises(ValueError, match="does not support sessions"):
+            open_session(ExperimentSpec(backend="legacy-test"))
+    finally:
+        BACKENDS._entries.pop("legacy-test", None)
+
+
+# ---------------------------------------------------------------------------
+# sweep integration: warm-started rounds-prefix groups
+# ---------------------------------------------------------------------------
+
+def test_sweep_warm_start_reuses_sessions_bit_identically():
+    base = full_spec()
+    sweep = base.grid(rounds=[2, 4, 6])
+    rep = solve_many(sweep)
+    assert any("warm-start session reuse" in line for line in rep.log), rep.log
+    for spec, got in zip(sweep.specs(), rep.reports):
+        assert got.spec == spec and got.rounds == spec.rounds
+        assert_reports_bit_identical(got, solve(spec))
+
+
+def test_sweep_warm_start_skipped_when_not_a_prefix_group():
+    base = full_spec()
+    # tol early-stop and batch="never" must keep the historical per-spec path
+    rep = solve_many([base.replace(rounds=2, tol=1e-30), base.replace(rounds=4, tol=1e-30)])
+    assert not any("warm-start" in line for line in rep.log)
+    rep = solve_many(base.grid(rounds=[2, 4], batch="never"))
+    assert not any("warm-start" in line for line in rep.log)
+
+
+# ---------------------------------------------------------------------------
+# star-tcp: real sockets (net marker) + kill-and-resume subprocess test
+# ---------------------------------------------------------------------------
+
+@pytest.mark.net
+def test_tcp_session_step_and_restore(tmp_path):
+    spec = full_spec(backend="star-tcp")
+    want = solve(spec)
+    ck = tmp_path / "tcp.fnlsess"
+    with open_session(spec) as s:
+        s.step(2)
+        s.step(1)
+        s.save(ck)
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+
+
+_KILL_SCRIPT = """
+import sys, os
+
+# the __main__ guard matters: star-tcp spawns worker processes that re-import
+# this module under multiprocessing's spawn context
+if __name__ == "__main__":
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.api import DataSpec, ExperimentSpec, open_session
+
+    spec = ExperimentSpec(data=DataSpec(shape=(12, 4, 20), seed=1), rounds=6,
+                          seed=0, backend="star-tcp")
+    s = open_session(spec)
+    s.step(3)
+    s.save(sys.argv[1])
+    # die without closing anything: no STOP broadcast, no cluster join — the
+    # worker processes are daemonic children and fall with the master
+    os._exit(17)
+"""
+
+
+@pytest.mark.net
+def test_tcp_kill_and_resume_subprocess(tmp_path):
+    """A star-tcp master killed mid-run resumes from its checkpoint in a
+    fresh process tree, bit-identical to the uninterrupted run."""
+    script = tmp_path / "kill_master.py"
+    script.write_text(_KILL_SCRIPT)
+    ck = tmp_path / "killed.fnlsess"
+    env = dict(
+        os_environ_minus_pythonpath(),
+        PYTHONPATH=str(pathlib.Path(__file__).resolve().parent.parent / "src"),
+    )
+    proc = subprocess.run(
+        [sys.executable, str(script), str(ck)],
+        capture_output=True,
+        text=True,
+        timeout=300,
+        env=env,
+    )
+    assert proc.returncode == 17, proc.stderr
+    assert ck.exists()
+    st = load_state(ck)
+    assert st.round == 3 and st.backend == "star-tcp"
+
+    spec = full_spec(backend="star-tcp")
+    want = solve(spec)
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+
+
+def os_environ_minus_pythonpath():
+    import os
+
+    env = dict(os.environ)
+    env.pop("PYTHONPATH", None)
+    return env
