@@ -1,13 +1,13 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV and
 # record the machine-readable perf trajectory to BENCH_sweep.json +
-# BENCH_session.json.
+# BENCH_session.json + BENCH_serve.json.
 #
 #   PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_sweep.json]
-#       [--json-session BENCH_session.json]
+#       [--json-session BENCH_session.json] [--json-serve BENCH_serve.json]
 #
-# --quick runs only the sweep-engine speedup benchmark and the session-mode
-# overhead benchmark (what CI records and uploads as artifacts); the full
-# run additionally times every paper table.
+# --quick runs only the sweep-engine speedup benchmark, the session-mode
+# overhead benchmark, and the serving-engine load test (what CI records and
+# uploads as artifacts); the full run additionally times every paper table.
 # Tables 1-4 mirror the paper's Tables 1-3 + Appendix B progression; the
 # roofline rows read the dry-run sweep JSON (produced separately by
 # ``python -m repro.launch.dryrun --arch all --shape all --both-meshes
@@ -28,6 +28,8 @@ def main() -> int:
     ap.add_argument("--json-session", default="BENCH_session.json",
                     metavar="PATH",
                     help="where to write the session-overhead benchmark record")
+    ap.add_argument("--json-serve", default="BENCH_serve.json", metavar="PATH",
+                    help="where to write the serving-engine load-test record")
     args = ap.parse_args()
 
     bench: dict = {"schema": 1, "tables": {}}
@@ -80,6 +82,20 @@ def main() -> int:
             f"bit_parity={m['bit_parity']}",
         ))
 
+    # serving engine: Poisson arrivals of mixed tenants vs sequential solos
+    from benchmarks.serve_load import serve_load_benchmark
+
+    serve = {"schema": 1, **serve_load_benchmark()}
+    rows.append((
+        "serve/engine_vs_sequential",
+        serve["p50_round_latency_ms"] * 1e3,
+        f"tenants={serve['n_tenants']};peak={serve['concurrent_peak']};"
+        f"ratio={serve['throughput_ratio']}x;"
+        f"bit_parity={serve['bit_parity']};"
+        f"p99={serve['p99_round_latency_ms']}ms;"
+        f"occupancy={serve['batch_occupancy']};spills={serve['spills']}",
+    ))
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -90,7 +106,13 @@ def main() -> int:
     with open(args.json_session, "w") as f:
         json.dump(session, f, indent=2)
         f.write("\n")
-    print(f"# wrote {args.json} and {args.json_session}", file=sys.stderr)
+    with open(args.json_serve, "w") as f:
+        json.dump(serve, f, indent=2)
+        f.write("\n")
+    print(
+        f"# wrote {args.json}, {args.json_session} and {args.json_serve}",
+        file=sys.stderr,
+    )
     return 0
 
 

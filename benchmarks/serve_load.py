@@ -1,0 +1,162 @@
+"""Load test for the multi-tenant serving engine (``repro.serve_fednl``).
+
+Drives a Poisson arrival process of mixed-spec tenants into one
+``FedNLServer`` and measures what an LLM-style serving benchmark would:
+sessions/sec, p50/p99 per-round latency, batch occupancy, spill/resume
+counts — plus the two bars the subsystem is accountable for:
+
+* **bit parity**: every served tenant's trajectory equals its solo
+  ``open_session(spec).run()`` bit-for-bit (the solo runs double as the
+  sequential baseline);
+* **throughput**: serving N tenants through the engine beats running them
+  back-to-back as solo sessions on round throughput — the win is shared
+  compiled tick kernels (a handful of compiles for the whole fleet vs one
+  jit per session) exactly as in-flight batching amortizes prefill in an
+  LLM engine.
+
+``python -m benchmarks.run --quick`` records the result to
+``BENCH_serve.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+SHAPE = (12, 4, 20)  # d, n_clients, n_i
+COMPRESSORS = ["topk", "randk", "randseqk", "identity"]
+
+
+def _build_specs(n_tenants: int, rounds: int):
+    from repro.api import CompressorSpec, DataSpec, ExperimentSpec
+
+    # mixed compressors / k / seeds / round budgets on one shared problem:
+    # heterogeneous tenants that are nevertheless co-schedulable (§11)
+    return [
+        ExperimentSpec(
+            data=DataSpec(shape=SHAPE, seed=1),
+            compressor=CompressorSpec(
+                COMPRESSORS[i % len(COMPRESSORS)],
+                8.0 if i % 2 == 0 else 4.0,
+            ),
+            rounds=rounds + (i % 5),
+            seed=i,
+        )
+        for i in range(n_tenants)
+    ]
+
+
+def _hex_traj(report):
+    return (
+        [float(r.grad_norm).hex() for r in report.records],
+        [r.sent_bits for r in report.records],
+    )
+
+
+def serve_load_benchmark(
+    n_tenants: int = 16,
+    rounds: int = 24,
+    arrival_rate_hz: float = 50.0,
+    max_resident: int = 16,
+    seed: int = 0,
+) -> dict:
+    """Run the load test; returns the BENCH_serve.json payload."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.api import open_session
+    from repro.serve_fednl import FedNLServer, ServeConfig
+
+    specs = _build_specs(n_tenants, rounds)
+    z = specs[0].data.build()
+
+    # --- sequential baseline (and the bit-parity reference) ---------------
+    t0 = time.perf_counter()
+    solo_reports = []
+    for spec in specs:
+        with open_session(spec, z=z) as s:
+            solo_reports.append(s.run())
+    seq_wall = time.perf_counter() - t0
+    total_rounds = sum(r.rounds for r in solo_reports)
+
+    # --- engine run under Poisson arrivals --------------------------------
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate_hz, n_tenants))
+    latencies_ms: list[float] = []
+    concurrent_peak = 0
+    handles = []
+    with FedNLServer(
+        ServeConfig(max_resident=max_resident, admit_per_tick=max_resident)
+    ) as srv:
+        t_start = time.perf_counter()
+        next_i = 0
+        while next_i < n_tenants or srv._has_work():
+            now = time.perf_counter() - t_start
+            while next_i < n_tenants and arrivals[next_i] <= now:
+                handles.append(srv.submit(specs[next_i]))
+                next_i += 1
+            if srv._has_work():
+                t1 = time.perf_counter()
+                out = srv.tick()
+                tick_ms = (time.perf_counter() - t1) * 1e3
+                # every session advanced this tick waited the whole tick
+                latencies_ms.extend([tick_ms] * max(out["slots"], 1))
+                in_flight = sum(1 for h in handles if not h.done)
+                concurrent_peak = max(concurrent_peak, in_flight)
+            elif next_i < n_tenants:
+                time.sleep(
+                    max(0.0, arrivals[next_i] - (time.perf_counter() - t_start))
+                )
+        serve_wall = time.perf_counter() - t_start
+        stats = srv.stats()
+        served_reports = [h.result() for h in handles]
+
+    # --- bit parity (all tenants; the bar requires >= 8 concurrent) -------
+    bit_parity = all(
+        _hex_traj(got) == _hex_traj(want)
+        and got.rounds == want.rounds
+        and np.array_equal(got.x, want.x)
+        for got, want in zip(served_reports, solo_reports)
+    )
+
+    lat = np.asarray(latencies_ms) if latencies_ms else np.zeros(1)
+    return {
+        "n_tenants": n_tenants,
+        "concurrent_peak": concurrent_peak,
+        "arrival_rate_hz": arrival_rate_hz,
+        "max_resident": max_resident,
+        "total_rounds": total_rounds,
+        "bit_parity": bool(bit_parity),
+        "sessions_per_s": round(n_tenants / serve_wall, 3),
+        "p50_round_latency_ms": round(float(np.percentile(lat, 50)), 3),
+        "p99_round_latency_ms": round(float(np.percentile(lat, 99)), 3),
+        "batch_occupancy": (
+            round(stats["batch_occupancy"], 4)
+            if stats["batch_occupancy"] is not None
+            else None
+        ),
+        "spills": stats["spills"],
+        "resumes": stats["resumes"],
+        "ticks": stats["ticks"],
+        "compiles": stats["compiles"],
+        "serve_wall_s": round(serve_wall, 3),
+        "sequential_wall_s": round(seq_wall, 3),
+        "serve_rounds_per_s": round(total_rounds / serve_wall, 1),
+        "sequential_rounds_per_s": round(total_rounds / seq_wall, 1),
+        "throughput_ratio": round(seq_wall / serve_wall, 2),
+    }
+
+
+def main() -> int:
+    bench = {"schema": 1, **serve_load_benchmark()}
+    for k, v in bench.items():
+        print(f"{k}: {v}")
+    ok = bench["bit_parity"] and bench["concurrent_peak"] >= 8
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -22,6 +22,14 @@ outside ``repro.api``.  The Backend strategy protocol is the facade's
 internal seam: entry points that grab a backend object and drive it by hand
 bypass spec validation, capability checks and the Session bookkeeping — use
 ``solve(spec)`` or ``open_session(spec)`` instead.
+
+Rule 4 flags hand-rolled session polling loops — a ``.step(`` call inside a
+``for``/``while`` body in benchmarks/ or scripts/.  Driving many sessions
+round-by-round by hand is the serving engine's job: ``repro.serve_fednl``
+multiplexes concurrent sessions through shared batched round kernels with
+spill/resume under memory pressure, bit-identically.  New polling loops in
+the measurement/CI layers fail CI (single-session step-contract checks are
+allowlisted with a reason).
 """
 
 from __future__ import annotations
@@ -75,7 +83,7 @@ SWEEP_SCANNED = ["benchmarks", "scripts"]
 
 # solve( but not solve_many( and not a method call like facade.solve(
 SOLVE_CALL = re.compile(r"(?<![\w.])solve\s*\(")
-FOR_HEADER = re.compile(r"^(\s*)for\b.*:")
+LOOP_HEADER = re.compile(r"^(\s*)(?:for|while)\b.*:")
 
 SWEEP_ALLOWLIST = {
     # the registry smoke must run each algorithm x backend pair in isolation
@@ -107,17 +115,38 @@ BACKEND_ALLOWLIST = {
 }
 
 
+# --- rule 4: hand-rolled session polling loops ------------------------------
+
+# a session stepped round-by-round inside a loop body; outside
+# repro.serve_fednl that is a hand-rolled serving engine
+STEP_CALL = re.compile(r"\.step\s*\(")
+
+# same measurement/CI surface as rule 2
+STEP_SCANNED = ["benchmarks", "scripts"]
+
+STEP_ALLOWLIST = {
+    # pins the DESIGN.md §10 step-composability contract itself:
+    # step(2)+step(3) == run() per algorithm x backend pair
+    "scripts/smoke_api.py",
+    # measures the per-round session-stepping overhead deliberately — the
+    # step loop IS the measurement subject, vs run()'s chunked path
+    "benchmarks/tables.py",
+    # this checker's own pattern table
+    "scripts/check_api_migration.py",
+}
+
+
 def is_api_internal(rel: str) -> bool:
     return rel.startswith("src/repro/api/")
 
 
-def find_sweep_loops(text: str) -> list[tuple[int, str]]:
-    """Line numbers of ``solve(`` calls lexically inside a ``for`` body
-    (indentation-scoped, good enough for the flat scripts we scan), plus
-    comprehension/generator forms — ``[solve(s) for s in specs]`` is the
-    same one-trace-per-spec loop in its most idiomatic spelling."""
+def find_calls_in_loops(text: str, call: re.Pattern) -> list[tuple[int, str]]:
+    """Line numbers of ``call`` matches lexically inside a ``for``/``while``
+    body (indentation-scoped, good enough for the flat scripts we scan),
+    plus comprehension/generator forms — ``[solve(s) for s in specs]`` is
+    the same one-call-per-item loop in its most idiomatic spelling."""
     hits = []
-    open_loops: list[int] = []  # indent depths of active for-blocks
+    open_loops: list[int] = []  # indent depths of active loop blocks
     for lineno, line in enumerate(text.splitlines(), 1):
         stripped = line.strip()
         if not stripped or stripped.startswith("#"):
@@ -125,11 +154,11 @@ def find_sweep_loops(text: str) -> list[tuple[int, str]]:
         indent = len(line) - len(line.lstrip())
         open_loops = [i for i in open_loops if indent > i]
         in_comprehension = (
-            SOLVE_CALL.search(line) and re.search(r"\bfor\b", line)
+            call.search(line) and re.search(r"\bfor\b", line)
         )
-        if SOLVE_CALL.search(line) and (open_loops or in_comprehension):
+        if call.search(line) and (open_loops or in_comprehension):
             hits.append((lineno, stripped))
-        m = FOR_HEADER.match(line)
+        m = LOOP_HEADER.match(line)
         if m:
             open_loops.append(len(m.group(1)))
     return hits
@@ -151,7 +180,7 @@ def main() -> int:
             rel = path.relative_to(ROOT).as_posix()
             if rel in SWEEP_ALLOWLIST:
                 continue
-            for lineno, line in find_sweep_loops(path.read_text()):
+            for lineno, line in find_calls_in_loops(path.read_text(), SOLVE_CALL):
                 sweep_bad.append(f"{rel}:{lineno}: {line}")
     backend_bad: list[str] = []
     for layer in BACKEND_SCANNED:
@@ -162,6 +191,14 @@ def main() -> int:
             for lineno, line in enumerate(path.read_text().splitlines(), 1):
                 if BACKEND_DRIVE.search(line) and not line.lstrip().startswith("#"):
                     backend_bad.append(f"{rel}:{lineno}: {line.strip()}")
+    step_bad: list[str] = []
+    for layer in STEP_SCANNED:
+        for path in sorted((ROOT / layer).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in STEP_ALLOWLIST:
+                continue
+            for lineno, line in find_calls_in_loops(path.read_text(), STEP_CALL):
+                step_bad.append(f"{rel}:{lineno}: {line}")
     if bad:
         print("legacy driver calls reachable outside the facade "
               "(migrate to repro.api.solve or allowlist with a reason):")
@@ -175,11 +212,17 @@ def main() -> int:
               "(bypasses spec validation/capability checks — use solve() / "
               "open_session(), or allowlist with a reason):")
         print("\n".join(f"  {b}" for b in backend_bad))
-    if bad or sweep_bad or backend_bad:
+    if step_bad:
+        print("hand-rolled session polling loops (stepping sessions round-"
+              "by-round in a loop — serve concurrent sessions through "
+              "repro.serve_fednl.FedNLServer, or allowlist with a reason):")
+        print("\n".join(f"  {b}" for b in step_bad))
+    if bad or sweep_bad or backend_bad or step_bad:
         return 1
     print(f"api migration clean: {', '.join(SCANNED)} go through solve(); "
           f"{', '.join(SWEEP_SCANNED)} sweep via solve_many(); no direct "
-          "backend .run()/.open() outside repro.api")
+          "backend .run()/.open() outside repro.api; no hand-rolled "
+          "session polling loops")
     return 0
 
 

@@ -96,15 +96,16 @@ def _pp_final_grad_norm(z, x, lam: float) -> float:
 
 
 # ---------------------------------------------------------------------------
-# restore helpers
+# state/record helpers (public: the serving engine steps the same algorithm
+# states externally and must serialize/record them byte- and bit-identically)
 # ---------------------------------------------------------------------------
 
-def _state_arrays(state, prefix: str = "state.") -> dict[str, np.ndarray]:
+def state_arrays(state, prefix: str = "state.") -> dict[str, np.ndarray]:
     """NamedTuple algorithm state -> checkpoint arrays."""
     return {prefix + f: np.asarray(v) for f, v in zip(state._fields, state)}
 
 
-def _restored_state(state0, restore, place=jnp.asarray, prefix: str = "state."):
+def restored_state(state0, restore, place=jnp.asarray, prefix: str = "state."):
     """Rebuild an algorithm-state NamedTuple from checkpoint arrays, using a
     freshly initialized ``state0`` as the structural template (``place``
     controls device placement — the sharded backend re-shards per field)."""
@@ -119,6 +120,40 @@ def _restored_state(state0, restore, place=jnp.asarray, prefix: str = "state."):
             f: place(restore.arrays[prefix + f], ref)
             for f, ref in zip(state0._fields, state0)
         }
+    )
+
+
+def full_round_record(r: int, m) -> RoundRecord:
+    """One full-participation simulation-metrics row -> RoundRecord.
+
+    Shared by the local session handle and the serving engine's batched
+    lane: the host-side float()/int() materialization is part of the
+    bit-parity surface, so there is exactly one copy of it."""
+    return RoundRecord(
+        round=r,
+        grad_norm=float(m.grad_norm),
+        f=float(m.f),
+        l=float(m.l),
+        sent_elems=int(m.sent_elems),
+        sent_bits=int(m.sent_bits),
+        sent_bits_payload=int(m.sent_bits_payload),
+        sent_bits_wire=int(m.sent_bits_wire),
+        ls_steps=_opt_int(getattr(m, "ls_steps", None)),
+    )
+
+
+def pp_round_record(r: int, m) -> RoundRecord:
+    """One FedNL-PP simulation-metrics row -> RoundRecord."""
+    return RoundRecord(
+        round=r,
+        l=float(m.l),
+        sent_elems=int(m.sent_elems),
+        sent_bits=int(m.sent_bits),
+        sent_bits_payload=int(m.sent_bits_payload),
+        sent_bits_wire=int(m.sent_bits_wire),
+        x=np.asarray(m.x),
+        participants=tuple(int(i) for i in np.asarray(m.idx)),
+        dropped=(),
     )
 
 
@@ -145,7 +180,7 @@ class _LocalSessionHandle(SessionHandle):
         t0 = time.perf_counter()
         state = algo.init(z, self._cfg, x0=x0, seed=spec.seed)
         if restore is not None:
-            state = _restored_state(
+            state = restored_state(
                 state, restore, place=lambda arr, ref: jnp.asarray(arr)
             )
         self._state = state
@@ -168,37 +203,11 @@ class _LocalSessionHandle(SessionHandle):
         r0 = self.round
         self.round += n
         if self._algo.kind == "full":
-            return [
-                RoundRecord(
-                    round=r0 + i,
-                    grad_norm=float(m.grad_norm),
-                    f=float(m.f),
-                    l=float(m.l),
-                    sent_elems=int(m.sent_elems),
-                    sent_bits=int(m.sent_bits),
-                    sent_bits_payload=int(m.sent_bits_payload),
-                    sent_bits_wire=int(m.sent_bits_wire),
-                    ls_steps=_opt_int(getattr(m, "ls_steps", None)),
-                )
-                for i, m in enumerate(raw)
-            ]
-        return [
-            RoundRecord(
-                round=r0 + i,
-                l=float(m.l),
-                sent_elems=int(m.sent_elems),
-                sent_bits=int(m.sent_bits),
-                sent_bits_payload=int(m.sent_bits_payload),
-                sent_bits_wire=int(m.sent_bits_wire),
-                x=np.asarray(m.x),
-                participants=tuple(int(i) for i in np.asarray(m.idx)),
-                dropped=(),
-            )
-            for i, m in enumerate(raw)
-        ]
+            return [full_round_record(r0 + i, m) for i, m in enumerate(raw)]
+        return [pp_round_record(r0 + i, m) for i, m in enumerate(raw)]
 
     def snapshot(self) -> tuple[dict, dict[str, np.ndarray]]:
-        return {"kind": self._algo.kind}, _state_arrays(self._state)
+        return {"kind": self._algo.kind}, state_arrays(self._state)
 
     def finalize(self) -> dict:
         if self._algo.kind == "full":
@@ -258,7 +267,7 @@ class _ShardedSessionHandle(SessionHandle):
         zs = shard_problem(z, mesh)
         state = sharded_fednl_init(zs, cfg, mesh, seed=spec.seed)
         if restore is not None:
-            state = _restored_state(
+            state = restored_state(
                 state,
                 restore,
                 place=lambda arr, ref: jax.device_put(arr, ref.sharding),
@@ -296,7 +305,7 @@ class _ShardedSessionHandle(SessionHandle):
         ]
 
     def snapshot(self) -> tuple[dict, dict[str, np.ndarray]]:
-        return {"kind": "full"}, _state_arrays(self._state)
+        return {"kind": "full"}, state_arrays(self._state)
 
     def finalize(self) -> dict:
         return {

@@ -129,7 +129,7 @@ def _group_key(spec, alpha: float, vectorize: str, dims: tuple) -> tuple:
     )
 
 
-def _resolved_alpha(spec, d: int) -> float:
+def resolved_alpha(spec, d: int) -> float:
     """The Hessian learning rate the round will actually use (compressor
     default unless the spec overrides it) — part of the group key so it can
     stay a compile-time constant inside the batched kernel."""
@@ -170,7 +170,7 @@ def plan_sweep(specs: Sequence, batch_mode: str) -> tuple[list[_Plan], list[str]
                 dims_cache[spec.data] = spec.data.dims()
             dims = dims_cache[spec.data]
             batch_groups.setdefault(
-                _group_key(spec, _resolved_alpha(spec, dims[0]), vectorize, dims),
+                _group_key(spec, resolved_alpha(spec, dims[0]), vectorize, dims),
                 [],
             ).append(i)
         elif spec.backend in _POOL_WIDTH:
@@ -251,7 +251,7 @@ def _run_batched_group(
         comp_idx.append(branch_keys.index(bk))
     comps = [get_compressor(name, t, k) for name, k in branch_keys]
     cfg0 = group[0].fednl_config()
-    alpha = _resolved_alpha(group[0], d)
+    alpha = resolved_alpha(group[0], d)
     body = algo.make_batch_round(cfg0, comps, alpha)
 
     t0 = time.perf_counter()

@@ -80,8 +80,26 @@ class StopPolicy:
         """True when stopping needs a per-round look at the records."""
         return self.tol is not None or self.predicate is not None
 
+    def hit(self, rec: RoundRecord) -> bool:
+        """True when ``rec`` satisfies a streaming stop criterion (tol or
+        predicate; the round-budget cap is checked against the round count,
+        not a record).  The single stop test shared by :meth:`Session.run`
+        and the serving engine (``repro.serve_fednl``), so a session served
+        behind the engine stops on exactly the record a solo ``run()``
+        would."""
+        if (
+            self.tol is not None
+            and rec.grad_norm is not None
+            and rec.grad_norm < self.tol
+        ):
+            return True
+        return self.predicate is not None and bool(self.predicate(rec))
 
-def _resolve_policy(until, spec: ExperimentSpec) -> StopPolicy:
+
+def resolve_policy(until, spec: ExperimentSpec) -> StopPolicy:
+    """Normalize a ``run(until=...)`` argument into a :class:`StopPolicy`
+    under ``spec``'s defaults (public so external drivers — the serving
+    engine — resolve stop conditions exactly like :meth:`Session.run`)."""
     if until is None:
         return StopPolicy(
             max_rounds=spec.rounds,
@@ -341,7 +359,7 @@ class Session:
         :class:`StopPolicy`.  Callable repeatedly: each call continues from
         the current round and returns the cumulative report.
         """
-        policy = _resolve_policy(until, self.spec)
+        policy = resolve_policy(until, self.spec)
         if policy.tol is not None and self._algo.kind == "pp":
             raise ValueError(
                 "tol-based stopping is undefined for partial participation "
@@ -357,14 +375,7 @@ class Session:
             recs = self.step(1)
             if not recs:
                 break
-            rec = recs[0]
-            if (
-                policy.tol is not None
-                and rec.grad_norm is not None
-                and rec.grad_norm < policy.tol
-            ):
-                break
-            if policy.predicate is not None and policy.predicate(rec):
+            if policy.hit(recs[0]):
                 break
         return self.report()
 

@@ -129,3 +129,103 @@ def make_fednl_ls_batch_round(
         return kern(z, state)
 
     return body
+
+
+class BatchRoundTable:
+    """Compiled one-round *tick* programs over a growable compressor table.
+
+    The sweep engine compiles one scan-over-rounds program per group and
+    throws it away; a serving engine (``repro.serve_fednl``) instead re-forms
+    its batching groups **every tick** as sessions are admitted, finish, or
+    spill — so the compiled artifact has to outlive any one group formation.
+    A ``BatchRoundTable`` owns, for one serve group key (one problem ``z``,
+    one group-shared config/alpha):
+
+      * the group's compressor branch table, which *grows* as tenants with
+        new (compressor, k) pairs are admitted — growth is append-only, so
+        an existing tenant's ``comp_idx`` never changes meaning;
+      * a cache of jitted tick programs keyed by (table length, slot count):
+        ``tick(comp_idx, state_b)`` advances every slot ONE round via
+        ``lax.map`` of the switched round body with ``z`` closed over — the
+        same bit-exact layout as the sweep engine's scan iteration
+        (DESIGN.md §9), minus the scan: the host tick loop plays that role.
+
+    Re-forming a group with the same slot count therefore reuses the
+    compiled program; a new slot count (or a grown table) costs one compile,
+    counted in ``compiles`` so the engine can report it.  Padding slots with
+    duplicated live states is safe: ``lax.map`` applies the same per-element
+    program to every slot, so one slot's values never shape another's bits.
+    """
+
+    def __init__(
+        self,
+        z,
+        cfg: FedNLConfig,
+        alpha: float,
+        make_batch_round: Callable | None = None,
+    ):
+        self.z = z
+        self.cfg = cfg
+        self.alpha = alpha
+        self._make = (
+            make_fednl_batch_round if make_batch_round is None else make_batch_round
+        )
+        self.branch_keys: list[tuple[str, int]] = []
+        self._comps: list[Compressor] = []
+        self._programs: dict[tuple[int, int], Callable] = {}
+        self.compiles = 0
+
+    def branch_index(self, name: str, k: int) -> int:
+        """Index of compressor ``(name, k)`` in the table, appending (and
+        building the Compressor) on first sight."""
+        from repro.compressors import get_compressor
+        from repro.linalg import triu_size
+
+        bk = (name, int(k))
+        if bk not in self.branch_keys:
+            self.branch_keys.append(bk)
+            self._comps.append(
+                get_compressor(name, triu_size(self.z.shape[-1]), int(k))
+            )
+        return self.branch_keys.index(bk)
+
+    def bucket_for(self, n: int, pad_pow2: bool = True) -> int:
+        """Slot-count bucket to pad ``n`` live slots to: the smallest
+        already-compiled bucket that fits (so a draining group keeps
+        reusing its big program instead of compiling a ladder of shrinking
+        ones — pad slots cost a few wasted map iterations, a recompile
+        costs seconds), else the next power of two."""
+        if not pad_pow2:
+            return n
+        fitting = [
+            m
+            for (n_comps, m) in self._programs
+            if n_comps == len(self._comps) and m >= n
+        ]
+        if fitting:
+            return min(fitting)
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def tick(self, comp_idx, state_b):
+        """Advance every slot one round: ``(state_b', metrics_b)``.
+
+        ``comp_idx``: int array (n_slots,) of branch indices;
+        ``state_b``: algorithm state stacked along a leading slot axis.
+        """
+        n_slots = int(comp_idx.shape[0])
+        key = (len(self._comps), n_slots)
+        prog = self._programs.get(key)
+        if prog is None:
+            body = self._make(self.cfg, list(self._comps), self.alpha)
+            z = self.z
+
+            def program(ci, st):
+                return jax.lax.map(lambda a: body(z, *a), (ci, st))
+
+            prog = jax.jit(program)
+            self._programs[key] = prog
+            self.compiles += 1
+        return prog(jnp.asarray(comp_idx), state_b)

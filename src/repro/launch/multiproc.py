@@ -89,6 +89,12 @@ def _client_entry(
 # (solve_many dispatches star-tcp specs from a worker pool)
 _SPAWN_ENV_LOCK = threading.Lock()
 
+# every live (not yet closed) cluster, so a serving engine — or a test —
+# can prove no process fleet leaked after shutdown/eviction; guarded by its
+# own lock because clusters are created/closed from pool threads
+_LIVE_CLUSTERS: "set[ClientCluster]" = set()
+_LIVE_LOCK = threading.Lock()
+
 
 class ClientCluster:
     """A live fleet of TCP client processes around one bound master socket.
@@ -99,6 +105,16 @@ class ClientCluster:
     cluster — client state is rebuilt by protocol replay, never persisted).
     ``run_multiproc[_pp]`` still compose it into the classic bind -> spawn ->
     run -> join shape.
+
+    Lifecycle under shared use (the multi-tenant serving engine holds many
+    clusters at once): each cluster is reference-counted — ``acquire()``
+    adds a holder, ``release()`` drops one and tears the fleet down when the
+    last holder lets go — and ``close()`` is an idempotent force-teardown
+    that any holder may call (an engine evicting a star-tcp tenant mid-run,
+    or its exception path, must never leak subprocesses no matter how many
+    holders remain).  ``live_count()`` / ``close_all()`` expose the global
+    registry of not-yet-closed clusters for shutdown sweeps and leak
+    assertions.
     """
 
     def __init__(
@@ -128,7 +144,12 @@ class ClientCluster:
         ).dims()
         self.d = d
         self.n_clients = n_clients
+        self._refs = 1  # the creator holds the first reference
+        self._closed = False
+        self._lifecycle_lock = threading.Lock()
         self._master = TCPMaster(n_clients, host=host)
+        with _LIVE_LOCK:
+            _LIVE_CLUSTERS.add(self)
         # spawn (not fork): children must re-initialize the JAX runtime cleanly
         ctx = mp.get_context("spawn")
         # make `repro` importable in the children regardless of parent's cwd
@@ -180,8 +201,36 @@ class ClientCluster:
             self.close(join_timeout=5)
             raise
 
+    def acquire(self) -> "ClientCluster":
+        """Register another holder of this (open) cluster."""
+        with self._lifecycle_lock:
+            if self._closed:
+                raise RuntimeError("cannot acquire a closed ClientCluster")
+            self._refs += 1
+        return self
+
+    def release(self, join_timeout: float = 60) -> None:
+        """Drop one holder; the last release tears the fleet down."""
+        with self._lifecycle_lock:
+            self._refs = max(0, self._refs - 1)
+            last = self._refs == 0
+        if last:
+            self.close(join_timeout=join_timeout)
+
     def close(self, join_timeout: float = 60) -> None:
-        """Close connections, join (then terminate) workers, unbind."""
+        """Close connections, join (then terminate) workers, unbind.
+
+        Idempotent force-teardown: safe to call from any holder (or twice —
+        e.g. an engine's exception path after a normal release), regardless
+        of the reference count.
+        """
+        with self._lifecycle_lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._refs = 0
+        with _LIVE_LOCK:
+            _LIVE_CLUSTERS.discard(self)
         for conn in self.conns.values():
             conn.close()
         for p in self.procs:
@@ -190,6 +239,26 @@ class ClientCluster:
             if p.is_alive():
                 p.terminate()
         self._master.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @classmethod
+    def live_count(cls) -> int:
+        """Number of clusters created but not yet closed (leak probe)."""
+        with _LIVE_LOCK:
+            return len(_LIVE_CLUSTERS)
+
+    @classmethod
+    def close_all(cls, join_timeout: float = 10) -> int:
+        """Force-close every live cluster (engine shutdown sweep); returns
+        how many were closed."""
+        with _LIVE_LOCK:
+            stragglers = list(_LIVE_CLUSTERS)
+        for c in stragglers:
+            c.close(join_timeout=join_timeout)
+        return len(stragglers)
 
 
 def _run_with_clients(

@@ -1,0 +1,31 @@
+"""repro.serve_fednl — multi-tenant FedNL serving engine.
+
+Not to be confused with :mod:`repro.serving`, the Part-II LM *token*
+serving engine (continuous batching of text generation requests).  This
+package is the FedNL analogue one level up: continuous batching of whole
+**optimization sessions** — many concurrent experiments multiplexed through
+one :class:`FedNLServer`, each advanced one round per tick through shared
+jitted switched round kernels, spilled to byte-stable FNLS1 checkpoints
+under memory pressure, and guaranteed bit-identical to a solo
+``open_session(spec).run()`` (DESIGN.md §11).
+
+    from repro.serve_fednl import FedNLServer, ServeConfig
+
+    with FedNLServer(ServeConfig(max_resident=16)) as server:
+        handles = [server.submit(spec) for spec in specs]
+        server.serve_until_idle()
+        reports = [h.result() for h in handles]
+"""
+
+from repro.serve_fednl.engine import FedNLServer, ServeConfig, serve_all
+from repro.serve_fednl.scheduler import serve_group_key, serve_lane
+from repro.serve_fednl.tenant import TenantHandle
+
+__all__ = [
+    "FedNLServer",
+    "ServeConfig",
+    "TenantHandle",
+    "serve_all",
+    "serve_group_key",
+    "serve_lane",
+]

@@ -1,0 +1,138 @@
+"""Continuous-batching scheduler: group keys, lanes, and the batched tick.
+
+The scheduling model mirrors in-flight request batching in an LLM serving
+engine.  Every engine *tick*, the in-flight tenants are re-partitioned into
+batching groups; each group advances ONE round through a single jitted
+switched round kernel (:class:`repro.core.fednl_batch.BatchRoundTable`);
+then stop policies are checked per slot and the groups dissolve.  Tenants
+are admitted, finish, or spill **between** ticks, so group membership is
+recomputed every time — the compiled tick programs are what persists.
+
+What may share a group (the §9 bit-exactness invariants, restated for the
+serving layout):
+
+* same **serve group key** — every trace-shaping hyper-parameter except the
+  compressor, the seed, the round budget, and the stop tolerance:
+  ``(algorithm, data, objective, lam, option, mu, hess0, accounting,
+  ls_*, alpha)``.  The problem data is part of the key because the bit-exact
+  layout closes ``z`` over the jit (a sliced z operand shifts the matmul
+  kernels by an ulp — DESIGN.md §9).
+* **arbitrary, differing round indices.**  The round kernel reads the round
+  counter from each slot's state; nothing in the trace depends on a shared
+  round index, so a tenant at round 37 and one at round 0 co-batch.  This is
+  the continuous part of continuous batching — the sweep engine's
+  ``lax.scan`` over a common ``rounds`` is replaced by the host tick loop.
+* **different compressors / k / seeds.**  Compressor variation enters
+  through the exact ``lax.switch`` branch table (selection + integer bit
+  accounting only); seeds live in each slot's PRNG state.
+* ``tol`` differs freely: the engine host-syncs every tick anyway (unlike
+  the sweep scan), so per-slot tol stopping costs nothing extra — this is
+  why tol early-stop blocks the *sweep* batch lane but not the *serve* one.
+
+Padding: tick programs are compiled per (branch-table size, slot count);
+slot counts are padded up to powers of two by duplicating slot 0.  Safe
+because ``lax.map`` applies one per-element program to every slot — a pad
+slot's values can never shape a live slot's bits (§9 again) — and it bounds
+compile count at O(log max_group) per group key.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.batch import resolved_alpha
+from repro.core.fednl_batch import BatchRoundTable
+
+
+def serve_lane(spec, algo, backend) -> str:
+    """Which lane serves this spec: "batch" (the vectorized tick) or "solo"
+    (a per-tenant Session stepped one round per tick).
+
+    Mirrors :func:`repro.api.batch._batch_blockers` minus the two blockers
+    that do not apply to serving: ``tol > 0`` (the tick loop host-syncs every
+    round regardless) and ``rounds == 0`` (a zero-round tenant just finishes
+    at admission).
+    """
+    from repro.api.backends import LOCAL_BACKEND
+
+    if (
+        backend is LOCAL_BACKEND
+        and algo.make_batch_round is not None
+        and algo.kind == "full"
+        and not spec.use_kernel
+    ):
+        return "batch"
+    return "solo"
+
+
+def serve_group_key(spec, d: int) -> tuple:
+    """Trace-shaping co-scheduling key (see module docstring).  The sweep
+    engine's :func:`repro.api.batch._group_key` minus ``rounds`` — round
+    budgets are per-slot stop conditions here, not trace shape."""
+    return (
+        spec.algorithm,
+        spec.data,
+        spec.objective,
+        spec.lam,
+        spec.option,
+        spec.mu,
+        spec.hess0,
+        spec.accounting,
+        spec.ls_c,
+        spec.ls_gamma,
+        spec.ls_max_steps,
+        spec.ls_tol,
+        resolved_alpha(spec, d),
+    )
+
+
+class GroupRuntime:
+    """One serve group key's persistent compiled machinery: the problem
+    ``z`` (closed over), the growable compressor branch table, and the
+    per-(table, slot-count) jitted tick programs — all owned by a
+    :class:`~repro.core.fednl_batch.BatchRoundTable`."""
+
+    def __init__(self, z, cfg, alpha: float, make_batch_round):
+        self.table = BatchRoundTable(
+            z, cfg, alpha, make_batch_round=make_batch_round
+        )
+
+    @property
+    def compiles(self) -> int:
+        return self.table.compiles
+
+    def branch_index(self, name: str, k: int) -> int:
+        return self.table.branch_index(name, k)
+
+    def tick_group(self, tenants: list, pad_pow2: bool = True):
+        """Advance every tenant in ``tenants`` one round.
+
+        Stacks the per-tenant states along a slot axis (padding to the
+        group's slot bucket by duplicating slot 0), runs the group's tick
+        program, unstacks, and returns ``(metrics, n_pad)``: the per-slot
+        metrics views in tenant order plus the padded slot count actually
+        launched.  The caller materializes records and applies stop
+        policies.
+        """
+        states = [t.state for t in tenants]
+        comp_idx = [
+            self.branch_index(*t.comp_branch) for t in tenants
+        ]
+        n = len(tenants)
+        # branch indices resolved first: bucket choice depends on the
+        # (possibly grown) table length
+        n_pad = self.table.bucket_for(n, pad_pow2)
+        if n_pad > n:
+            states = states + [states[0]] * (n_pad - n)
+            comp_idx = comp_idx + [comp_idx[0]] * (n_pad - n)
+        state_b = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        state_b, metrics_b = self.table.tick(
+            jnp.asarray(comp_idx, jnp.int32), state_b
+        )
+        # unstack live slots only; pad slots are discarded
+        for i, t in enumerate(tenants):
+            t.state = jax.tree.map(lambda a, i=i: a[i], state_b)
+        return [
+            jax.tree.map(lambda a, i=i: a[i], metrics_b) for i in range(n)
+        ], n_pad

@@ -1,3 +1,12 @@
+"""LM *token* serving engine (Part-II zoo appendix — DESIGN.md §II).
+
+Serves language-model generation requests: fixed-batch decode slots, greedy
+sampling, per-slot stop conditions.  Not to be confused with
+``repro.serve_fednl`` (DESIGN.md §11), the multi-tenant engine that serves
+concurrent FedNL *optimization sessions* with continuous batching — that is
+the one the paper-reproduction side of the repo uses.
+"""
+
 from repro.serving.engine import ServeEngine, Request
 
 __all__ = ["ServeEngine", "Request"]

@@ -1,4 +1,6 @@
-"""Batched serving engine over the per-family serve_step.
+"""Batched LM *token* serving engine over the per-family serve_step.
+
+(FedNL sessions are served elsewhere: ``repro.serve_fednl`` — DESIGN.md §11.)
 
 A deliberately small production shape: fixed-batch slots, greedy sampling,
 per-slot stop conditions, prompt consumption through the same decode step
