@@ -30,6 +30,9 @@ def main() -> int:
                     help="where to write the session-overhead benchmark record")
     ap.add_argument("--json-serve", default="BENCH_serve.json", metavar="PATH",
                     help="where to write the serving-engine load-test record")
+    ap.add_argument("--json-kernels", default="BENCH_kernels.json",
+                    metavar="PATH",
+                    help="where to write the fused-round kernel benchmark record")
     args = ap.parse_args()
 
     bench: dict = {"schema": 1, "tables": {}}
@@ -82,6 +85,19 @@ def main() -> int:
             f"bit_parity={m['bit_parity']}",
         ))
 
+    # fused-round kernel path: hessian="fused" vs the pure-jnp reference,
+    # roofline-gated (see benchmarks.kernels_bench)
+    from benchmarks.kernels_bench import kernel_round_benchmark
+
+    kernels = kernel_round_benchmark()
+    rows.append((
+        "kernels/fused_round_speedup",
+        kernels["round_ms"]["fused"] * 1e3,
+        f"jnp={kernels['round_ms']['jnp']}ms;"
+        f"speedup={kernels['round_speedup']}x;"
+        f"verified={kernels['verified']}",
+    ))
+
     # serving engine: Poisson arrivals of mixed tenants vs sequential solos
     from benchmarks.serve_load import serve_load_benchmark
 
@@ -109,8 +125,12 @@ def main() -> int:
     with open(args.json_serve, "w") as f:
         json.dump(serve, f, indent=2)
         f.write("\n")
+    with open(args.json_kernels, "w") as f:
+        json.dump(kernels, f, indent=2)
+        f.write("\n")
     print(
-        f"# wrote {args.json}, {args.json_session} and {args.json_serve}",
+        f"# wrote {args.json}, {args.json_session}, {args.json_serve} "
+        f"and {args.json_kernels}",
         file=sys.stderr,
     )
     return 0

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Host-tuned launcher for the benchmark/measurement entry points.
+#
+#   ./run.sh                            # python -m benchmarks.run
+#   ./run.sh --quick                    # what CI records
+#   ./run.sh -m repro.launch.dryrun ... # any other module, verbatim
+#
+# The environment below is the measurement configuration the committed
+# BENCH_*.json records assume:
+#
+#   * tcmalloc, preloaded when present: glibc malloc's arena locking shows
+#     up in the multi-client round loop; the huge report threshold keeps
+#     tcmalloc's large-alloc warnings out of the timing stream;
+#   * JAX_ENABLE_X64: FedNL state is f64 — the bit-parity gates are pinned
+#     against f64 trajectories;
+#   * one host device: the single-process benchmarks must not be skewed by
+#     XLA carving the host into virtual devices.  (--xla_step_marker_location
+#     would mark round boundaries in profiles but is TPU-only: CPU XLA
+#     rejects the whole flag string, so it must not be set here.)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+TCMALLOC=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [[ -e "$TCMALLOC" ]]; then
+    export LD_PRELOAD="$TCMALLOC${LD_PRELOAD:+:$LD_PRELOAD}"
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+
+export TF_CPP_MIN_LOG_LEVEL=4
+export JAX_ENABLE_X64=1
+export XLA_FLAGS="--xla_force_host_platform_device_count=1${XLA_FLAGS:+ $XLA_FLAGS}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == -m ]]; then
+    exec python "$@"
+fi
+exec python -m benchmarks.run "$@"

@@ -30,6 +30,15 @@ multiplexes concurrent sessions through shared batched round kernels with
 spill/resume under memory pressure, bit-identically.  New polling loops in
 the measurement/CI layers fail CI (single-session step-contract checks are
 allowlisted with a reason).
+
+Rule 5 flags direct ``hessian_syrk_pallas`` calls or imports outside
+``src/repro/kernels/``.  The raw Pallas kernel has sharp edges the
+``kernels.ops`` wrappers own: interpret-mode resolution (CPU CI would
+crash compiling for a missing TPU), block-size padding, and the packed /
+mirrored emission that keeps the fused round bit-identical to the jnp
+reference.  Callers everywhere else go through ``ops.hessian_syrk`` /
+``ops.hessian_syrk_packed`` / ``ops.hessian_fused`` so those policies
+cannot be bypassed.
 """
 
 from __future__ import annotations
@@ -71,6 +80,11 @@ ALLOWLIST = {
     # the TCP driver the star-tcp backend wraps: run_multiproc[_pp] live
     # here, and its master_fn closures call the star loops directly
     "src/repro/launch/multiproc.py",
+    # the kernel benchmark/gate measure the raw round kernel itself (fused
+    # vs jnp parity + timing below the facade) — the round kernel IS the
+    # measurement subject, not an entry point hand-building a driver
+    "benchmarks/kernels_bench.py",
+    "scripts/smoke_kernels.py",
 }
 
 PATTERN = re.compile("|".join(LEGACY_CALLS))
@@ -136,6 +150,25 @@ STEP_ALLOWLIST = {
 }
 
 
+# --- rule 5: raw Pallas SYRK kernel used outside the kernels package --------
+
+# a call OR an import: `from repro.kernels.hessian_syrk import ...` smuggles
+# the raw kernel past the ops-layer policies just as surely as calling it
+KERNEL_RAW = re.compile(r"\bhessian_syrk_pallas\b|\brepro\.kernels\.hessian_syrk\b")
+
+# everything but the kernels package itself (ops.py is the sanctioned wrapper)
+KERNEL_SCANNED = ["examples", "scripts", "benchmarks", "src/repro", "tests"]
+
+KERNEL_ALLOWLIST = {
+    # this checker's own pattern table
+    "scripts/check_api_migration.py",
+}
+
+
+def is_kernels_internal(rel: str) -> bool:
+    return rel.startswith("src/repro/kernels/")
+
+
 def is_api_internal(rel: str) -> bool:
     return rel.startswith("src/repro/api/")
 
@@ -199,6 +232,15 @@ def main() -> int:
                 continue
             for lineno, line in find_calls_in_loops(path.read_text(), STEP_CALL):
                 step_bad.append(f"{rel}:{lineno}: {line}")
+    kernel_bad: list[str] = []
+    for layer in KERNEL_SCANNED:
+        for path in sorted((ROOT / layer).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in KERNEL_ALLOWLIST or is_kernels_internal(rel):
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if KERNEL_RAW.search(line) and not line.lstrip().startswith("#"):
+                    kernel_bad.append(f"{rel}:{lineno}: {line.strip()}")
     if bad:
         print("legacy driver calls reachable outside the facade "
               "(migrate to repro.api.solve or allowlist with a reason):")
@@ -217,12 +259,19 @@ def main() -> int:
               "by-round in a loop — serve concurrent sessions through "
               "repro.serve_fednl.FedNLServer, or allowlist with a reason):")
         print("\n".join(f"  {b}" for b in step_bad))
-    if bad or sweep_bad or backend_bad or step_bad:
+    if kernel_bad:
+        print("raw hessian_syrk_pallas usage outside src/repro/kernels/ "
+              "(bypasses interpret resolution, padding and packed emission "
+              "— use kernels.ops.hessian_syrk / hessian_syrk_packed / "
+              "hessian_fused, or allowlist with a reason):")
+        print("\n".join(f"  {b}" for b in kernel_bad))
+    if bad or sweep_bad or backend_bad or step_bad or kernel_bad:
         return 1
     print(f"api migration clean: {', '.join(SCANNED)} go through solve(); "
           f"{', '.join(SWEEP_SCANNED)} sweep via solve_many(); no direct "
           "backend .run()/.open() outside repro.api; no hand-rolled "
-          "session polling loops")
+          "session polling loops; raw hessian_syrk_pallas confined to "
+          "src/repro/kernels/")
     return 0
 
 

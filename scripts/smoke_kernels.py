@@ -1,0 +1,183 @@
+"""CI gate for the fused-round kernel layer (socket-free, < ~1 min).
+
+    PYTHONPATH=src python scripts/smoke_kernels.py
+
+Pins the three contracts the fused hot path rests on (DESIGN.md §12),
+on shapes small enough for tier-1:
+
+  1. selection contract — f32 rank keys, lowest-index tie-break: on a
+     vector engineered so distinct f64 values collide in f32, the sorted
+     top-k indices, the threshold mask, the Pallas kernel (interpret) and
+     an independent numpy lexsort all select the same set;
+  2. masked == sorted — ``topk_dense_masked`` / ``randseqk_dense_masked``
+     replay the sort+scatter dense forms bit-for-bit (the fused round
+     swaps formulations under lax.map; they must be interchangeable);
+  3. packed SYRK — ``hessian_syrk_packed`` == ``pack_triu(hessian_fused)``
+     bitwise, across the d <= 128 plain-gemm and d > 128 strip regimes;
+  4. round parity — the fused round replays the jnp reference round
+     bit-for-bit on tiny (state, grad norm, integer bit accounting).
+
+Exits nonzero on any mismatch.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+
+def _check_selection_contract() -> list[str]:
+    import jax.numpy as jnp
+
+    from repro.compressors import select as csel
+    from repro.kernels.compressor_select import select_topk_pallas
+
+    t, k = 512, 100
+    # distinct f64 magnitudes that collide once rounded to f32 rank keys
+    base = np.float64(np.float32(np.linspace(0.5, 2.0, t // 4)))
+    eps = np.array([0.0, 1e-12, 2.5e-12, -1e-12])
+    u = (base[:, None] + eps[None, :]).ravel()
+    u *= np.where(np.arange(t) % 3 == 0, -1.0, 1.0)
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.permutation(u))
+
+    keys = np.asarray(csel.rank_keys(u))
+    if len(np.unique(keys)) >= t:
+        return ["near-tie fixture has no f32 collisions (fixture bug)"]
+
+    want = np.sort(np.lexsort((np.arange(t), -keys))[:k])
+    got_sort = np.sort(np.asarray(csel.topk_indices(u, k)))
+    got_mask = np.flatnonzero(np.asarray(csel.threshold_keep_mask(keys, k)))
+    dense, _sent = select_topk_pallas(u, k, interpret=True)
+    got_pallas = np.flatnonzero(np.asarray(dense))
+
+    fails = []
+    if not np.array_equal(got_sort, want):
+        fails.append("topk_indices disagrees with numpy lexsort contract")
+    if not np.array_equal(got_mask, want):
+        fails.append("threshold_keep_mask disagrees with sorted top-k")
+    if not np.array_equal(got_pallas, want):
+        fails.append("pallas select_topk (interpret) disagrees with contract")
+    return fails
+
+
+def _check_masked_formulations() -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compressors import select as csel
+
+    fails = []
+    for t, k, s in [(300, 24, 7), (257, 1, 200)]:
+        u = jax.random.normal(jax.random.PRNGKey(t), (t,), dtype=jnp.float64)
+        if not np.array_equal(
+            np.asarray(jax.jit(csel.topk_dense_masked, static_argnums=1)(u, k)),
+            np.asarray(jax.jit(csel.topk_dense, static_argnums=1)(u, k)),
+        ):
+            fails.append(f"topk masked != sorted (t={t}, k={k})")
+        if not np.array_equal(
+            np.asarray(csel.randseqk_dense_masked(u, k, jnp.asarray(s))),
+            np.asarray(csel.randseqk_dense(u, k, jnp.asarray(s))),
+        ):
+            fails.append(f"randseqk masked != gathered (t={t}, k={k})")
+    return fails
+
+
+def _check_packed_syrk() -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.linalg import pack_triu
+
+    fails = []
+    for n, d in [(40, 24), (60, 150)]:  # plain-gemm and strip regimes
+        kz, kh = jax.random.split(jax.random.PRNGKey(d))
+        z = jax.random.normal(kz, (n, d), dtype=jnp.float64)
+        h = jax.random.uniform(kh, (n,), dtype=jnp.float64)
+        got = np.asarray(jax.jit(ops.hessian_syrk_packed)(z, h))
+        want = np.asarray(jax.jit(lambda z, h: pack_triu(ops.hessian_fused(z, h)))(z, h))
+        if not np.array_equal(got, want):
+            fails.append(f"hessian_syrk_packed != pack_triu(hessian_fused) (d={d})")
+    return fails
+
+
+def _check_round_parity() -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.fednl import FedNLConfig, fednl_init, make_fednl_round
+    from repro.data import (
+        DATASET_SHAPES,
+        add_intercept,
+        make_synthetic_logreg,
+        partition_clients,
+    )
+
+    _, nc, ni = DATASET_SHAPES["tiny"]
+    x, y = make_synthetic_logreg("tiny", seed=1)
+    z = jnp.asarray(partition_clients(add_intercept(x), y, nc, ni, seed=1))
+
+    fails = []
+    for comp in ("topk", "randseqk", "toplek"):
+        finals = {}
+        for hessian in ("jnp", "fused"):
+            cfg = FedNLConfig(compressor=comp, hessian=hessian)
+            state = fednl_init(z, cfg, seed=1)
+            # the raw round kernel IS the subject here (allowlisted in
+            # check_api_migration.py): parity below the facade
+            round_fn = jax.jit(make_fednl_round(z, cfg))
+            bits = []
+            for _ in range(2):
+                state, m = round_fn(state)
+                bits.append((int(m.sent_elems), int(m.sent_bits)))
+            finals[hessian] = (
+                np.asarray(state.x),
+                np.asarray(state.h_global),
+                float(m.grad_norm).hex(),
+                bits,
+            )
+        xj, hj, gj, bj = finals["jnp"]
+        xf, hf, gf, bf = finals["fused"]
+        if not (
+            np.array_equal(xj, xf)
+            and np.array_equal(hj, hf)
+            and gj == gf
+            and bj == bf
+        ):
+            fails.append(f"fused round != jnp round on tiny ({comp})")
+    return fails
+
+
+def main() -> int:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    failures = []
+    for name, check in [
+        ("selection contract (f32 keys, near-tie)", _check_selection_contract),
+        ("masked == sorted formulations", _check_masked_formulations),
+        ("packed SYRK bit-identity", _check_packed_syrk),
+        ("fused round bit parity (tiny)", _check_round_parity),
+    ]:
+        fails = check()
+        if fails:
+            failures.extend(fails)
+            print(f"FAIL {name}")
+        else:
+            print(f"PASS {name}")
+
+    if failures:
+        print("smoke_kernels FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("smoke_kernels OK: selection contract, masked formulations, "
+          "packed SYRK and fused-round parity all bit-exact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

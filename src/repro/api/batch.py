@@ -94,9 +94,9 @@ def _batch_blockers(spec, algo: Algorithm, backend) -> list[str]:
         reasons.append("tol early-stop needs a per-round host sync")
     if spec.rounds == 0:
         reasons.append("zero-round run")
-    if spec.use_kernel:
-        reasons.append("Pallas kernel routing is untested under the batched "
-                       "scan")
+    if spec.hessian_impl == "pallas":
+        reasons.append("Pallas-wrapper Hessian routing is untested under the "
+                       "batched scan")
     return reasons
 
 
@@ -120,6 +120,7 @@ def _group_key(spec, alpha: float, vectorize: str, dims: tuple) -> tuple:
         spec.option,
         spec.mu,
         spec.hess0,
+        spec.hessian_impl,  # "fused" vs "jnp" shape different traces for d > 128
         spec.accounting,
         spec.ls_c,
         spec.ls_gamma,

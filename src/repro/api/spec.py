@@ -149,7 +149,13 @@ class ExperimentSpec:
     option: str = "B"  # master step rule: "A" (projection) | "B" (l-shift)
     mu: float = 1e-3  # strong-convexity lower bound for Option A
     hess0: str = "exact"  # "exact" | "zero" H_i^0 initialization
-    use_kernel: bool = False  # route Hessian oracle through the Pallas wrapper
+    # Hessian SYRK implementation (DESIGN.md §12): "fused" (default) routes
+    # through kernels.ops.hessian_fused — bit-identical to "jnp" for
+    # d <= 128, documented ulp drift above; "jnp" is the single-dot_general
+    # parity reference; "pallas" forces the Pallas wrapper (interpret mode
+    # off-TPU — the kernel-validation path, not a CPU hot path)
+    hessian: str = "fused"
+    use_kernel: bool = False  # deprecated spelling of hessian="pallas"
     # line-search parameters (fednl-ls)
     ls_c: float = 0.49
     ls_gamma: float = 0.5
@@ -191,6 +197,11 @@ class ExperimentSpec:
             raise ValueError(f"unknown option {self.option!r}; use 'A' | 'B'")
         if self.hess0 not in ("exact", "zero"):
             raise ValueError(f"unknown hess0 {self.hess0!r}")
+        if self.hessian not in ("fused", "jnp", "pallas"):
+            raise ValueError(
+                f"unknown hessian {self.hessian!r}; use 'fused' | 'jnp' | "
+                "'pallas'"
+            )
         if self.on_dropout not in ("partial", "resample"):
             raise ValueError(f"unknown on_dropout {self.on_dropout!r}")
         if self.rounds < 0:
@@ -223,6 +234,7 @@ class ExperimentSpec:
             mu=self.mu,
             lam=self.lam,
             hess0=self.hess0,
+            hessian=self.hessian,
             use_kernel=self.use_kernel,
             ls_c=self.ls_c,
             ls_gamma=self.ls_gamma,
@@ -230,6 +242,11 @@ class ExperimentSpec:
             ls_tol=self.ls_tol,
             accounting=self.accounting,
         )
+
+    @property
+    def hessian_impl(self) -> str:
+        """Effective Hessian SYRK implementation (``use_kernel`` back-compat)."""
+        return "pallas" if self.use_kernel else self.hessian
 
     def tau_for(self, n_clients: int) -> int:
         """Resolve the participation size (default: half the cohort)."""

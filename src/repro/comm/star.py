@@ -79,7 +79,7 @@ class StarClient:
         self.h = jnp.zeros(self.t, dtype=self.z_i.dtype)
         # jit the oracle once; compression/serialization stay eager (host code)
         self._oracles = jax.jit(
-            lambda x: _client_oracles(self.z_i, x, cfg.lam, cfg.use_kernel)
+            lambda x: _client_oracles(self.z_i, x, cfg.lam, cfg.hessian_impl)
         )
 
     def _round_key(self) -> jax.Array:

@@ -133,7 +133,7 @@ class StarPPClient:
         d, alpha, eye = self.d, self.alpha, self.eye
 
         def oracle_one(zi, x):
-            return _client_oracles(zi, x, cfg.lam, cfg.use_kernel)
+            return _client_oracles(zi, x, cfg.lam, cfg.hessian_impl)
 
         self._oracles_b = jax.jit(
             lambda z_b, x: jax.vmap(lambda zi: oracle_one(zi, x))(z_b)

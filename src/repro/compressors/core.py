@@ -47,10 +47,13 @@ live in `repro.comm.wire` (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.compressors import select
 
 FP_BITS = 64  # paper uses FP64 end-to-end
 IDX_BITS = 32  # paper: "fixed-width 32-bit integer format surpassed varying sizes"
@@ -62,21 +65,33 @@ NATURAL_BITS = 12  # sign + 11-bit FP64 exponent per entry
 # ---------------------------------------------------------------------------
 
 def _rank_keys(u: jax.Array) -> jax.Array:
-    """f32 magnitude keys for selection.
+    """f32 magnitude keys for selection — the PINNED contract shared with the
+    fused kernel path, re-exported from :mod:`repro.compressors.select`.
 
     lax.top_k over f64 keys is ~9x slower than f32 on the CPU backend (and
     f32 sort keys are the TPU-native path); ranking in f32 while keeping the
     f64 PAYLOAD preserves the contractive property up to f32 rounding of
-    near-ties — measured in benchmarks Table 4 (see EXPERIMENTS.md §Perf).
+    near-ties.  Both the jnp and Pallas paths rank in f32 with a stable
+    lowest-index tie-break — ranking widths MUST NOT diverge between paths,
+    or near-tie entries silently select different index sets (DESIGN.md §12;
+    regression-tested on adversarial near-ties in tests/test_kernels.py).
     """
-    return jnp.abs(u).astype(jnp.float32)
+    return select.rank_keys(u)
 
 
-def topk(u: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
-    """Deterministic TopK by magnitude.  Contractive with delta = k/T."""
-    _, idx = jax.lax.top_k(_rank_keys(u), k)
-    u_hat = jnp.zeros_like(u).at[idx].set(u[idx])
-    return u_hat, jnp.asarray(k)
+def topk(u: jax.Array, k: int, *, fused: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Deterministic TopK by magnitude.  Contractive with delta = k/T.
+
+    Routed through the fused selection entry point (`repro.kernels.ops`):
+    the Pallas kernel on TPU, the canonical jnp primitives (bit-identical by
+    the selection contract) everywhere else.  ``fused=True`` picks the
+    sort-free threshold-mask formulation the fused round maps per client
+    (see `repro.compressors.select.topk_dense_masked`); outputs are
+    bit-identical either way.
+    """
+    from repro.kernels import ops as kops
+
+    return kops.select_topk(u, k, fused=fused)
 
 
 def randk(key: jax.Array, u: jax.Array, k: int, *, scaled: bool = True):
@@ -96,22 +111,23 @@ def randk(key: jax.Array, u: jax.Array, k: int, *, scaled: bool = True):
     return u_hat, jnp.asarray(k)
 
 
-def randseqk(key: jax.Array, u: jax.Array, k: int, *, scaled: bool = True):
+def randseqk(key: jax.Array, u: jax.Array, k: int, *, scaled: bool = True,
+             fused: bool = False):
     """Cache-aware RandK (paper Appendix C).
 
     One PRG draw s ~ U[T]; keep slots {s, s+1, ..., s+k-1 mod T}.  Marginal
     inclusion probability is k/T for every slot, hence the same expectation and
     variance bound as RandK (paper Observations 1 & 2).  The contiguous window is
-    realized as roll + prefix slice: a sequential memory access on TPU.
+    realized as roll + prefix slice (or, ``fused=True``, the bit-identical
+    gather-free window mask): a sequential memory access on TPU.
     """
     t = u.shape[0]
+    if scaled:
+        from repro.kernels import ops as kops
+
+        return kops.select_randseqk(key, u, k, fused=fused)
     s = jax.random.randint(key, (), 0, t)
-    rolled = jnp.roll(u, -s)
-    window = jnp.zeros_like(u).at[:k].set(rolled[:k])
-    u_hat = jnp.roll(window, s)
-    if not scaled:
-        u_hat = u_hat * (t / k)
-    return u_hat, jnp.asarray(k)
+    return select.randseqk_dense(u, k, s) * (t / k), jnp.asarray(k)
 
 
 def toplek(key: jax.Array, u: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
@@ -122,32 +138,15 @@ def toplek(key: jax.Array, u: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     alpha_{m*-1} < delta <= alpha_{m*}; keep m*-1 entries with probability
     p = (alpha_hi - delta) / (alpha_hi - alpha_lo) and m* entries otherwise, so
     that E||C(u)-u||^2 = (1-delta)||u||^2 exactly.
+
+    The body lives in :func:`repro.compressors.select.toplek_from_uniform`
+    with the Bernoulli draw hoisted to ``uniform(key)`` (bit-identical to
+    ``jax.random.bernoulli`` — verified in tests), shared verbatim by the
+    Pallas kernel; routing goes through `repro.kernels.ops.select_toplek`.
     """
-    t = u.shape[0]
-    delta = k / t
-    # only the top-k prefix can ever be kept (alpha_k >= k/T always), so a
-    # partial top-k selection suffices — no full T-sort (paper §5.11 spirit).
-    _, idx = jax.lax.top_k(_rank_keys(u), k)
-    vals = u[idx]  # approx-descending by magnitude
-    s2 = vals.astype(jnp.float64) ** 2 if u.dtype == jnp.float64 else vals**2
-    csum = jnp.cumsum(s2)
-    total = jnp.sum(u * u)
-    safe_total = jnp.where(total > 0, total, 1.0)
-    alphas = (csum / safe_total).astype(u.dtype)  # alphas[m-1] = alpha_m
-    # smallest m (1-indexed) with alpha_m >= delta
-    m_star = jnp.searchsorted(alphas, delta, side="left") + 1
-    m_star = jnp.minimum(m_star, k)
-    alpha_hi = alphas[m_star - 1]
-    alpha_lo = jnp.where(m_star > 1, alphas[jnp.maximum(m_star - 2, 0)], 0.0)
-    gap = alpha_hi - alpha_lo
-    p = jnp.where(gap > 0, (alpha_hi - delta) / jnp.where(gap > 0, gap, 1.0), 0.0)
-    p = jnp.clip(p, 0.0, 1.0)
-    take_lo = jax.random.bernoulli(key, p)
-    kept = jnp.where(take_lo, m_star - 1, m_star)
-    kept = jnp.where(total > 0, kept, 0)
-    keep_mask = jnp.arange(k) < kept
-    u_hat = jnp.zeros_like(u).at[idx].set(jnp.where(keep_mask, vals, 0.0))
-    return u_hat, kept
+    from repro.kernels import ops as kops
+
+    return kops.select_toplek(key, u, k)
 
 
 def natural(key: jax.Array, u: jax.Array, *, scaled: bool = True):
@@ -183,7 +182,7 @@ def identity(u: jax.Array) -> tuple[jax.Array, jax.Array]:
 # ---------------------------------------------------------------------------
 
 def topk_sparse(u: jax.Array, k: int):
-    _, idx = jax.lax.top_k(_rank_keys(u), k)
+    idx = select.topk_indices(u, k)
     return idx.astype(jnp.int32), u[idx], jnp.asarray(k)
 
 
@@ -241,42 +240,45 @@ class Compressor:
 @dataclasses.dataclass(frozen=True)
 class CompressorSpec:
     name: str
-    make: Callable[[int, int], Compressor]  # (T, k) -> Compressor
+    make: Callable[..., Compressor]  # (T, k, fused=False) -> Compressor
 
 
-def _make_topk(t: int, k: int) -> Compressor:
-    return Compressor("topk", lambda key, u: topk(u, k), alpha=1.0,
+def _make_topk(t: int, k: int, fused: bool = False) -> Compressor:
+    return Compressor("topk", lambda key, u: topk(u, k, fused=fused), alpha=1.0,
                       delta=k / t, bits_per_elem=FP_BITS + IDX_BITS, header_bits=0,
                       compress_sparse=lambda key, u: topk_sparse(u, k), k=k)
 
 
-def _make_randk(t: int, k: int) -> Compressor:
+def _make_randk(t: int, k: int, fused: bool = False) -> Compressor:
+    del fused  # RandK's uniform-subset gather has no masked formulation
     return Compressor("randk", lambda key, u: randk(key, u, k), alpha=1.0,
                       delta=k / t, bits_per_elem=FP_BITS, header_bits=FP_BITS,
                       compress_sparse=lambda key, u: randk_sparse(key, u, k), k=k)
 
 
-def _make_randseqk(t: int, k: int) -> Compressor:
-    return Compressor("randseqk", lambda key, u: randseqk(key, u, k), alpha=1.0,
+def _make_randseqk(t: int, k: int, fused: bool = False) -> Compressor:
+    return Compressor("randseqk", lambda key, u: randseqk(key, u, k, fused=fused),
+                      alpha=1.0,
                       delta=k / t, bits_per_elem=FP_BITS, header_bits=IDX_BITS,
                       compress_sparse=lambda key, u: randseqk_sparse(key, u, k), k=k)
 
 
-def _make_toplek(t: int, k: int) -> Compressor:
+def _make_toplek(t: int, k: int, fused: bool = False) -> Compressor:
+    del fused  # the adaptive prefix is order-dependent: one sorted body
     return Compressor("toplek", lambda key, u: toplek(key, u, k), alpha=1.0,
                       delta=k / t, bits_per_elem=FP_BITS + IDX_BITS,
                       header_bits=IDX_BITS,
                       compress_sparse=lambda key, u: toplek_sparse(key, u, k), k=k)
 
 
-def _make_natural(t: int, k: int) -> Compressor:
-    del k
+def _make_natural(t: int, k: int, fused: bool = False) -> Compressor:
+    del k, fused
     return Compressor("natural", lambda key, u: natural(key, u), alpha=1.0,
                       delta=8.0 / 9.0, bits_per_elem=NATURAL_BITS, header_bits=0)
 
 
-def _make_identity(t: int, k: int) -> Compressor:
-    del k
+def _make_identity(t: int, k: int, fused: bool = False) -> Compressor:
+    del k, fused
     return Compressor("identity", lambda key, u: identity(u), alpha=1.0,
                       delta=1.0, bits_per_elem=FP_BITS, header_bits=0)
 
@@ -291,13 +293,28 @@ COMPRESSORS: dict[str, CompressorSpec] = {
 }
 
 
-def get_compressor(name: str, t: int, k: int = 0) -> Compressor:
-    """Build a compressor for packed-triu length `t` with sparsity budget `k`."""
+def get_compressor(name: str, t: int, k: int = 0, *, fused: bool = False) -> Compressor:
+    """Build a compressor for packed-triu length `t` with sparsity budget `k`.
+
+    ``fused=True`` binds the kernel-layer selection formulations (threshold
+    mask for TopK, window mask for RandSeqK) that the fused round maps per
+    client — bit-identical outputs to the default sorted/rolled forms
+    (DESIGN.md §12), different performance profile (faster under lax.map,
+    slower under vmap on CPU).  Registered factories keep the legacy
+    ``(t, k)`` contract: ``fused`` is only forwarded to factories whose
+    signature accepts a third argument, so user compressors (which have no
+    masked formulation to select) are called exactly as before.
+    """
     if name not in COMPRESSORS:
         raise KeyError(f"unknown compressor {name!r}; have {sorted(COMPRESSORS)}")
     if name in ("topk", "randk", "randseqk", "toplek") and not (0 < k <= t):
         raise ValueError(f"{name} needs 0 < k <= T, got k={k}, T={t}")
-    return COMPRESSORS[name].make(t, k)
+    make = COMPRESSORS[name].make
+    try:
+        takes_fused = len(inspect.signature(make).parameters) >= 3
+    except (TypeError, ValueError):  # builtins / C callables: legacy form
+        takes_fused = False
+    return make(t, k, fused) if takes_fused else make(t, k)
 
 
 def message_bits(c: Compressor, sent_elems: jax.Array) -> jax.Array:

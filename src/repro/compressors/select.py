@@ -1,0 +1,166 @@
+"""Pinned selection primitives shared by the jnp compressors and the Pallas
+selection kernel (DESIGN.md §12).
+
+The selection contract
+----------------------
+Every sparsifying compressor path — pure-jnp (`repro.compressors.core`),
+fused (`repro.kernels.compressor_select`), sparse wire form — MUST select the
+same index set, defined as:
+
+  * rank keys are ``f32(|u|)`` (:func:`rank_keys`) — NOT the f64 magnitudes.
+    Ranking in f64 is ~9x slower through ``lax.top_k`` on CPU and is not the
+    TPU-native sort width; more importantly, *mixing* widths across paths is
+    a parity bug: f64 entries that are distinct but collide when rounded to
+    f32 would be ordered differently by an f64-ranking kernel, silently
+    selecting a different index set than the f32-ranking jnp path.  Both
+    paths therefore rank in f32, always.
+  * ties (equal f32 keys — including the near-tie collisions above) break
+    toward the LOWEST packed-triu index.  ``jax.lax.top_k`` guarantees this
+    stable order; :func:`threshold_keep_mask` reproduces the identical set
+    without a sort (the Pallas-kernel formulation).  The regression tests in
+    tests/test_kernels.py pin set equality on adversarial near-tie inputs.
+
+The TopLEK randomization consumes its PRNG key as a single uniform draw in
+the payload dtype: ``jax.random.bernoulli(key, p)`` lowers to exactly
+``uniform(key, (), p.dtype) < p``, so :func:`toplek_from_uniform` takes the
+uniform as an operand and fused/unfused paths replay the same PRNG stream
+bit-for-bit (verified in tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RANK_DTYPE = jnp.float32
+
+
+def rank_keys(u: jax.Array) -> jax.Array:
+    """The pinned selection keys: f32 magnitudes (see module docstring)."""
+    return jnp.abs(u).astype(RANK_DTYPE)
+
+
+def topk_indices(u: jax.Array, k: int) -> jax.Array:
+    """Indices of the k largest-magnitude entries, lowest-index tie-break,
+    in descending key order (the canonical ranking both paths pin to)."""
+    _, idx = jax.lax.top_k(rank_keys(u), k)
+    return idx
+
+
+def topk_dense(u: jax.Array, k: int) -> jax.Array:
+    """Dense TopK sparsification C(u): zeros everywhere but the selected set."""
+    idx = topk_indices(u, k)
+    return jnp.zeros_like(u).at[idx].set(u[idx])
+
+
+def topk_dense_masked(u: jax.Array, k: int) -> jax.Array:
+    """Dense TopK via :func:`threshold_keep_mask` — the sort-free formulation
+    the Pallas selection kernel runs, bit-identical to :func:`topk_dense`
+    (same selected set by the pinned contract; values are pure copies).
+
+    On CPU the two formulations trade places with the mapping strategy: the
+    mask (31 compare/sum passes, no data movement) beats the batched sort
+    inside a per-client ``lax.map`` (~1.6x on w8a's T=45451) but loses under
+    ``vmap`` — the fused round picks it together with ``lax.map``
+    (repro.core.fednl.FUSED_VMAP_MAX_D)."""
+    keep = threshold_keep_mask(rank_keys(u), k)
+    return jnp.where(keep, u, jnp.zeros_like(u))
+
+
+def threshold_keep_mask(keys: jax.Array, k: int) -> jax.Array:
+    """Boolean keep-mask selecting the same set as ``top_k(keys, k)`` without
+    a sort — the formulation the Pallas selection kernel runs.
+
+    ``keys`` must be the non-negative f32 :func:`rank_keys`.  Their int32 bit
+    patterns order identically to their values (IEEE-754 monotonicity on
+    non-negatives), so the k-th largest key is found by a 31-step binary
+    search on the bit pattern — compares and full-array sums only, no data
+    movement.  Entries strictly above the threshold are kept; of the entries
+    EQUAL to it, the first ``k - n_gt`` in index order are kept (prefix of
+    the running tie count), which is exactly ``lax.top_k``'s stable
+    lowest-index tie-break.  Set equality (ties included) is pinned by
+    tests/test_kernels.py.
+    """
+    bits = jax.lax.bitcast_convert_type(keys, jnp.int32)
+
+    def body(i, t):
+        cand = t | (1 << (30 - i))
+        return jnp.where(jnp.sum(bits >= cand) >= k, cand, t)
+
+    thr = jax.lax.fori_loop(0, 31, body, jnp.int32(0))
+    gt = bits > thr
+    eq = bits == thr
+    n_gt = jnp.sum(gt)
+    return gt | (eq & (jnp.cumsum(eq) <= k - n_gt))
+
+
+def randseqk_window_mask(t: int, k: int, s: jax.Array) -> jax.Array:
+    """Membership mask of the circular window {s, ..., s+k-1 mod T} — the
+    gather-free form of RandSeqK's contiguous slice."""
+    pos = jnp.arange(t)
+    return (pos - s) % t < k
+
+
+def randseqk_dense(u: jax.Array, k: int, s: jax.Array) -> jax.Array:
+    """Dense RandSeqK given the start draw ``s``: roll + prefix slice + roll
+    back (the paper's contiguous single-PRG-draw window, Appendix C).  Values
+    are pure copies, so this is bit-identical to masking with
+    :func:`randseqk_window_mask`."""
+    rolled = jnp.roll(u, -s)
+    window = jnp.zeros_like(u).at[:k].set(rolled[:k])
+    return jnp.roll(window, s)
+
+
+def randseqk_dense_masked(u: jax.Array, k: int, s: jax.Array) -> jax.Array:
+    """Dense RandSeqK via :func:`randseqk_window_mask` — the gather-free
+    formulation the Pallas kernel runs; bit-identical to
+    :func:`randseqk_dense` (values are pure copies)."""
+    return jnp.where(
+        randseqk_window_mask(u.shape[0], k, s), u, jnp.zeros_like(u)
+    )
+
+
+def toplek_from_uniform(
+    u: jax.Array, k: int, unif: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """TopLEK (paper Algorithm 4) with the Bernoulli draw supplied as a
+    uniform ``unif`` in u's dtype: ``unif < p`` replays
+    ``jax.random.bernoulli(key, p)`` bit-for-bit (module docstring), letting
+    the fused kernel consume the same PRNG stream as the jnp path.
+
+    Target contraction delta = k/T.  Let alpha_m be the energy fraction of
+    the top-m entries; find m* with alpha_{m*-1} < delta <= alpha_{m*}, keep
+    m*-1 entries w.p. p = (alpha_hi - delta)/(alpha_hi - alpha_lo) else m*,
+    so E||C(u)-u||^2 = (1-delta)||u||^2 holds with equality.
+    """
+    t = u.shape[0]
+    delta = k / t
+    # only the top-k prefix can ever be kept (alpha_k >= k/T always), so a
+    # partial top-k selection suffices — no full T-sort (paper §5.11 spirit).
+    idx = topk_indices(u, k)
+    vals = u[idx]  # descending by rank key, lowest-index ties first
+    s2 = vals.astype(jnp.float64) ** 2 if u.dtype == jnp.float64 else vals**2
+    csum = jnp.cumsum(s2)
+    total = jnp.sum(u * u)
+    safe_total = jnp.where(total > 0, total, 1.0)
+    alphas = (csum / safe_total).astype(u.dtype)  # alphas[m-1] = alpha_m
+    # smallest m (1-indexed) with alpha_m >= delta
+    m_star = jnp.searchsorted(alphas, delta, side="left") + 1
+    m_star = jnp.minimum(m_star, k)
+    alpha_hi = alphas[m_star - 1]
+    alpha_lo = jnp.where(m_star > 1, alphas[jnp.maximum(m_star - 2, 0)], 0.0)
+    gap = alpha_hi - alpha_lo
+    p = jnp.where(gap > 0, (alpha_hi - delta) / jnp.where(gap > 0, gap, 1.0), 0.0)
+    p = jnp.clip(p, 0.0, 1.0)
+    take_lo = unif < p
+    kept = jnp.where(take_lo, m_star - 1, m_star)
+    kept = jnp.where(total > 0, kept, 0)
+    keep_mask = jnp.arange(k) < kept
+    u_hat = jnp.zeros_like(u).at[idx].set(jnp.where(keep_mask, vals, 0.0))
+    return u_hat, kept
+
+
+def toplek_uniform(key: jax.Array, dtype) -> jax.Array:
+    """The single TopLEK PRNG draw, in the dtype ``bernoulli`` would use (the
+    probability's dtype == the payload dtype here)."""
+    return jax.random.uniform(key, (), dtype=dtype)

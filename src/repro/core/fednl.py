@@ -35,14 +35,13 @@ import jax.numpy as jnp
 
 from repro.compressors import get_compressor, Compressor
 from repro.linalg import (
-    pack_triu,
     unpack_triu,
     triu_size,
     frob_norm_from_packed,
     newton_solve_optionA,
     newton_solve_optionB,
 )
-from repro.objectives.logreg import logreg_oracles
+from repro.objectives.logreg import logreg_oracles_packed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,7 +55,13 @@ class FedNLConfig:
     mu: float = 1e-3  # strong-convexity lower bound for Option A
     lam: float = 1e-3  # L2 regularization of the logistic objective
     hess0: str = "exact"  # "exact" | "zero"
-    use_kernel: bool = False  # route Hessian oracle through the Pallas wrapper
+    # which SYRK realizes the Hessian oracle (repro.objectives.logreg):
+    # "fused" (default) = kernels.ops.hessian_fused (Pallas on TPU, its
+    # tile-equivalent XLA program elsewhere; bit-identical to "jnp" for
+    # d <= 128); "jnp" = the single-dot_general parity reference; "pallas"
+    # forces the Pallas wrapper (interpret mode off-TPU — validation only)
+    hessian: str = "fused"
+    use_kernel: bool = False  # deprecated spelling of hessian="pallas"
     # line-search parameters (FedNL-LS; paper: c = 0.49, gamma = 0.5)
     ls_c: float = 0.49
     ls_gamma: float = 0.5
@@ -76,6 +81,15 @@ class FedNLConfig:
             raise ValueError(
                 f"unknown accounting {self.accounting!r}; use 'payload' | 'wire'"
             )
+        if self.hessian not in ("fused", "jnp", "pallas"):
+            raise ValueError(
+                f"unknown hessian {self.hessian!r}; use 'fused' | 'jnp' | 'pallas'"
+            )
+
+    @property
+    def hessian_impl(self) -> str:
+        """The effective Hessian SYRK implementation (use_kernel back-compat)."""
+        return "pallas" if self.use_kernel else self.hessian
 
     def k_for(self, d: int) -> int:
         return max(1, min(triu_size(d), int(self.k_multiplier * d)))
@@ -89,9 +103,29 @@ class FedNLState(NamedTuple):
     round: jax.Array  # scalar int
 
 
-def _client_oracles(z: jax.Array, x: jax.Array, lam: float, use_kernel: bool):
-    f, grad, hess = logreg_oracles(z, x, lam, use_kernel=use_kernel)
-    return f, grad, pack_triu(hess)
+def _client_oracles(z: jax.Array, x: jax.Array, lam: float, hessian: str):
+    """(f, grad, packed_hess) — the packed oracle emits the upper triangle
+    directly off the SYRK strips on the fused path (no mirrored (d, d)
+    matrix; bit-identical — see repro.objectives.logreg)."""
+    return logreg_oracles_packed(z, x, lam, hessian=hessian)
+
+
+# one output tile of the blocked SYRK: up to here the fused Hessian is the
+# single-dot_general expression (bit-identical to hessian="jnp") and the
+# clients stay a vmapped axis; above it the round maps clients with lax.map,
+# which keeps each client's strip matmuls and threshold selection
+# un-batched — vmap batches the strips into slower layouts and turns the
+# selection's compare/sum passes into batched sorts' worst case (w8a,
+# 1-core CPU: hessian sweep 435 ms mapped vs 775 ms vmapped; topk selection
+# 180 ms mapped mask vs 291 ms vmapped sort — DESIGN.md §12)
+FUSED_VMAP_MAX_D = 128
+
+
+def _map_clients(body: Callable, fused: bool, d: int, *args):
+    """vmap or lax.map the per-client round body (see FUSED_VMAP_MAX_D)."""
+    if fused and d > FUSED_VMAP_MAX_D:
+        return jax.lax.map(lambda a: body(*a), args)
+    return jax.vmap(body)(*args)
 
 
 def fednl_init(
@@ -102,9 +136,12 @@ def fednl_init(
     t = triu_size(d)
     x = jnp.zeros(d, dtype=z.dtype) if x0 is None else x0.astype(z.dtype)
     if cfg.hess0 == "exact":
-        _, _, h_local = jax.vmap(
-            lambda zi: _client_oracles(zi, x, cfg.lam, cfg.use_kernel)
-        )(z)
+        _, _, h_local = _map_clients(
+            lambda zi: _client_oracles(zi, x, cfg.lam, cfg.hessian_impl),
+            cfg.hessian_impl == "fused",
+            d,
+            z,
+        )
     elif cfg.hess0 == "zero":
         h_local = jnp.zeros((n_clients, t), dtype=z.dtype)
     else:
@@ -145,11 +182,11 @@ def client_round(
     comp: Compressor,
     alpha: float,
     lam: float,
-    use_kernel: bool,
+    hessian: str,
 ):
     """Lines 3-7 of Algorithm 1 for one client (vmapped / shard_mapped)."""
     d = z_i.shape[-1]
-    f_i, grad_i, hess_i = _client_oracles(z_i, x, lam, use_kernel)
+    f_i, grad_i, hess_i = _client_oracles(z_i, x, lam, hessian)
     delta = hess_i - h_i
     s_i, sent_i = comp.compress(key, delta)
     l_i = frob_norm_from_packed(delta, d)
@@ -196,11 +233,16 @@ def fednl_round_kernel(
         n_clients, _, d = z.shape
         key, sub = jax.random.split(state.key)
         client_keys = jax.random.split(sub, n_clients)
-        f_i, grad_i, s_i, l_i, h_local_new, sent_i = jax.vmap(
+        f_i, grad_i, s_i, l_i, h_local_new, sent_i = _map_clients(
             lambda zi, hi, ki: client_round(
-                zi, hi, state.x, ki, comp, alpha, cfg.lam, cfg.use_kernel
-            )
-        )(z, state.h_local, client_keys)
+                zi, hi, state.x, ki, comp, alpha, cfg.lam, cfg.hessian_impl
+            ),
+            cfg.hessian_impl == "fused",
+            d,
+            z,
+            state.h_local,
+            client_keys,
+        )
 
         grad = jnp.mean(grad_i, axis=0)
         s = jnp.mean(s_i, axis=0)
@@ -239,7 +281,10 @@ def make_fednl_round(
 ) -> Callable[[FedNLState], tuple[FedNLState, RoundMetrics]]:
     """Build the jittable single-round transition for problem data `z`."""
     _, _, d = z.shape
-    comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
+    comp = get_compressor(
+        cfg.compressor, triu_size(d), cfg.k_for(d),
+        fused=cfg.hessian_impl == "fused",
+    )
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
     from repro.api.accounting import payload_bits_fn, wire_bits_fn
 

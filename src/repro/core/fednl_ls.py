@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.api.accounting import payload_bits_fn, wire_bits_fn
 from repro.compressors import get_compressor
-from repro.core.fednl import FedNLConfig, FedNLState, client_round
+from repro.core.fednl import FedNLConfig, FedNLState, client_round, _map_clients
 from repro.linalg import (
     triu_size,
     unpack_triu,
@@ -69,11 +69,16 @@ def fednl_ls_round_kernel(
 
         key, sub = jax.random.split(state.key)
         client_keys = jax.random.split(sub, n_clients)
-        f_i, grad_i, s_i, l_i, h_local_new, sent_i = jax.vmap(
+        f_i, grad_i, s_i, l_i, h_local_new, sent_i = _map_clients(
             lambda zi, hi, ki: client_round(
-                zi, hi, state.x, ki, comp, alpha, cfg.lam, cfg.use_kernel
-            )
-        )(z, state.h_local, client_keys)
+                zi, hi, state.x, ki, comp, alpha, cfg.lam, cfg.hessian_impl
+            ),
+            cfg.hessian_impl == "fused",
+            d,
+            z,
+            state.h_local,
+            client_keys,
+        )
 
         grad = jnp.mean(grad_i, axis=0)
         f0 = jnp.mean(f_i)
@@ -141,7 +146,10 @@ def make_fednl_ls_round(
     z: jax.Array, cfg: FedNLConfig
 ) -> Callable[[FedNLState], tuple[FedNLState, LSRoundMetrics]]:
     _, _, d = z.shape
-    comp = get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
+    comp = get_compressor(
+        cfg.compressor, triu_size(d), cfg.k_for(d),
+        fused=cfg.hessian_impl == "fused",
+    )
     alpha = comp.alpha if cfg.alpha is None else cfg.alpha
     body = fednl_ls_round_kernel(
         cfg, comp, alpha, payload_bits_fn(comp, d), wire_bits_fn(comp, d)

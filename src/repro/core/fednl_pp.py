@@ -68,7 +68,7 @@ def fednl_pp_init(
     x = jnp.zeros(d, dtype=z.dtype) if x0 is None else x0.astype(z.dtype)
 
     def init_client(zi):
-        _, grad_i, hess_packed = _client_oracles(zi, x, cfg.lam, cfg.use_kernel)
+        _, grad_i, hess_packed = _client_oracles(zi, x, cfg.lam, cfg.hessian_impl)
         if cfg.hess0 == "exact":
             h_i = hess_packed
         else:
@@ -115,7 +115,7 @@ def make_fednl_pp_round(
 
     def participate(zi, h_i, x, ck):
         """Lines 9-13 for one selected client."""
-        _, grad_i, d_i = _client_oracles(zi, x, cfg.lam, cfg.use_kernel)
+        _, grad_i, d_i = _client_oracles(zi, x, cfg.lam, cfg.hessian_impl)
         s_i, sent_i = comp.compress(ck, d_i - h_i)
         h_new = h_i + alpha * s_i
         l_new = frob_norm_from_packed(h_new - d_i, d)

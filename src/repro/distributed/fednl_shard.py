@@ -47,7 +47,7 @@ from repro.core.fednl import (
     master_step,
 )
 from repro.linalg import triu_size, frob_norm_from_packed
-from repro.objectives.logreg import logreg_oracles
+from repro.objectives.logreg import logreg_oracles_packed
 
 
 def shard_problem(z, mesh: Mesh, axis: str = "data"):
@@ -102,16 +102,15 @@ def make_sharded_fednl_step(
         if aggregate == "dense_psum":
             f_i, grad_i, s_i, l_i, h_loc_new, sent_i = jax.vmap(
                 lambda zi, hi, ki: client_round(
-                    zi, hi, x, ki, comp, alpha, cfg.lam, cfg.use_kernel
+                    zi, hi, x, ki, comp, alpha, cfg.lam, cfg.hessian_impl
                 )
             )(z_loc, h_loc, client_keys)
             s = jax.lax.psum(jnp.sum(s_i, axis=0), axis) / n_clients
         else:  # sparse_allgather
             def client_sparse(zi, hi, ki):
-                f_i, grad_i, hess_i = logreg_oracles(zi, x, cfg.lam, use_kernel=cfg.use_kernel)
-                from repro.linalg import pack_triu
-
-                hp = pack_triu(hess_i)
+                f_i, grad_i, hp = logreg_oracles_packed(
+                    zi, x, cfg.lam, hessian=cfg.hessian_impl
+                )
                 delta = hp - hi
                 idx, vals, sent = comp.compress_sparse(ki, delta)
                 s_dense_local = scatter_add_sparse(idx, vals, t)

@@ -1,0 +1,116 @@
+"""Pallas kernel: fused compressor selection over the packed upper triangle.
+
+One ``pallas_call`` per compressed message covers the whole selection
+pipeline that the jnp path spells as 4-6 separate XLA ops (rank keys ->
+top_k -> gather -> scatter -> count): the length-T packed-triu correction
+vector is resident in VMEM once, and ranking + keep-mask + dense scatter +
+the sent-element count all happen in that single pass.  Three variants:
+
+  TopK      magnitude ranking via :func:`repro.compressors.select.
+            threshold_keep_mask` — a 31-step binary search on the int32 bit
+            patterns of the f32 rank keys (compares + full-array reductions
+            only; no sort, no gather), then a masked select.
+  RandSeqK  the Appendix-C contiguous window as a membership mask
+            ``(pos - s) mod T < k`` — gather-free, one vector compare.
+  TopLEK    TopK ranking plus the Algorithm-4 adaptive energy prefix.  The
+            prefix stage needs the kept values in rank order, so this
+            variant runs the canonical ``lax.top_k``-based primitive
+            (:func:`~repro.compressors.select.toplek_from_uniform`) inside
+            the kernel body — bit-identical to the jnp path by construction.
+
+The PRNG draws (RandSeqK's start index, TopLEK's Bernoulli uniform) are made
+OUTSIDE the kernel and passed as scalar operands, so fused and unfused paths
+consume identical key streams (`repro.compressors.select` module docstring).
+
+Selection parity contract (DESIGN.md §12): identical index set — f32 rank
+keys, lowest-index tie-break — and bit-identical dense output vs the
+`repro.compressors.core` reference; pinned by tests/test_kernels.py on
+adversarial near-tie inputs.
+
+Validation status: these kernels are exercised in interpret mode (the CPU
+container); TopK/RandSeqK restrict themselves to Mosaic-friendly primitives
+(iota, bitcast, compare, sum/cumsum, select), while TopLEK's in-kernel
+``lax.top_k`` additionally needs sort support from the Mosaic lowering —
+re-validate on real TPU hardware before flipping them into the default
+serving path there (ops.select_* route to jnp off-TPU regardless).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compressors.select import (
+    rank_keys,
+    threshold_keep_mask,
+    toplek_from_uniform,
+)
+
+
+def _out_shapes(u: jax.Array):
+    return (
+        jax.ShapeDtypeStruct(u.shape, u.dtype),  # dense u_hat
+        jax.ShapeDtypeStruct((1,), jnp.int32),  # sent payload elements
+    )
+
+
+def _topk_kernel(u_ref, o_ref, sent_ref, *, k: int):
+    u = u_ref[...]
+    keep = threshold_keep_mask(rank_keys(u), k)
+    o_ref[...] = jnp.where(keep, u, jnp.zeros_like(u))
+    sent_ref[0] = jnp.int32(k)
+
+
+def select_topk_pallas(
+    u: jax.Array, k: int, *, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Fused dense TopK: ``(u_hat, sent)`` in one VMEM-resident pass."""
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        out_shape=_out_shapes(u),
+        interpret=interpret,
+    )(u)
+
+
+def _randseqk_kernel(u_ref, s_ref, o_ref, sent_ref, *, k: int):
+    u = u_ref[...]
+    t = u.shape[0]
+    pos = jnp.arange(t)
+    keep = (pos - s_ref[0]) % t < k
+    o_ref[...] = jnp.where(keep, u, jnp.zeros_like(u))
+    sent_ref[0] = jnp.int32(k)
+
+
+def select_randseqk_pallas(
+    u: jax.Array, k: int, s: jax.Array, *, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Fused dense RandSeqK given the start draw ``s``: the circular window
+    becomes a membership mask — no roll, no gather, pure copies (so output
+    bits match the jnp roll formulation exactly)."""
+    return pl.pallas_call(
+        functools.partial(_randseqk_kernel, k=k),
+        out_shape=_out_shapes(u),
+        interpret=interpret,
+    )(u, jnp.reshape(s, (1,)))
+
+
+def _toplek_kernel(u_ref, unif_ref, o_ref, sent_ref, *, k: int):
+    u_hat, kept = toplek_from_uniform(u_ref[...], k, unif_ref[0])
+    o_ref[...] = u_hat
+    sent_ref[0] = kept.astype(jnp.int32)
+
+
+def select_toplek_pallas(
+    u: jax.Array, k: int, unif: jax.Array, *, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Fused dense TopLEK given the Bernoulli uniform ``unif`` (in u's
+    dtype): ranking, energy prefix, adaptive keep and the data-dependent
+    sent count in one pass."""
+    return pl.pallas_call(
+        functools.partial(_toplek_kernel, k=k),
+        out_shape=_out_shapes(u),
+        interpret=interpret,
+    )(u, jnp.reshape(unif, (1,)))

@@ -20,9 +20,11 @@ sigma directly (paper §5.7: g(-z)*g(z) reuse).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,22 +76,106 @@ def logreg_hess(z: jax.Array, x: jax.Array, lam: float) -> jax.Array:
     return z.T @ (h[:, None] * z) + lam * jnp.eye(d, dtype=z.dtype)
 
 
-def logreg_oracles(z: jax.Array, x: jax.Array, lam: float, *, use_kernel: bool = False):
+HESSIAN_IMPLS = ("fused", "jnp", "pallas")
+
+
+def logreg_oracles(
+    z: jax.Array,
+    x: jax.Array,
+    lam: float,
+    *,
+    use_kernel: bool = False,
+    hessian: str | None = None,
+):
     """Fused (f, grad, hess) sharing one margin/sigmoid computation (§5.7).
 
-    use_kernel: route the Hessian SYRK through the Pallas kernel wrapper
-    (repro.kernels.ops.hessian_syrk); default is the pure-jnp path, which XLA
-    fuses well on CPU and is the oracle the kernel is tested against.
+    hessian: which SYRK realizes Z^T diag(h) Z (DESIGN.md §12):
+      "fused"   (default) repro.kernels.ops.hessian_fused — the Pallas SYRK
+                kernel on TPU, its tile-equivalent XLA program elsewhere.
+                For d <= 128 (one tile) the XLA program is literally the
+                "jnp" expression, so the default is bit-identical to the
+                historical path there; for larger d the blocked accumulation
+                drifts by O(1) ulp (documented).
+      "jnp"     the single-dot_general expression — the parity reference
+                every fused variant is pinned against.
+      "pallas"  force the Pallas wrapper (interpret mode off-TPU) — the
+                kernel-validation path, not a CPU hot path.
+    use_kernel=True is the deprecated spelling of hessian="pallas".
     """
+    if hessian is None:
+        hessian = "pallas" if use_kernel else "fused"
+    if hessian not in HESSIAN_IMPLS:
+        raise ValueError(
+            f"unknown hessian {hessian!r}; use {' | '.join(HESSIAN_IMPLS)}"
+        )
     n_i, d = z.shape
     m, sigma = logreg_margin_stats(z, x)
     f = jnp.mean(jax.nn.softplus(-m)) + 0.5 * lam * jnp.sum(x * x)
     grad = -(z.T @ (1.0 - sigma)) / n_i + lam * x
     h = sigma * (1.0 - sigma) / n_i
-    if use_kernel:
+    reg = lam * jnp.eye(d, dtype=z.dtype)
+    if hessian == "fused":
         from repro.kernels import ops as kops
 
-        hess = kops.hessian_syrk(z, h) + lam * jnp.eye(d, dtype=z.dtype)
+        hess = kops.hessian_fused(z, h) + reg
+    elif hessian == "pallas":
+        from repro.kernels import ops as kops
+
+        hess = kops.hessian_syrk(z, h) + reg
     else:
-        hess = z.T @ (h[:, None] * z) + lam * jnp.eye(d, dtype=z.dtype)
+        hess = z.T @ (h[:, None] * z) + reg
     return f, grad, hess
+
+
+@functools.lru_cache(maxsize=64)
+def _packed_eye(d: int) -> np.ndarray:
+    """pack_triu(eye(d)) as a host numpy constant (embedded at trace time)."""
+    from repro.linalg import triu_indices
+
+    rows, cols = triu_indices(d)
+    return np.where(rows == cols, 1.0, 0.0)
+
+
+def logreg_oracles_packed(
+    z: jax.Array,
+    x: jax.Array,
+    lam: float,
+    *,
+    hessian: str = "fused",
+):
+    """Fused client oracle: (f, grad, pack_triu(hess)) in one pass.
+
+    The FedNL round consumes the Hessian exclusively in packed
+    upper-triangle form (T = d(d+1)/2); for ``hessian="fused"`` the packed
+    vector is gathered straight off the SYRK block strips
+    (:func:`repro.kernels.ops.hessian_syrk_packed`) — the mirrored (d, d)
+    matrix is never materialized, and the regularization is added packed
+    (``lam * pack_triu(eye)``), replaying the historical
+    ``pack_triu(hess + lam*eye)`` per-element op order bit-for-bit.  The
+    "jnp" / "pallas" reference paths build the full matrix and pack it,
+    exactly as :func:`logreg_oracles` callers always have.
+    """
+    if hessian not in HESSIAN_IMPLS:
+        raise ValueError(
+            f"unknown hessian {hessian!r}; use {' | '.join(HESSIAN_IMPLS)}"
+        )
+    n_i, d = z.shape
+    m, sigma = logreg_margin_stats(z, x)
+    f = jnp.mean(jax.nn.softplus(-m)) + 0.5 * lam * jnp.sum(x * x)
+    grad = -(z.T @ (1.0 - sigma)) / n_i + lam * x
+    h = sigma * (1.0 - sigma) / n_i
+    if hessian == "fused":
+        from repro.kernels import ops as kops
+
+        hp = kops.hessian_syrk_packed(z, h)
+        return f, grad, hp + lam * jnp.asarray(_packed_eye(d), dtype=z.dtype)
+    from repro.linalg import pack_triu
+
+    reg = lam * jnp.eye(d, dtype=z.dtype)
+    if hessian == "pallas":
+        from repro.kernels import ops as kops
+
+        hess = kops.hessian_syrk(z, h) + reg
+    else:
+        hess = z.T @ (h[:, None] * z) + reg
+    return f, grad, pack_triu(hess)

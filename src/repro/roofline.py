@@ -27,6 +27,70 @@ PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes / s / chip
 ICI_BW = 50e9  # bytes / s / link
 
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """Roofline ceilings of one device.  The module-level constants above are
+    the historical TPU-v5e values; pass an explicit Machine to `analyze` (or
+    build one with :func:`measure_cpu_machine`) to gate benchmarks run on a
+    different host — e.g. the CPU container that produces BENCH_kernels.json.
+    """
+
+    name: str
+    peak_flops: float  # flop / s
+    hbm_bw: float  # bytes / s
+    ici_bw: float  # bytes / s / link (0 -> no interconnect term)
+
+
+TPU_V5E = Machine("tpu-v5e", PEAK_FLOPS, HBM_BW, ICI_BW)
+
+
+def measure_cpu_machine(*, n: int = 1024, dtype=None, reps: int = 3) -> Machine:
+    """Empirical single-host Machine: peak = best measured dense-gemm flop
+    rate (f64 by default — the FedNL payload dtype), memory bw from a big
+    copy.  A *measured* ceiling is the honest roofline for gating CPU
+    benchmark claims — an advertised spec would let an impossible 'speedup'
+    (e.g. a benchmark accidentally timing a cached result) pass the gate.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    a = jax.random.normal(jax.random.PRNGKey(0), (n, n), dtype=dtype)
+    mm = jax.jit(lambda a: a @ a)
+    mm(a).block_until_ready()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        mm(a).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    peak = 2.0 * n**3 / best
+
+    cp = jax.jit(lambda a: a + 1.0)
+    cp(a).block_until_ready()
+    t0 = time.perf_counter()
+    cp(a).block_until_ready()
+    bw = 2.0 * a.nbytes / (time.perf_counter() - t0)
+    return Machine("cpu-measured", peak, bw, 0.0)
+
+
+def hlo_cost(fn, *args) -> dict[str, float]:
+    """{'flops', 'bytes'} of ``jit(fn)`` on args' shapes, from XLA's
+    cost_analysis of the compiled module (no execution)."""
+    import jax
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    costs = compiled.cost_analysis()
+    if isinstance(costs, list):  # older jax returns [dict]
+        costs = costs[0]
+    return {
+        "flops": float(costs.get("flops", 0.0)),
+        "bytes": float(costs.get("bytes accessed", 0.0)),
+    }
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
@@ -89,7 +153,10 @@ class Roofline:
         return d
 
 
-def analyze(compiled, *, chips: int, model_flops_global: float) -> Roofline:
+def analyze(
+    compiled, *, chips: int, model_flops_global: float,
+    machine: Machine = TPU_V5E,
+) -> Roofline:
     """Build the three-term roofline from a compiled executable."""
     costs = compiled.cost_analysis()
     if isinstance(costs, list):  # older jax returns [dict]
@@ -99,9 +166,9 @@ def analyze(compiled, *, chips: int, model_flops_global: float) -> Roofline:
     colls = collective_bytes(compiled.as_text())
     coll_total = float(sum(colls.values()))
 
-    compute_s = flops / PEAK_FLOPS
-    memory_s = hbm / HBM_BW
-    collective_s = coll_total / ICI_BW
+    compute_s = flops / machine.peak_flops
+    memory_s = hbm / machine.hbm_bw
+    collective_s = coll_total / machine.ici_bw if machine.ici_bw else 0.0
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     dominant = max(terms, key=terms.get)
 

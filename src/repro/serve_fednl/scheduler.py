@@ -60,7 +60,7 @@ def serve_lane(spec, algo, backend) -> str:
         backend is LOCAL_BACKEND
         and algo.make_batch_round is not None
         and algo.kind == "full"
-        and not spec.use_kernel
+        and spec.hessian_impl != "pallas"
     ):
         return "batch"
     return "solo"
@@ -78,6 +78,7 @@ def serve_group_key(spec, d: int) -> tuple:
         spec.option,
         spec.mu,
         spec.hess0,
+        spec.hessian_impl,
         spec.accounting,
         spec.ls_c,
         spec.ls_gamma,
