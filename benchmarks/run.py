@@ -33,6 +33,9 @@ def main() -> int:
     ap.add_argument("--json-kernels", default="BENCH_kernels.json",
                     metavar="PATH",
                     help="where to write the fused-round kernel benchmark record")
+    ap.add_argument("--json-topology", default="BENCH_topology.json",
+                    metavar="PATH",
+                    help="where to write the topology-layer benchmark record")
     args = ap.parse_args()
 
     bench: dict = {"schema": 1, "tables": {}}
@@ -98,6 +101,19 @@ def main() -> int:
         f"verified={kernels['verified']}",
     ))
 
+    # topology layer: tree-of-stars hop cost + staleness/accuracy table
+    from benchmarks.topology_bench import topology_benchmark
+
+    topo = topology_benchmark()
+    rows.append((
+        "topology/tree_vs_star_n64",
+        topo["sync_tree"]["n64"]["tree_ms_per_round"] * 1e3,
+        f"star={topo['sync_tree']['n64']['star_ms_per_round']}ms/rd;"
+        f"overhead={topo['sync_tree']['n64']['tree_overhead_x']}x;"
+        f"bit_parity={topo['bit_parity']};"
+        f"async_s0_bit_equal={topo['async_staleness'][0]['bit_equal_to_sync']}",
+    ))
+
     # serving engine: Poisson arrivals of mixed tenants vs sequential solos
     from benchmarks.serve_load import serve_load_benchmark
 
@@ -128,9 +144,12 @@ def main() -> int:
     with open(args.json_kernels, "w") as f:
         json.dump(kernels, f, indent=2)
         f.write("\n")
+    with open(args.json_topology, "w") as f:
+        json.dump(topo, f, indent=2)
+        f.write("\n")
     print(
-        f"# wrote {args.json}, {args.json_session}, {args.json_serve} "
-        f"and {args.json_kernels}",
+        f"# wrote {args.json}, {args.json_session}, {args.json_serve}, "
+        f"{args.json_kernels} and {args.json_topology}",
         file=sys.stderr,
     )
     return 0

@@ -1,0 +1,93 @@
+"""Topology-layer benchmark: tree-of-stars latency + staleness/accuracy.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --json-topology BENCH_topology.json
+
+Measures, over the in-process loopback wire (socket-free, CI-stable):
+
+  * sync round latency of a depth-2 tree-of-stars vs the flat star at
+    n=16 and n=64 clients, with the tree==star bit-parity flag — the tree
+    pays one extra aggregation hop per round, and combine="exact" must pay
+    it without perturbing a single bit of the trajectory;
+  * async round throughput and final accuracy vs the staleness bound
+    (staleness in {0, 1, 2, 4} under the same spec'd arrival schedule) —
+    the pinned staleness-vs-accuracy table: larger bounds commit rounds
+    without waiting for the barrier, trading gradient freshness for
+    throughput, and staleness=0 must be the sync run bit for bit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import DataSpec, ExperimentSpec, TopologySpec, solve
+
+SYNC_ROUNDS = 6
+ASYNC_ROUNDS = 12
+STALENESS_GRID = (0, 1, 2, 4)
+
+
+def _spec(n_clients: int, **overrides) -> ExperimentSpec:
+    base = dict(
+        data=DataSpec(shape=(16, n_clients, 8), seed=1),
+        rounds=SYNC_ROUNDS,
+        seed=0,
+        backend="star-loopback",
+    )
+    base.update(overrides)
+    return ExperimentSpec(**base)
+
+
+def topology_benchmark() -> dict:
+    out: dict = {"schema": 1, "sync_tree": {}, "async_staleness": []}
+
+    for n in (16, 64):
+        spec = _spec(n)
+        tree_spec = spec.replace(
+            topology=TopologySpec(kind="tree", fanout=4, depth=2)
+        )
+        # warm the jit caches so the table compares steady-state round cost,
+        # not whichever variant happened to pay first-trace compile
+        solve(spec.replace(rounds=1))
+        solve(tree_spec.replace(rounds=1))
+        star = solve(spec)
+        tree = solve(tree_spec)
+        parity = bool(
+            np.array_equal(star.x, tree.x)
+            and np.array_equal(
+                star.extras["measured_payload_bits"],
+                tree.extras["measured_payload_bits"],
+            )
+        )
+        out["sync_tree"][f"n{n}"] = {
+            "star_ms_per_round": round(1e3 * star.wall_time_s / star.rounds, 3),
+            "tree_ms_per_round": round(1e3 * tree.wall_time_s / tree.rounds, 3),
+            "tree_overhead_x": round(
+                tree.wall_time_s / max(star.wall_time_s, 1e-9), 3
+            ),
+            "bit_parity": parity,
+        }
+
+    # staleness/accuracy: same problem, same arrival schedule, growing bound
+    sync = solve(_spec(16, rounds=ASYNC_ROUNDS))
+    for s in STALENESS_GRID:
+        topo = TopologySpec(
+            mode="async", staleness=s, max_delay=4, schedule_seed=0
+        )
+        solve(_spec(16, rounds=1, topology=topo))  # warm
+        rep = solve(_spec(16, rounds=ASYNC_ROUNDS, topology=topo))
+        out["async_staleness"].append(
+            {
+                "staleness": s,
+                "rounds_per_s": round(rep.rounds / max(rep.wall_time_s, 1e-9), 1),
+                "final_grad_norm": float(rep.grad_norms[-1]),
+                # staleness=0 is the sync barrier bit for bit; larger bounds
+                # drift (stale gradients) but must still converge
+                "bit_equal_to_sync": bool(np.array_equal(rep.x, sync.x)),
+            }
+        )
+
+    out["bit_parity"] = bool(
+        all(v["bit_parity"] for v in out["sync_tree"].values())
+        and out["async_staleness"][0]["bit_equal_to_sync"]
+    )
+    return out

@@ -1,0 +1,86 @@
+"""Hierarchical + elastic FedNL: the repro.comm topology layer end to end.
+
+Three runs of the same problem over the loopback wire backend:
+
+  1. a depth-2 tree-of-stars (16 clients behind 4 aggregators) that
+     reproduces the flat star bit for bit while the root reads 4 uplinks
+     per round instead of 16;
+  2. bounded-staleness async aggregation — the barrier replaced by the
+     contract "an update computed against x^r lands by commit r+s", with
+     the staleness/accuracy trade printed per bound;
+  3. an elastic cohort — one client joins mid-run (late INIT at the
+     current iterate, its T*64-bit state uplink accounted exactly) and one
+     leaves (retired from the Hessian invariant exactly, via the master's
+     per-client mirrors).
+
+    PYTHONPATH=src python examples/tree_async_fednl.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    MembershipEvent,
+    MembershipSpec,
+    TopologySpec,
+    solve,
+)
+
+
+def main():
+    base = ExperimentSpec(
+        data=DataSpec(shape=(16, 16, 12), seed=0),  # d=16, 16 clients
+        backend="star-loopback",
+        rounds=12,
+        seed=0,
+    )
+
+    # --- 1. tree-of-stars: 4 aggregators x 4 clients, bit-parity ----------
+    star = solve(base)
+    tree = solve(
+        base.replace(topology=TopologySpec(kind="tree", fanout=4, depth=2))
+    )
+    print("tree-of-stars (4 aggregators x 4 clients, combine='exact'):")
+    print(f"  flat star : ||grad|| = {star.grad_norms[-1]:.2e}")
+    print(f"  tree      : ||grad|| = {tree.grad_norms[-1]:.2e}  "
+          f"bit-identical to star: {np.array_equal(star.x, tree.x)}")
+
+    # --- 2. async: bounded staleness instead of the barrier ---------------
+    print("\nasync aggregation (max_delay=3, spec'd arrival schedule):")
+    for s in (0, 1, 3):
+        rep = solve(
+            base.replace(
+                topology=TopologySpec(
+                    mode="async", staleness=s, max_delay=3, schedule_seed=7
+                )
+            )
+        )
+        note = (
+            "== sync barrier bit for bit"
+            if np.array_equal(rep.x, star.x)
+            else "stale gradients, still converging"
+        )
+        print(f"  staleness={s}: ||grad|| = {rep.grad_norms[-1]:.2e}  ({note})")
+
+    # --- 3. elastic membership: join + leave as spec'd events -------------
+    mem = MembershipSpec(
+        events=(
+            MembershipEvent(round=3, action="join", client=15),
+            MembershipEvent(round=6, action="leave", client=0),
+        )
+    )
+    rep = solve(base.replace(membership=mem))
+    sizes = {r.round: len(r.participants) for r in rep.records}
+    print("\nelastic membership (client 15 joins @3, client 0 leaves @6):")
+    print(f"  cohort sizes: r0={sizes[0]} r3={sizes[3]} r6={sizes[6]}")
+    print(f"  ||grad|| = {rep.grad_norms[-1]:.2e} "
+          f"(checkpoint/resume replays the same cohort history)")
+
+
+if __name__ == "__main__":
+    main()

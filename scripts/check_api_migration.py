@@ -39,6 +39,14 @@ mirrored emission that keeps the fused round bit-identical to the jnp
 reference.  Callers everywhere else go through ``ops.hessian_syrk`` /
 ``ops.hessian_syrk_packed`` / ``ops.hessian_fused`` so those policies
 cannot be bypassed.
+
+Rule 6 flags direct ``StarMaster(...)`` / ``AggregatorNode(...)``
+construction outside ``src/repro/comm/``.  Which master class a spec needs
+(plain / tree / async / elastic) and how aggregator subtrees are wired are
+``repro.comm.topology`` policy — ``make_master`` / ``open_loopback_master``
+/ ``build_aggregator`` are the sanctioned seams.  A call site hand-building
+a master bypasses topology/membership dispatch and the SUBTREE coverage
+handshake, so the run silently ignores those spec fields.
 """
 
 from __future__ import annotations
@@ -165,6 +173,25 @@ KERNEL_ALLOWLIST = {
 }
 
 
+# --- rule 6: masters/aggregators hand-built outside repro.comm --------------
+
+# bare construction (subclass *definitions* like `class TreeMaster(StarMaster)`
+# don't match: the class name is immediately followed by `)` there)
+MASTER_RAW = re.compile(r"\b(?:StarMaster|AggregatorNode)\s*\(")
+
+# everything but the comm package itself (topology.py owns the factories)
+MASTER_SCANNED = ["examples", "scripts", "benchmarks", "src/repro", "tests"]
+
+MASTER_ALLOWLIST = {
+    # this checker's own pattern table
+    "scripts/check_api_migration.py",
+}
+
+
+def is_comm_internal(rel: str) -> bool:
+    return rel.startswith("src/repro/comm/")
+
+
 def is_kernels_internal(rel: str) -> bool:
     return rel.startswith("src/repro/kernels/")
 
@@ -241,6 +268,15 @@ def main() -> int:
             for lineno, line in enumerate(path.read_text().splitlines(), 1):
                 if KERNEL_RAW.search(line) and not line.lstrip().startswith("#"):
                     kernel_bad.append(f"{rel}:{lineno}: {line.strip()}")
+    master_bad: list[str] = []
+    for layer in MASTER_SCANNED:
+        for path in sorted((ROOT / layer).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in MASTER_ALLOWLIST or is_comm_internal(rel):
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if MASTER_RAW.search(line) and not line.lstrip().startswith("#"):
+                    master_bad.append(f"{rel}:{lineno}: {line.strip()}")
     if bad:
         print("legacy driver calls reachable outside the facade "
               "(migrate to repro.api.solve or allowlist with a reason):")
@@ -265,13 +301,20 @@ def main() -> int:
               "— use kernels.ops.hessian_syrk / hessian_syrk_packed / "
               "hessian_fused, or allowlist with a reason):")
         print("\n".join(f"  {b}" for b in kernel_bad))
-    if bad or sweep_bad or backend_bad or step_bad or kernel_bad:
+    if master_bad:
+        print("StarMaster/AggregatorNode hand-built outside src/repro/comm/ "
+              "(bypasses topology/membership dispatch — use "
+              "repro.comm.topology.make_master / open_loopback_master / "
+              "build_aggregator, or allowlist with a reason):")
+        print("\n".join(f"  {b}" for b in master_bad))
+    if bad or sweep_bad or backend_bad or step_bad or kernel_bad or master_bad:
         return 1
     print(f"api migration clean: {', '.join(SCANNED)} go through solve(); "
           f"{', '.join(SWEEP_SCANNED)} sweep via solve_many(); no direct "
           "backend .run()/.open() outside repro.api; no hand-rolled "
           "session polling loops; raw hessian_syrk_pallas confined to "
-          "src/repro/kernels/")
+          "src/repro/kernels/; masters/aggregators built only via the "
+          "repro.comm.topology seams")
     return 0
 
 

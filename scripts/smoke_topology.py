@@ -1,0 +1,105 @@
+"""Fast loopback smoke test of the repro.comm topology layer (CI gate).
+
+    PYTHONPATH=src python scripts/smoke_topology.py
+
+Socket-free: everything runs over in-process loopback transports.  Gates the
+two topology-layer contracts cheap enough for tier-1:
+
+  * a depth-2 tree-of-stars (combine="exact") reproduces the flat star
+    trajectory AND its measured wire accounting bit for bit;
+  * a join+leave membership schedule converges, with the joined client's
+    late-INIT uplink (T*64 payload bits) accounted into its round exactly.
+
+Exits non-zero on any mismatch.
+"""
+
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+
+from repro.api import (
+    CompressorSpec,
+    DataSpec,
+    ExperimentSpec,
+    MembershipEvent,
+    MembershipSpec,
+    TopologySpec,
+    solve,
+)
+
+SHAPE = (12, 4, 20)  # (d, n_clients, n_i)
+ROUNDS = 6
+
+failures = 0
+
+# --- depth-2 tree == flat star, bit for bit --------------------------------
+for comp in ["topk", "randk", "natural"]:
+    spec = ExperimentSpec(
+        data=DataSpec(shape=SHAPE, seed=1),
+        compressor=CompressorSpec(comp),
+        rounds=ROUNDS,
+        seed=0,
+        backend="star-loopback",
+    )
+    star = solve(spec)
+    tree = solve(spec.replace(topology=TopologySpec(kind="tree", fanout=2, depth=2)))
+    x_ok = bool(np.array_equal(star.x, tree.x))
+    gn_ok = all(
+        float(a.grad_norm).hex() == float(b.grad_norm).hex()
+        for a, b in zip(star.records, tree.records)
+    )
+    bits_ok = bool(
+        np.array_equal(
+            star.extras["measured_payload_bits"],
+            tree.extras["measured_payload_bits"],
+        )
+        and np.array_equal(
+            star.extras["measured_frame_bytes"],
+            tree.extras["measured_frame_bytes"],
+        )
+    )
+    ok = x_ok and gn_ok and bits_ok
+    print(f"tree  {comp:8s} {'ok' if ok else 'FAIL'}  x_bitwise={x_ok} "
+          f"gn_bitwise={gn_ok} measured_bits={bits_ok} "
+          f"gn={tree.grad_norms[-1]:.1e}")
+    failures += not ok
+
+# --- one join + one leave on the elastic star ------------------------------
+d, n, n_i = (10, 8, 16)
+mem = MembershipSpec(
+    events=(
+        MembershipEvent(round=2, action="join", client=7),
+        MembershipEvent(round=4, action="leave", client=0),
+    )
+)
+spec = ExperimentSpec(
+    data=DataSpec(shape=(d, n, n_i), seed=1),
+    rounds=10,
+    seed=0,
+    backend="star-loopback",
+    membership=mem,
+)
+rep = solve(spec)
+t_bits = d * (d + 1) // 2 * 64
+join_extra = (
+    rep.records[2].sent_bits_payload
+    - rep.records[1].sent_bits_payload
+    - rep.records[1].sent_bits_payload // 7  # one more regular uplink
+)
+conv_ok = rep.grad_norms[-1] < 1e-6
+cohort_ok = (
+    rep.records[1].participants == tuple(range(7))
+    and rep.records[2].participants == tuple(range(8))
+    and rep.records[4].participants == tuple(range(1, 8))
+)
+bits_ok = join_extra == t_bits
+ok = conv_ok and cohort_ok and bits_ok
+print(f"elastic join+leave {'ok' if ok else 'FAIL'}  "
+      f"gn={rep.grad_norms[-1]:.1e} cohort={cohort_ok} "
+      f"join_ack_bits={join_extra} (=T*64: {bits_ok})")
+failures += not ok
+
+sys.exit(1 if failures else 0)

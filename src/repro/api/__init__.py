@@ -38,7 +38,24 @@ from repro.api.spec import CompressorSpec, DataSpec, ExperimentSpec
 from repro.api.sweep import SweepSpec
 from repro.comm.transport import FaultSpec
 
+# TopologySpec / MembershipSpec / MembershipEvent are lazy module attributes:
+# repro.comm.topology pulls the jax-heavy star stack, and `import repro.api`
+# must stay cheap for spec-only consumers
+_TOPOLOGY_EXPORTS = ("TopologySpec", "MembershipSpec", "MembershipEvent")
+
+
+def __getattr__(name: str):
+    if name in _TOPOLOGY_EXPORTS:
+        from repro.comm import topology
+
+        return getattr(topology, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
+    "MembershipEvent",
+    "MembershipSpec",
+    "TopologySpec",
     "ACCOUNTINGS",
     "Algorithm",
     "Backend",

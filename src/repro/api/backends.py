@@ -377,6 +377,7 @@ class _StarFullSessionHandle(SessionHandle):
             self._measured_pbits.append(m["measured_payload_bits"])
             self._frame_bytes.append(m["measured_frame_bytes"])
             wire_bits = 8 * m["measured_frame_bytes"]
+            parts = m.get("participants")
             recs.append(
                 RoundRecord(
                     round=r,
@@ -389,6 +390,13 @@ class _StarFullSessionHandle(SessionHandle):
                     ),
                     sent_bits_payload=m["sent_bits"],
                     sent_bits_wire=wire_bits,
+                    # async/elastic masters report who contributed/was active;
+                    # the plain star reports nothing (everyone, every round)
+                    participants=(
+                        tuple(int(i) for i in parts)
+                        if parts is not None
+                        else None
+                    ),
                 )
             )
         self.wall_time_s += time.perf_counter() - t1
@@ -537,6 +545,7 @@ class StarLoopbackBackend(Backend):
     name = "star-loopback"
     supports_faults = True
     supports_sessions = True
+    supports_topology = True
 
     def supports(self, algo: Algorithm) -> bool:
         # identity, not name: the wire event loops implement the builtin
@@ -562,10 +571,16 @@ class StarLoopbackBackend(Backend):
                 spec, master, tau, lambda: z, restore=restore
             )
 
-        from repro.comm.star import StarMaster, make_loopback_clients
+        # all full-participation wiring — plain star, tree-of-stars, async,
+        # elastic — goes through the one topology construction seam
+        # (migration rule 6: masters are built inside repro.comm)
+        from repro.comm.topology import open_loopback_master
 
-        conns, drive = make_loopback_clients(z, cfg, seed=spec.seed)
-        master = StarMaster(conns, d, cfg, drive=drive)
+        master = open_loopback_master(
+            z, cfg,
+            topology=spec.topology, membership=spec.membership,
+            seed=spec.seed,
+        )
         return _StarFullSessionHandle(spec, master, restore=restore)
 
 
@@ -579,6 +594,7 @@ class StarTCPBackend(Backend):
     needs_problem = False  # workers rebuild their shards from the data seed
     supports_faults = True
     supports_sessions = True
+    supports_topology = True
 
     def supports(self, algo: Algorithm) -> bool:
         # identity, not name — same reasoning as StarLoopbackBackend
@@ -592,22 +608,36 @@ class StarTCPBackend(Backend):
             )
         import dataclasses as _dc
 
-        from repro.launch.multiproc import ClientCluster
+        from repro.launch.multiproc import ClientCluster, TreeClientCluster
 
         cfg = spec.fednl_config()
         pp = algo.kind == "pp"
-        cluster = ClientCluster(
-            spec.data.dataset,
-            spec.data.shape,
-            spec.seed,
-            host=spec.host,
-            pp=pp,
-            fault_dict=(
-                _dc.asdict(spec.fault) if spec.fault is not None else None
-            ),
-            data_seed=spec.data.seed,
-            cfg=cfg,
-        )
+        topo = spec.topology
+        if topo is not None and topo.kind == "tree":
+            # process tree: one aggregator process per root subtree, which
+            # spawns (and later tears down, leaves-first) its own children
+            cluster = TreeClientCluster(
+                spec.data.dataset,
+                spec.data.shape,
+                spec.seed,
+                topo,
+                host=spec.host,
+                data_seed=spec.data.seed,
+                cfg=cfg,
+            )
+        else:
+            cluster = ClientCluster(
+                spec.data.dataset,
+                spec.data.shape,
+                spec.seed,
+                host=spec.host,
+                pp=pp,
+                fault_dict=(
+                    _dc.asdict(spec.fault) if spec.fault is not None else None
+                ),
+                data_seed=spec.data.seed,
+                cfg=cfg,
+            )
         try:
             if pp:
                 from repro.comm.star_pp import StarPPMaster
@@ -621,9 +651,13 @@ class StarTCPBackend(Backend):
                     spec, master, tau, spec.data.build,
                     restore=restore, closer=cluster.close,
                 )
-            from repro.comm.star import StarMaster
+            from repro.comm.topology import make_master
 
-            master = StarMaster(cluster.conns, cluster.d, cfg)
+            master = make_master(
+                cluster.conns, cluster.d, cfg,
+                topology=topo, membership=spec.membership,
+                n_clients=cluster.n_clients,
+            )
             return _StarFullSessionHandle(
                 spec, master, restore=restore, closer=cluster.close
             )

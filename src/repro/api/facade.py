@@ -49,6 +49,16 @@ def check_spec(
             f"backend {backend.name!r} rebuilds the problem from spec.data in "
             "its worker processes; a pre-built z cannot be shipped to it"
         )
+    topo_live = spec.topology is not None and not spec.topology.trivial
+    mem_live = spec.membership is not None and not spec.membership.trivial
+    if (topo_live or mem_live) and not backend.supports_topology:
+        what = "topology" if topo_live else "membership"
+        raise ValueError(
+            f"backend {backend.name!r} cannot run a non-trivial {what} spec; "
+            "trees, async aggregation and membership events need a wire "
+            "backend (star-loopback / star-tcp) — running the flat sync "
+            "star here would silently change the experiment"
+        )
 
 
 def solve(spec: ExperimentSpec, z=None, x0=None) -> RunReport:

@@ -116,6 +116,9 @@ class Backend:
     supports_faults: bool = False  # transport-level dropout/straggler injection
     supports_x0: bool = False  # accepts an initial-iterate override
     supports_sessions: bool = False  # implements open() -> SessionHandle
+    # non-trivial TopologySpec / MembershipSpec (repro.comm.topology): only
+    # the wire backends route uplinks through aggregators or elastic cohorts
+    supports_topology: bool = False
 
     def supports(self, algo: Algorithm) -> bool:
         return True

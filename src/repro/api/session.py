@@ -157,10 +157,33 @@ def spec_from_dict(d: dict) -> ExperimentSpec:
         data["shape"] = tuple(data["shape"])
     comp = dict(d.pop("compressor"))
     fault = d.pop("fault")
+    topo = d.pop("topology", None)
+    mem = d.pop("membership", None)
+    topology = membership = None
+    if topo is not None or mem is not None:
+        from repro.comm.topology import (
+            MembershipEvent,
+            MembershipSpec,
+            TopologySpec,
+        )
+
+        if topo is not None:
+            topo = dict(topo)
+            if topo.get("edges") is not None:
+                topo["edges"] = tuple(tuple(g) for g in topo["edges"])
+            topology = TopologySpec(**topo)
+        if mem is not None:
+            membership = MembershipSpec(
+                events=tuple(
+                    MembershipEvent(**dict(e)) for e in dict(mem)["events"]
+                )
+            )
     return ExperimentSpec(
         data=DataSpec(**data),
         compressor=CompressorSpec(**comp),
         fault=FaultSpec(**fault) if fault is not None else None,
+        topology=topology,
+        membership=membership,
         **d,
     )
 

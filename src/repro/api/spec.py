@@ -21,6 +21,10 @@ from typing import Any
 from repro.comm.transport import FaultSpec
 from repro.api.accounting import ACCOUNTINGS
 
+# TopologySpec / MembershipSpec live in repro.comm.topology and are imported
+# lazily (string annotations below): topology.py pulls the jax-heavy star
+# stack, and `import repro.api` must stay cheap.
+
 # named problem shapes live in repro.data.DATASET_SHAPES (paper Tables 1-3)
 
 
@@ -167,6 +171,13 @@ class ExperimentSpec:
     on_dropout: str = "partial"  # "partial" | "resample" master fallback
     fault: FaultSpec | None = None  # dropout/straggler injection
 
+    # --- topology + membership (repro.comm.topology) ---------------------
+    # how uplinks reach the root: None/star = flat PR-1 star; tree inserts
+    # AggregatorNodes; mode="async" bounds staleness instead of barriering
+    topology: "TopologySpec | None" = None
+    # declarative join/leave schedule (flat sync star, wire backends only)
+    membership: "MembershipSpec | None" = None
+
     # --- accounting + execution backend ---------------------------------
     accounting: str = "payload"  # "payload" | "wire" sent_bits model
     backend: str = "local"  # registered backend name
@@ -219,6 +230,37 @@ class ExperimentSpec:
                 "participation (the server never sees the global gradient); "
                 "bound the run with rounds instead"
             )
+        if self.topology is not None or self.membership is not None:
+            from repro.comm.topology import MembershipSpec, TopologySpec
+
+            if self.topology is not None and not isinstance(
+                self.topology, TopologySpec
+            ):
+                raise TypeError(
+                    f"topology must be a TopologySpec, got "
+                    f"{type(self.topology).__name__}"
+                )
+            if self.membership is not None and not isinstance(
+                self.membership, MembershipSpec
+            ):
+                raise TypeError(
+                    f"membership must be a MembershipSpec, got "
+                    f"{type(self.membership).__name__}"
+                )
+            topo_live = self.topology is not None and not self.topology.trivial
+            mem_live = self.membership is not None and not self.membership.trivial
+            if topo_live and mem_live:
+                raise ValueError(
+                    "membership events compose with the flat sync star only "
+                    "(drop the non-trivial topology or the membership events)"
+                )
+            if (topo_live or mem_live) and kind == "pp":
+                raise ValueError(
+                    f"topology/membership do not compose with partial "
+                    f"participation ({self.algorithm!r}): PP samples a "
+                    "cohort per round already — spec one participation "
+                    "model at a time"
+                )
 
     # --- projections ------------------------------------------------------
 
@@ -275,16 +317,38 @@ class ExperimentSpec:
         describes.  Only :data:`RESTORE_VARIABLE_FIELDS` may differ (extend
         the round budget, change the early-stop tol, rebind the TCP host).
         """
-        mismatched = [
-            f.name
-            for f in dataclasses.fields(self)
-            if f.name not in self.RESTORE_VARIABLE_FIELDS
-            and getattr(self, f.name) != getattr(saved, f.name)
-        ]
+        def diff(mine, theirs, prefix=""):
+            """Mismatched field names; same-type nested spec dataclasses
+            (TopologySpec, CompressorSpec, ...) are descended so the error
+            names the exact subfield ("topology.fanout"), not the blob."""
+            out = []
+            for f in dataclasses.fields(mine):
+                name = f"{prefix}{f.name}"
+                if not prefix and f.name in self.RESTORE_VARIABLE_FIELDS:
+                    continue
+                a, b = getattr(mine, f.name), getattr(theirs, f.name)
+                if a == b:
+                    continue
+                if (
+                    dataclasses.is_dataclass(a)
+                    and not isinstance(a, type)
+                    and type(a) is type(b)
+                ):
+                    out.extend(diff(a, b, prefix=f"{name}."))
+                else:
+                    out.append(name)
+            return out
+
+        def resolve(obj, dotted):
+            for part in dotted.split("."):
+                obj = getattr(obj, part)
+            return obj
+
+        mismatched = diff(self, saved)
         if mismatched:
             detail = "; ".join(
-                f"{name}: checkpoint ran with {getattr(saved, name)!r}, "
-                f"spec asks for {getattr(self, name)!r}"
+                f"{name}: checkpoint ran with {resolve(saved, name)!r}, "
+                f"spec asks for {resolve(self, name)!r}"
                 for name in mismatched
             )
             raise ValueError(

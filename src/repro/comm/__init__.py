@@ -10,6 +10,11 @@ Layering (DESIGN.md §§3-6):
     star.py       full-participation master loop + client workers
     star_pp.py    partial-participation (FedNL-PP) StarPPMaster/StarPPClient
                   (run_pp_loopback here; TCP entry in repro.launch.multiproc)
+    topology.py   hierarchical layer above the star: tree-of-stars
+                  AggregatorNodes (AGG/SUBTREE frames), bounded-staleness
+                  async aggregation, elastic join/leave membership; masters
+                  are built through its make_master/open_loopback_master
+                  seams (migration rule 6)
     cost.py       bandwidth/latency cost model for the star exchange
 
 ``star``/``star_pp`` and ``transport`` are imported lazily as submodules

@@ -42,6 +42,24 @@ Partial-participation frames (FedNL-PP, Algorithm 3; DESIGN.md §5a):
               A real deployment detects failures by timeout; the explicit
               NACK keeps the loopback schedule synchronous while exercising
               the master's replaceable-client fallback paths.
+
+Topology frames (tree-of-stars, repro.comm.topology; DESIGN.md §13):
+
+    AGG       aggregator -> parent: one combined uplink per subtree.
+              combine="exact" payload: the subtree's per-leaf uplink
+              sections, verbatim (pack_agg_entries) — the root re-runs the
+              star master's aggregation ops over the reassembled leaf list,
+              so the tree trajectory is the star trajectory bit for bit.
+              combine="sum" payload: dense partial sums over the subtree
+              (pack_agg_hsum for the INIT phase, pack_agg_roundsum for
+              rounds) — bandwidth-optimal, documented ulp drift.
+    SUBTREE   master -> aggregator: coverage handshake before INIT —
+              combine mode + the leaf ids this subtree is expected to own
+              (pack_subtree).  The aggregator recursively queries its own
+              aggregator children, verifies the union of owned leaves, and
+              acks with the actual set; the root asserts the acks partition
+              client ids exactly (a mis-wired process tree fails loudly
+              before any algorithm state exists).
 """
 
 from __future__ import annotations
@@ -74,6 +92,9 @@ class MsgType(enum.IntEnum):
     SELECT = 7
     PP_UPDATE = 8
     DROP = 9
+    # hierarchical topology (repro.comm.topology)
+    AGG = 10
+    SUBTREE = 11
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,6 +228,111 @@ def unpack_pp_state(payload: bytes, d: int):
 def pack_pp_update(enc: EncodedMessage, dl, dg) -> bytes:
     """Algorithm-3 uplink triple: encode(S_i) || dl_i || dg_i (d FP64)."""
     return enc.data + struct.pack("<d", float(dl)) + pack_vector(dg)
+
+
+# ---------------------------------------------------------------------------
+# topology payloads (tree-of-stars; repro.comm.topology)
+# ---------------------------------------------------------------------------
+
+# one per-leaf uplink section inside an exact-combine AGG payload:
+# (client id, sent_elems, payload_bits, original frame wire bytes, payload)
+_AGG_ENTRY_FMT = "<IIQII"
+_AGG_ENTRY_SIZE = struct.calcsize(_AGG_ENTRY_FMT)
+
+
+def pack_agg_entries(entries) -> bytes:
+    """combine="exact" AGG payload: the subtree's leaf uplink sections,
+    verbatim.  ``entries`` is a list of ``(client, sent_elems, payload_bits,
+    frame_bytes, payload)`` tuples; ``frame_bytes`` preserves each leaf
+    frame's original wire size so the root's measured accounting matches a
+    flat star exactly.  Sub-aggregator entry lists simply concatenate — the
+    payload is depth-agnostic."""
+    out = [struct.pack("<I", len(entries))]
+    for client, sent_elems, payload_bits, frame_bytes, payload in entries:
+        out.append(
+            struct.pack(
+                _AGG_ENTRY_FMT,
+                client, sent_elems, payload_bits, frame_bytes, len(payload),
+            )
+        )
+        out.append(payload)
+    return b"".join(out)
+
+
+def unpack_agg_entries(payload: bytes):
+    """Inverse of pack_agg_entries -> list of entry tuples."""
+    (n,) = struct.unpack("<I", payload[:4])
+    off = 4
+    entries = []
+    for _ in range(n):
+        client, sent, pbits, fbytes, plen = struct.unpack(
+            _AGG_ENTRY_FMT, payload[off : off + _AGG_ENTRY_SIZE]
+        )
+        off += _AGG_ENTRY_SIZE
+        entries.append((client, sent, pbits, fbytes, payload[off : off + plen]))
+        off += plen
+    if off != len(payload):
+        raise ValueError(
+            f"AGG payload has {len(payload) - off} trailing bytes "
+            f"after {n} entries"
+        )
+    return entries
+
+
+def pack_agg_hsum(count: int, h_sum) -> bytes:
+    """combine="sum" INIT-phase AGG payload: subtree leaf count + the dense
+    sum of the subtree's packed initial Hessians (T FP64)."""
+    return struct.pack("<I", count) + pack_vector(h_sum)
+
+
+def unpack_agg_hsum(payload: bytes):
+    (count,) = struct.unpack("<I", payload[:4])
+    return count, unpack_vector(payload[4:])
+
+
+_AGG_SUM_FMT = "<IIQQQdd"
+_AGG_SUM_SIZE = struct.calcsize(_AGG_SUM_FMT)
+
+
+def pack_agg_roundsum(
+    count: int, d: int, abits: int, pbits: int, fbytes: int,
+    l_sum, f_sum, grad_sum, s_sum,
+) -> bytes:
+    """combine="sum" round AGG payload: dense partial sums over the subtree
+    — leaf count, summed bit counters (analytic / measured payload / frame
+    bytes), l/f sums, grad sum (d FP64) and decoded Hessian-correction sum
+    (T FP64)."""
+    return (
+        struct.pack(
+            _AGG_SUM_FMT, count, d, abits, pbits, fbytes,
+            float(l_sum), float(f_sum),
+        )
+        + pack_vector(grad_sum)
+        + pack_vector(s_sum)
+    )
+
+
+def unpack_agg_roundsum(payload: bytes):
+    count, d, abits, pbits, fbytes, l_sum, f_sum = struct.unpack(
+        _AGG_SUM_FMT, payload[:_AGG_SUM_SIZE]
+    )
+    grad_sum = unpack_vector(payload[_AGG_SUM_SIZE : _AGG_SUM_SIZE + 8 * d])
+    s_sum = unpack_vector(payload[_AGG_SUM_SIZE + 8 * d :])
+    return count, abits, pbits, fbytes, l_sum, f_sum, grad_sum, s_sum
+
+
+def pack_subtree(combine_id: int, leaf_ids) -> bytes:
+    """SUBTREE handshake payload: combine mode (0 exact | 1 sum) + the leaf
+    client ids (expected set downstream, actual owned set in the ack)."""
+    ids = sorted(int(i) for i in leaf_ids)
+    return struct.pack("<BI", combine_id, len(ids)) + struct.pack(
+        f"<{len(ids)}I", *ids
+    )
+
+
+def unpack_subtree(payload: bytes) -> tuple[int, tuple]:
+    combine_id, n = struct.unpack("<BI", payload[:5])
+    return combine_id, struct.unpack(f"<{n}I", payload[5 : 5 + 4 * n])
 
 
 def unpack_pp_update(payload: bytes, d: int):

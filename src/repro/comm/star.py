@@ -39,6 +39,20 @@ from repro.core.fednl import FedNLConfig, _client_oracles, master_step
 from repro.linalg import frob_norm_from_packed, triu_size
 
 
+@dataclasses.dataclass(frozen=True)
+class UplinkEntry:
+    """One client's uplink as the master aggregates it: the wire metadata
+    (bit counters + original frame size) and the raw uplink payload.  A flat
+    star builds one per UPLINK frame; a tree master reassembles them from
+    AGG payloads — same type, same aggregation tail, no op drift."""
+
+    client: int
+    sent_elems: int
+    payload_bits: int
+    frame_bytes: int
+    payload: bytes
+
+
 @dataclasses.dataclass
 class StarRunResult:
     """Trajectory + *measured* wire accounting of a star-topology run."""
@@ -164,7 +178,18 @@ class StarMaster:
     ``drive`` is the loopback hook — called after every broadcast to let the
     in-process clients consume their frames (a no-op over TCP, where clients
     run in their own processes).
+
+    Subclass seams (repro.comm.topology): ``uplink_type`` is the frame kind
+    one round of collection expects (AGG for a tree master),
+    ``_gather_uplinks`` turns the collected frames into :class:`UplinkEntry`
+    rows in client-id order, and ``_on_init_ack`` / ``_on_decoded`` observe
+    per-client state as it crosses the master (membership mirrors).  The
+    aggregation tail itself (``_aggregate``) is shared — every master that
+    claims star bit-parity runs literally the same jnp ops.
     """
+
+    #: frame type one round of uplink collection expects from self.conns
+    uplink_type = MsgType.UPLINK
 
     def __init__(
         self,
@@ -208,40 +233,69 @@ class StarMaster:
             got[cid] = frame
         return got
 
+    def _on_init_ack(self, cid: int, h_i: jax.Array) -> None:
+        """Hook: one client's initial H_i^0 crossed the master (no-op here;
+        the elastic master mirrors it for exact contribution retirement)."""
+
+    def _on_decoded(self, cid: int, s_i: jax.Array) -> None:
+        """Hook: one client's decoded correction S_i crossed the master."""
+
     def init_handshake(self) -> None:
         """INIT broadcast; clients report H_i^0 for the chosen hess0 policy."""
         self._broadcast(
             Frame(type=MsgType.INIT, payload=protocol.pack_vector(self.x))
         )
         acks = self._collect(MsgType.INIT_ACK)
-        self.h_global = jnp.mean(
-            jnp.stack(
-                [protocol.unpack_vector(acks[cid].payload) for cid in self.order]
-            ),
-            axis=0,
-        )
-
-    def step_round(self, r: int) -> dict:
-        """One full protocol round: broadcast x, collect uplinks, aggregate,
-        Newton step.  Returns the round's scalar metrics + bit counters."""
-        self._broadcast(
-            Frame(type=MsgType.ROUND, round=r, payload=protocol.pack_vector(self.x))
-        )
-        self.x_hist.append(np.asarray(self.x))
-        ups = self._collect(MsgType.UPLINK)
-
-        grads, s_list, l_list, f_list = [], [], [], []
-        round_pbits = round_abits = round_fbytes = 0
+        h_list = []
         for cid in self.order:
-            fr = ups[cid]
-            grad_i, l_i, f_i, hess_bytes = protocol.unpack_uplink(fr.payload, self.d)
-            s_list.append(self.codec.decode(hess_bytes, fr.sent_elems))
+            h_i = protocol.unpack_vector(acks[cid].payload)
+            self._on_init_ack(cid, h_i)
+            h_list.append(h_i)
+        self.h_global = jnp.mean(jnp.stack(h_list), axis=0)
+
+    def _gather_uplinks(self, r: int) -> list[UplinkEntry]:
+        """Collect one uplink frame per connection -> entries in client-id
+        order (== the simulation's client axis).  A tree master overrides
+        this to reassemble leaf entries out of AGG payloads instead."""
+        ups = self._collect(MsgType.UPLINK)
+        return [
+            UplinkEntry(
+                client=cid,
+                sent_elems=ups[cid].sent_elems,
+                payload_bits=ups[cid].payload_bits,
+                frame_bytes=ups[cid].wire_bytes,
+                payload=ups[cid].payload,
+            )
+            for cid in self.order
+        ]
+
+    def _decode_entries(self, entries: list[UplinkEntry]):
+        """Unpack + decode the uplink entries (in the order given) into the
+        per-client lists the aggregation consumes, accumulating the round's
+        bit counters.  One copy of the decode loop — the tree/async/elastic
+        masters reuse it so their per-entry op sequence cannot drift from
+        the flat star's."""
+        grads, s_list, l_list, f_list = [], [], [], []
+        pbits = abits = fbytes = 0
+        for e in entries:
+            grad_i, l_i, f_i, hess_bytes = protocol.unpack_uplink(e.payload, self.d)
+            s_i = self.codec.decode(hess_bytes, e.sent_elems)
+            self._on_decoded(e.client, s_i)
+            s_list.append(s_i)
             grads.append(grad_i)
             l_list.append(l_i)
             f_list.append(f_i)
-            round_pbits += fr.payload_bits
-            round_abits += int(message_bits(self.comp, fr.sent_elems))
-            round_fbytes += fr.wire_bytes
+            pbits += e.payload_bits
+            abits += int(message_bits(self.comp, e.sent_elems))
+            fbytes += e.frame_bytes
+        return grads, s_list, l_list, f_list, abits, pbits, fbytes
+
+    def _aggregate(self, entries: list[UplinkEntry]) -> dict:
+        """Decode, average, Newton step — the master section of Algorithm 1
+        over already-gathered uplink entries."""
+        grads, s_list, l_list, f_list, abits, pbits, fbytes = (
+            self._decode_entries(entries)
+        )
 
         # identical jnp aggregation ops to make_fednl_round's master section
         grad = jnp.mean(jnp.stack(grads), axis=0)
@@ -256,10 +310,19 @@ class StarMaster:
         return {
             "grad_norm": float(jnp.linalg.norm(grad)),
             "f": float(f),
-            "sent_bits": round_abits,
-            "measured_payload_bits": round_pbits,
-            "measured_frame_bytes": round_fbytes,
+            "sent_bits": abits,
+            "measured_payload_bits": pbits,
+            "measured_frame_bytes": fbytes,
         }
+
+    def step_round(self, r: int) -> dict:
+        """One full protocol round: broadcast x, collect uplinks, aggregate,
+        Newton step.  Returns the round's scalar metrics + bit counters."""
+        self._broadcast(
+            Frame(type=MsgType.ROUND, round=r, payload=protocol.pack_vector(self.x))
+        )
+        self.x_hist.append(np.asarray(self.x))
+        return self._aggregate(self._gather_uplinks(r))
 
     def replay_round(self, r: int, x_bcast: np.ndarray) -> None:
         """Resume support: re-broadcast a recorded iterate so clients replay
@@ -274,7 +337,7 @@ class StarMaster:
             )
         )
         self.x_hist.append(np.asarray(x_bcast))
-        self._collect(MsgType.UPLINK)
+        self._collect(self.uplink_type)
 
     def stop(self) -> None:
         """Broadcast STOP (idempotent) so client loops exit cleanly."""

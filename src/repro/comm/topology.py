@@ -1,0 +1,1105 @@
+"""Topology layer above the star transports (DESIGN.md §13).
+
+The flat star of ``repro.comm.star`` assumes every client dials one master
+and every round barriers on all of them.  Real fleets aggregate
+hierarchically (edge -> regional -> root) and tolerate stragglers; this
+module adds that layer *above* the existing framed protocol, without
+touching the client:
+
+  * **Tree-of-stars** (:class:`TopologySpec` kind="tree") — intermediate
+    :class:`AggregatorNode` s each own a subtree, run the server invariant
+    on partial sums (H_sub += alpha * sum_i S_i), and forward ONE combined
+    uplink per subtree (AGG frames).  ``combine="exact"`` (default) carries
+    the subtree's per-leaf uplink sections verbatim so the root re-runs the
+    flat star's aggregation ops over the reassembled leaf list — the tree
+    trajectory replays the star bit for bit, at any depth.
+    ``combine="sum"`` carries dense partial sums instead — bandwidth-optimal
+    (one T-vector per subtree instead of per client), with documented
+    ulp-level drift from FP addition reassociation (the same opt-in contract
+    as the sweep engine's ``batch="vmap"``).
+
+  * **Bounded-staleness async aggregation** (mode="async") — the root
+    assigns work to idle clients each round and applies updates as they
+    arrive under the contract that an update computed against x^r is folded
+    into the invariant no later than commit ``r + staleness``; staleness=0
+    degenerates to the sync barrier bit for bit.  Arrival delays are a pure
+    function of ``(schedule_seed, round, client)``, so a run — and its
+    checkpoint/resume replay — is deterministic given the spec alone.
+
+  * **Elastic membership** (:class:`MembershipSpec`) — join/leave as
+    first-class spec'd events on the PR-5 replay spine: a joining client
+    rebuilds H_i from the spec via a late INIT at the current iterate (its
+    T*64-bit ack is counted into that round's uplink accounting exactly), a
+    leaving client's contribution is retired by recomputing the invariant
+    from the master's per-client mirrors (H_global = mean of the remaining
+    H_i, exact — not an approximate subtraction).  Distinct from FedNL-PP:
+    PP samples a fixed cohort per round; membership changes the cohort.
+
+Construction goes through :func:`make_master` / :func:`open_loopback_master`
+— the only supported seams (scripts/check_api_migration.py rule 6 flags
+direct ``StarMaster`` / ``AggregatorNode`` construction outside repro.comm).
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import protocol, wire
+from repro.comm.protocol import Frame, MsgType, recv_frame, send_frame
+from repro.comm.star import StarClient, StarMaster, UplinkEntry
+from repro.comm.transport import Connection, loopback_pair
+from repro.compressors import get_compressor
+from repro.compressors.core import message_bits
+from repro.core.fednl import FedNLConfig, master_step
+from repro.linalg import triu_size
+
+_COMBINE_IDS = {"exact": 0, "sum": 1}
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """How client updates reach the root, declaratively.
+
+    kind="star" is the flat PR-1 topology; kind="tree" inserts aggregators:
+    either a balanced tree (``fanout`` children per node, ``depth`` hops from
+    root to leaf — depth=2 is root -> aggregators -> clients) or an explicit
+    ``edges`` grouping (a tuple of client-id tuples, one per depth-2
+    aggregator).  ``combine`` picks the AGG payload: "exact" preserves star
+    bit-parity, "sum" trades it for O(fanout) uplink bandwidth at the root.
+
+    mode="async" (star kind only) replaces the round barrier with bounded
+    staleness: an update computed against x^r is applied no later than
+    commit r + ``staleness``; per-(round, client) arrival delays are drawn
+    from ``numpy.default_rng((schedule_seed, round, client))`` over
+    [0, max_delay], so the schedule is part of the spec, not the wall clock.
+    """
+
+    kind: str = "star"  # "star" | "tree"
+    fanout: int = 2  # balanced tree: children per internal node
+    depth: int = 2  # hops root -> leaf (2 = one aggregator layer)
+    edges: tuple[tuple[int, ...], ...] | None = None  # explicit depth-2 groups
+    combine: str = "exact"  # "exact" (bit-parity) | "sum" (partial sums)
+    mode: str = "sync"  # "sync" | "async" (bounded staleness; star only)
+    staleness: int = 0  # async: max commits an in-flight update may lag
+    max_delay: int = 0  # async: schedule draws delays from [0, max_delay]
+    schedule_seed: int = 0  # async: arrival-schedule PRNG seed
+
+    def __post_init__(self):
+        if self.kind not in ("star", "tree"):
+            raise ValueError(f"unknown topology kind {self.kind!r}")
+        if self.combine not in _COMBINE_IDS:
+            raise ValueError(
+                f"unknown combine {self.combine!r}; use 'exact' | 'sum'"
+            )
+        if self.mode not in ("sync", "async"):
+            raise ValueError(f"unknown topology mode {self.mode!r}")
+        if self.kind == "tree":
+            if self.mode == "async":
+                raise ValueError(
+                    "async aggregation composes with the star kind only "
+                    "(an async tree would need per-subtree staleness "
+                    "contracts; spec one layer at a time)"
+                )
+            if self.edges is None and (self.fanout < 2 or self.depth < 2):
+                raise ValueError(
+                    f"a balanced tree needs fanout >= 2 and depth >= 2, got "
+                    f"fanout={self.fanout}, depth={self.depth}"
+                )
+        if self.staleness < 0 or self.max_delay < 0:
+            raise ValueError("staleness and max_delay must be >= 0")
+        if self.mode == "sync" and self.staleness > 0:
+            raise ValueError("staleness > 0 requires mode='async'")
+
+    @property
+    def trivial(self) -> bool:
+        """True when this spec describes the plain flat sync star (the
+        TopologySpec() default — equivalent to topology=None)."""
+        return self.kind == "star" and self.mode == "sync"
+
+    def resolve(self, n_clients: int) -> tuple:
+        """The root's children as a tuple of subtrees; each subtree is a
+        tuple whose elements are leaf client ids (ints) or nested subtrees.
+        Balanced trees split the id range contiguously; explicit ``edges``
+        must partition ``range(n_clients)`` exactly."""
+        if self.kind != "tree":
+            raise ValueError("resolve() applies to tree topologies only")
+        if self.edges is not None:
+            groups = tuple(tuple(int(i) for i in g) for g in self.edges)
+            flat = sorted(i for g in groups for i in g)
+            if flat != list(range(n_clients)) or any(not g for g in groups):
+                raise ValueError(
+                    f"edges must partition client ids 0..{n_clients - 1} "
+                    f"into non-empty groups, got {self.edges!r}"
+                )
+            return groups
+
+        def build(ids: list[int], depth: int) -> tuple:
+            if depth <= 1:
+                return tuple(ids)
+            k = min(self.fanout, len(ids))
+            chunks = [list(c) for c in np.array_split(ids, k) if len(c)]
+            return tuple(build(c, depth - 1) for c in chunks)
+
+        if n_clients < self.fanout:
+            raise ValueError(
+                f"tree fanout {self.fanout} exceeds n_clients={n_clients}"
+            )
+        return build(list(range(n_clients)), self.depth)
+
+
+def subtree_leaves(subtree) -> list[int]:
+    """Flatten a resolve() subtree into its sorted leaf client ids."""
+    out: list[int] = []
+    for node in subtree:
+        if isinstance(node, (tuple, list)):
+            out.extend(subtree_leaves(node))
+        else:
+            out.append(int(node))
+    return sorted(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    """One elastic-membership event, applied at the START of ``round``."""
+
+    round: int
+    action: str  # "join" | "leave"
+    client: int
+
+    def __post_init__(self):
+        if self.action not in ("join", "leave"):
+            raise ValueError(f"unknown membership action {self.action!r}")
+        if self.round < 0 or self.client < 0:
+            raise ValueError("membership round and client must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipSpec:
+    """A declarative join/leave schedule.  Clients with a ``join`` event sit
+    out (connected, idle) until their round; ``leave`` retires a client's
+    contribution from the invariant exactly.  Events are part of the spec,
+    so a restored session replays the identical cohort history."""
+
+    events: tuple[MembershipEvent, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    @property
+    def trivial(self) -> bool:
+        return not self.events
+
+    def initial_active(self, n_clients: int) -> list[int]:
+        """Clients active from round 0: everyone without a join event."""
+        joiners = {e.client for e in self.events if e.action == "join"}
+        bad = [e.client for e in self.events if e.client >= n_clients]
+        if bad:
+            raise ValueError(
+                f"membership events name clients {sorted(set(bad))} outside "
+                f"0..{n_clients - 1}"
+            )
+        active = [i for i in range(n_clients) if i not in joiners]
+        if not active:
+            raise ValueError("membership schedule leaves round 0 empty")
+        return active
+
+    def events_at(self, r: int) -> list[MembershipEvent]:
+        return [e for e in self.events if e.round == r]
+
+
+# ---------------------------------------------------------------------------
+# AggregatorNode: one subtree's hub
+# ---------------------------------------------------------------------------
+
+class AggregatorNode:
+    """An intermediate hub: serves its parent like a client, drives its
+    children like a master.
+
+    Per round it fans the broadcast down, collects one frame per child
+    (UPLINK from leaves, AGG from sub-aggregators), maintains the server
+    invariant on its partial sums (h_sub += alpha * sum_i S_i — the FedNL
+    master recursion restricted to the subtree), and uplinks one AGG frame.
+    In combine="exact" that frame carries the leaf sections verbatim; in
+    combine="sum" it carries the decoded dense sums.
+
+    ``agg_children`` names which child connections are sub-aggregators
+    (needed to route the SUBTREE coverage handshake; leaves never see
+    SUBTREE frames).  ``drive`` is the loopback hook that lets in-process
+    children consume fanned-down frames.
+    """
+
+    def __init__(
+        self,
+        node_id: int,
+        parent: Connection,
+        children: dict[int, Connection],
+        d: int,
+        cfg: FedNLConfig,
+        combine: str = "exact",
+        agg_children: frozenset[int] | set[int] = frozenset(),
+        drive: Callable[[], None] | None = None,
+    ):
+        self.node_id = node_id
+        self.parent = parent
+        self.children = children
+        self.corder = sorted(children)
+        self.d = d
+        self.cfg = cfg
+        self.combine = combine
+        self.agg_children = frozenset(agg_children)
+        self.drive = drive
+        t = triu_size(d)
+        self.t = t
+        self.comp = get_compressor(cfg.compressor, t, cfg.k_for(d))
+        self.codec = wire.make_codec(self.comp, t)
+        self.alpha = self.comp.alpha if cfg.alpha is None else cfg.alpha
+        self.h_sub = None  # sum of subtree H_i (invariant on partial sums)
+        self.leaf_count = 0
+
+    def _fan_down(self, frame: Frame) -> None:
+        for c in self.corder:
+            send_frame(self.children[c], frame)
+        if self.drive is not None:
+            self.drive()
+
+    def _collect_entries(self, leaf_type: MsgType) -> list[tuple]:
+        """One frame per child -> flat leaf entry list in client-id order
+        (sub-aggregator AGG entry lists concatenate in)."""
+        entries: list[tuple] = []
+        for c in self.corder:
+            fr = recv_frame(self.children[c])
+            if fr.type == MsgType.AGG:
+                entries.extend(protocol.unpack_agg_entries(fr.payload))
+            elif fr.type == leaf_type:
+                entries.append(
+                    (fr.client, fr.sent_elems, fr.payload_bits,
+                     fr.wire_bytes, fr.payload)
+                )
+            else:
+                raise ValueError(
+                    f"aggregator {self.node_id} expected {leaf_type} | AGG "
+                    f"from child {c}, got {fr.type}"
+                )
+        entries.sort(key=lambda e: e[0])
+        return entries
+
+    def _reply(self, frame_round: int, payload: bytes) -> None:
+        send_frame(
+            self.parent,
+            Frame(
+                type=MsgType.AGG,
+                round=frame_round,
+                client=self.node_id,
+                payload=payload,
+            ),
+        )
+
+    def _handle_subtree(self, frame: Frame) -> None:
+        combine_id, expected = protocol.unpack_subtree(frame.payload)
+        if combine_id != _COMBINE_IDS[self.combine]:
+            raise ValueError(
+                f"aggregator {self.node_id} wired combine={self.combine!r} "
+                f"but the master announced combine id {combine_id}"
+            )
+        owned: list[int] = []
+        for c in self.corder:
+            if c in self.agg_children:
+                send_frame(
+                    self.children[c],
+                    Frame(type=MsgType.SUBTREE,
+                          payload=protocol.pack_subtree(combine_id, ())),
+                )
+            else:
+                owned.append(c)  # leaf conns are keyed by client id
+        if self.drive is not None:
+            self.drive()
+        for c in self.corder:
+            if c in self.agg_children:
+                ack = recv_frame(self.children[c])
+                if ack.type != MsgType.SUBTREE:
+                    raise ValueError(
+                        f"aggregator {self.node_id} expected SUBTREE ack "
+                        f"from child {c}, got {ack.type}"
+                    )
+                _, sub_owned = protocol.unpack_subtree(ack.payload)
+                owned.extend(sub_owned)
+        owned = sorted(owned)
+        if expected and list(expected) != owned:
+            raise ValueError(
+                f"subtree {self.node_id} owns leaves {owned} but the master "
+                f"expected {sorted(expected)} — mis-wired process tree"
+            )
+        self.leaf_count = len(owned)
+        send_frame(
+            self.parent,
+            Frame(
+                type=MsgType.SUBTREE,
+                client=self.node_id,
+                payload=protocol.pack_subtree(combine_id, owned),
+            ),
+        )
+
+    def _handle_init(self, frame: Frame) -> None:
+        self._fan_down(frame)
+        if self.combine == "exact":
+            entries = self._collect_entries(MsgType.INIT_ACK)
+            h_list = [protocol.unpack_vector(e[4]) for e in entries]
+            self.h_sub = jnp.sum(jnp.stack(h_list), axis=0)
+            self._reply(frame.round, protocol.pack_agg_entries(entries))
+            return
+        # combine="sum": fold leaf vectors / sub-agg hsums into one dense sum
+        count = 0
+        h_list = []
+        for c in self.corder:
+            fr = recv_frame(self.children[c])
+            if fr.type == MsgType.AGG:
+                sub_count, sub_h = protocol.unpack_agg_hsum(fr.payload)
+                count += sub_count
+                h_list.append(sub_h)
+            elif fr.type == MsgType.INIT_ACK:
+                count += 1
+                h_list.append(protocol.unpack_vector(fr.payload))
+            else:
+                raise ValueError(
+                    f"aggregator {self.node_id} expected INIT_ACK | AGG, "
+                    f"got {fr.type}"
+                )
+        self.h_sub = jnp.sum(jnp.stack(h_list), axis=0)
+        self._reply(frame.round, protocol.pack_agg_hsum(count, self.h_sub))
+
+    def _handle_round(self, frame: Frame) -> None:
+        self._fan_down(frame)
+        if self.combine == "exact":
+            entries = self._collect_entries(MsgType.UPLINK)
+            s_list = [
+                self.codec.decode(
+                    protocol.unpack_uplink(e[4], self.d)[3], e[1]
+                )
+                for e in entries
+            ]
+            # the subtree's server invariant on partial sums
+            self.h_sub = self.h_sub + self.alpha * jnp.sum(
+                jnp.stack(s_list), axis=0
+            )
+            self._reply(frame.round, protocol.pack_agg_entries(entries))
+            return
+        count = abits = pbits = fbytes = 0
+        grad_list, s_list, l_parts, f_parts = [], [], [], []
+        for c in self.corder:
+            fr = recv_frame(self.children[c])
+            if fr.type == MsgType.AGG:
+                (sub_n, sub_a, sub_p, sub_f, sub_l, sub_fv, sub_grad, sub_s) = (
+                    protocol.unpack_agg_roundsum(fr.payload)
+                )
+                count += sub_n
+                abits += sub_a
+                pbits += sub_p
+                fbytes += sub_f
+                l_parts.append(jnp.float64(sub_l))
+                f_parts.append(jnp.float64(sub_fv))
+                grad_list.append(sub_grad)
+                s_list.append(sub_s)
+            elif fr.type == MsgType.UPLINK:
+                grad_i, l_i, f_i, hess_bytes = protocol.unpack_uplink(
+                    fr.payload, self.d
+                )
+                count += 1
+                abits += int(message_bits(self.comp, fr.sent_elems))
+                pbits += fr.payload_bits
+                fbytes += fr.wire_bytes
+                l_parts.append(l_i)
+                f_parts.append(f_i)
+                grad_list.append(grad_i)
+                s_list.append(self.codec.decode(hess_bytes, fr.sent_elems))
+            else:
+                raise ValueError(
+                    f"aggregator {self.node_id} expected UPLINK | AGG, "
+                    f"got {fr.type}"
+                )
+        grad_sum = jnp.sum(jnp.stack(grad_list), axis=0)
+        s_sum = jnp.sum(jnp.stack(s_list), axis=0)
+        self.h_sub = self.h_sub + self.alpha * s_sum
+        self._reply(
+            frame.round,
+            protocol.pack_agg_roundsum(
+                count, self.d, abits, pbits, fbytes,
+                jnp.sum(jnp.stack(l_parts)), jnp.sum(jnp.stack(f_parts)),
+                grad_sum, s_sum,
+            ),
+        )
+
+    def serve_once(self) -> bool:
+        """Process one parent frame; returns False on STOP."""
+        frame = recv_frame(self.parent)
+        if frame.type == MsgType.STOP:
+            self._fan_down(frame)
+            return False
+        if frame.type == MsgType.SUBTREE:
+            self._handle_subtree(frame)
+        elif frame.type == MsgType.INIT:
+            self._handle_init(frame)
+        elif frame.type == MsgType.ROUND:
+            self._handle_round(frame)
+        else:
+            raise ValueError(
+                f"aggregator {self.node_id} got unexpected frame {frame.type}"
+            )
+        return True
+
+    def run(self) -> None:
+        """Blocking serve loop (TCP aggregator processes)."""
+        while self.serve_once():
+            pass
+
+
+def build_aggregator(
+    node_id: int,
+    parent: Connection,
+    children: dict[int, Connection],
+    d: int,
+    cfg: FedNLConfig,
+    combine: str = "exact",
+    agg_children: frozenset[int] | set[int] = frozenset(),
+    drive: Callable[[], None] | None = None,
+) -> AggregatorNode:
+    """The construction seam for aggregators living outside repro.comm
+    (launch/multiproc spawns them in their own processes; migration rule 6
+    keeps ``AggregatorNode(...)`` itself comm-internal)."""
+    return AggregatorNode(
+        node_id, parent, children, d, cfg,
+        combine=combine, agg_children=agg_children, drive=drive,
+    )
+
+
+# ---------------------------------------------------------------------------
+# TreeMaster: the root of a tree-of-stars
+# ---------------------------------------------------------------------------
+
+class TreeMaster(StarMaster):
+    """StarMaster whose connections lead to aggregators instead of clients.
+
+    combine="exact": AGG payloads are reassembled into the flat leaf entry
+    list (client-id order) and fed to the inherited aggregation tail — the
+    identical jnp ops over the identical operands, so the trajectory AND the
+    measured bit accounting reproduce the flat star exactly.
+    combine="sum": dense partial sums are folded with one final division by
+    n (documented ulp drift; bandwidth-optimal).
+    """
+
+    uplink_type = MsgType.AGG
+
+    def __init__(
+        self,
+        conns: dict[int, Connection],
+        d: int,
+        cfg: FedNLConfig,
+        topology: TopologySpec,
+        n_clients: int,
+        x0: jax.Array | None = None,
+        drive: Callable[[], None] | None = None,
+    ):
+        super().__init__(conns, d, cfg, x0=x0, drive=drive)
+        self.topology = topology
+        self.n_clients = n_clients
+        self.combine = topology.combine
+        shape = topology.resolve(n_clients)
+        if len(shape) != len(conns):
+            raise ValueError(
+                f"topology resolves to {len(shape)} root subtrees but "
+                f"{len(conns)} aggregator connections are wired"
+            )
+        self._expected = {i: subtree_leaves(shape[i]) for i in self.order}
+
+    def _subtree_handshake(self) -> None:
+        combine_id = _COMBINE_IDS[self.combine]
+        for i in self.order:
+            send_frame(
+                self.conns[i],
+                Frame(
+                    type=MsgType.SUBTREE,
+                    payload=protocol.pack_subtree(
+                        combine_id, self._expected[i]
+                    ),
+                ),
+            )
+        if self.drive is not None:
+            self.drive()
+        covered: list[int] = []
+        for i in self.order:
+            ack = recv_frame(self.conns[i])
+            if ack.type != MsgType.SUBTREE or ack.client != i:
+                raise ValueError(
+                    f"expected SUBTREE ack from aggregator {i}, got "
+                    f"{ack.type} from {ack.client}"
+                )
+            _, owned = protocol.unpack_subtree(ack.payload)
+            covered.extend(owned)
+        if sorted(covered) != list(range(self.n_clients)):
+            raise ValueError(
+                f"subtree acks cover leaves {sorted(covered)}, not the "
+                f"client id partition 0..{self.n_clients - 1}"
+            )
+
+    def _entries_from_aggs(self, frames: dict[int, Frame]) -> list[UplinkEntry]:
+        entries = [
+            UplinkEntry(*e)
+            for i in self.order
+            for e in protocol.unpack_agg_entries(frames[i].payload)
+        ]
+        entries.sort(key=lambda e: e.client)
+        ids = [e.client for e in entries]
+        if ids != list(range(self.n_clients)):
+            raise ValueError(
+                f"AGG entries cover clients {ids}, expected "
+                f"0..{self.n_clients - 1}"
+            )
+        return entries
+
+    def init_handshake(self) -> None:
+        self._subtree_handshake()
+        self._broadcast(
+            Frame(type=MsgType.INIT, payload=protocol.pack_vector(self.x))
+        )
+        frames = self._collect(MsgType.AGG)
+        if self.combine == "exact":
+            h_list = []
+            for e in self._entries_from_aggs(frames):
+                h_i = protocol.unpack_vector(e.payload)
+                self._on_init_ack(e.client, h_i)
+                h_list.append(h_i)
+            # the flat star's init aggregation, op for op
+            self.h_global = jnp.mean(jnp.stack(h_list), axis=0)
+            return
+        count = 0
+        h_sums = []
+        for i in self.order:
+            sub_count, sub_h = protocol.unpack_agg_hsum(frames[i].payload)
+            count += sub_count
+            h_sums.append(sub_h)
+        if count != self.n_clients:
+            raise ValueError(
+                f"AGG hsums cover {count} leaves, expected {self.n_clients}"
+            )
+        self.h_global = jnp.sum(jnp.stack(h_sums), axis=0) / self.n_clients
+
+    def _gather_uplinks(self, r: int) -> list[UplinkEntry]:
+        return self._entries_from_aggs(self._collect(MsgType.AGG))
+
+    def step_round(self, r: int) -> dict:
+        if self.combine == "exact":
+            return super().step_round(r)
+        self._broadcast(
+            Frame(type=MsgType.ROUND, round=r,
+                  payload=protocol.pack_vector(self.x))
+        )
+        self.x_hist.append(np.asarray(self.x))
+        frames = self._collect(MsgType.AGG)
+        count = abits = pbits = fbytes = 0
+        grad_sums, s_sums, l_sums, f_sums = [], [], [], []
+        for i in self.order:
+            (sub_n, sub_a, sub_p, sub_f, sub_l, sub_fv, sub_grad, sub_s) = (
+                protocol.unpack_agg_roundsum(frames[i].payload)
+            )
+            count += sub_n
+            abits += sub_a
+            pbits += sub_p
+            fbytes += sub_f
+            l_sums.append(jnp.float64(sub_l))
+            f_sums.append(jnp.float64(sub_fv))
+            grad_sums.append(sub_grad)
+            s_sums.append(sub_s)
+        n = self.n_clients
+        if count != n:
+            raise ValueError(f"AGG sums cover {count} leaves, expected {n}")
+        grad = jnp.sum(jnp.stack(grad_sums), axis=0) / n
+        s = jnp.sum(jnp.stack(s_sums), axis=0) / n
+        l = jnp.sum(jnp.stack(l_sums)) / n
+        f = jnp.sum(jnp.stack(f_sums)) / n
+        x_new = master_step(self.x, self.h_global, grad, l, self.cfg)
+        self.h_global = self.h_global + self.alpha * s
+        self.x = x_new
+        return {
+            "grad_norm": float(jnp.linalg.norm(grad)),
+            "f": float(f),
+            "sent_bits": abits,
+            "measured_payload_bits": pbits,
+            "measured_frame_bytes": fbytes,
+        }
+
+
+# ---------------------------------------------------------------------------
+# AsyncStarMaster: bounded-staleness aggregation
+# ---------------------------------------------------------------------------
+
+class AsyncStarMaster(StarMaster):
+    """Flat star without the barrier: commits fold in whatever arrived.
+
+    Per commit r: every idle client is assigned the current iterate (one
+    ROUND frame); an assignment made at round a becomes *visible* at round
+    ``a + min(delay(a, i), staleness)`` where the delay is drawn from the
+    spec'd arrival schedule (a client's very first assignment is always
+    visible immediately — the fleet starts synchronized).  The commit then
+    averages the latest known gradients of ALL clients (stale entries
+    included) and folds the freshly arrived corrections into H (absent
+    clients contribute S_i = 0 — exactly the "master keeps H_i for silent
+    clients" reading of the invariant).  At staleness=0 every client is
+    fresh every round and the ops degenerate to StarMaster.step_round
+    literally.
+
+    Determinism: the schedule is a pure function of (schedule_seed, round,
+    client), the master performs all transport ops in (round, client-id)
+    order, and clients advance their PRNG spine once per ROUND received —
+    so replaying the broadcast history reproduces every table, bit for bit,
+    which is what checkpoint/resume rides on.
+    """
+
+    def __init__(
+        self,
+        conns: dict[int, Connection],
+        d: int,
+        cfg: FedNLConfig,
+        topology: TopologySpec,
+        x0: jax.Array | None = None,
+        drive: Callable[[], None] | None = None,
+    ):
+        super().__init__(conns, d, cfg, x0=x0, drive=drive)
+        self.staleness = topology.staleness
+        self.max_delay = topology.max_delay
+        self.schedule_seed = topology.schedule_seed
+        # in-flight assignments: client -> (assigned round, visible round)
+        self._inflight: dict[int, tuple[int, int]] = {}
+        # last visible assignment round per client (-1 = never)
+        self._last: dict[int, int] = {cid: -1 for cid in self.order}
+        self._grad_tab: dict[int, jax.Array] = {}
+        self._l_tab: dict[int, jax.Array] = {}
+        self._f_tab: dict[int, jax.Array] = {}
+
+    def _delay(self, cid: int, r: int) -> int:
+        if self.staleness == 0 or self.max_delay == 0:
+            return 0
+        rng = np.random.default_rng((self.schedule_seed, r, cid))
+        return int(rng.integers(0, self.max_delay + 1))
+
+    def _exec_round(self, r: int, x_bcast: jax.Array, commit: bool):
+        # assign idle clients (client-id order; first assignment lands now)
+        for cid in self.order:
+            if cid not in self._inflight:
+                send_frame(
+                    self.conns[cid],
+                    Frame(type=MsgType.ROUND, round=r,
+                          payload=protocol.pack_vector(x_bcast)),
+                )
+                lag = 0 if self._last[cid] < 0 else min(
+                    self._delay(cid, r), self.staleness
+                )
+                self._inflight[cid] = (r, r + lag)
+        if self.drive is not None:
+            self.drive()
+        self.x_hist.append(np.asarray(x_bcast))
+
+        # deliveries visible at this commit, in client-id order
+        arrived = sorted(
+            cid for cid, (_, due) in self._inflight.items() if due <= r
+        )
+        s_new: dict[int, jax.Array] = {}
+        pbits = abits = fbytes = 0
+        for cid in arrived:
+            a, _ = self._inflight.pop(cid)
+            fr = recv_frame(self.conns[cid])
+            if fr.type != MsgType.UPLINK or fr.client != cid:
+                raise ValueError(
+                    f"async master expected UPLINK from {cid}, got "
+                    f"{fr.type} from {fr.client}"
+                )
+            grad_i, l_i, f_i, hess_bytes = protocol.unpack_uplink(
+                fr.payload, self.d
+            )
+            s_i = self.codec.decode(hess_bytes, fr.sent_elems)
+            self._on_decoded(cid, s_i)
+            self._grad_tab[cid] = grad_i
+            self._l_tab[cid] = l_i
+            self._f_tab[cid] = f_i
+            self._last[cid] = a
+            s_new[cid] = s_i
+            pbits += fr.payload_bits
+            abits += int(message_bits(self.comp, fr.sent_elems))
+            fbytes += fr.wire_bytes
+
+        if not commit:
+            return None
+        t = triu_size(self.d)
+        zero_s = jnp.zeros(t, dtype=jnp.float64)
+        grads = [self._grad_tab[cid] for cid in self.order]
+        l_list = [self._l_tab[cid] for cid in self.order]
+        f_list = [self._f_tab[cid] for cid in self.order]
+        s_full = [s_new.get(cid, zero_s) for cid in self.order]
+        # at staleness=0 these are the StarMaster aggregation ops verbatim
+        grad = jnp.mean(jnp.stack(grads), axis=0)
+        s = jnp.mean(jnp.stack(s_full), axis=0)
+        l = jnp.mean(jnp.stack(l_list))
+        f = jnp.mean(jnp.stack(f_list))
+        x_new = master_step(self.x, self.h_global, grad, l, self.cfg)
+        self.h_global = self.h_global + self.alpha * s
+        self.x = x_new
+        return {
+            "grad_norm": float(jnp.linalg.norm(grad)),
+            "f": float(f),
+            "sent_bits": abits,
+            "measured_payload_bits": pbits,
+            "measured_frame_bytes": fbytes,
+            "participants": tuple(arrived),
+        }
+
+    def step_round(self, r: int) -> dict:
+        return self._exec_round(r, self.x, commit=True)
+
+    def replay_round(self, r: int, x_bcast: np.ndarray) -> None:
+        """Re-execute assignment/delivery bookkeeping under the recorded
+        broadcast (tables, in-flight set and the clients' PRNG spines all
+        advance exactly as the original run's); the commit math is skipped —
+        x and H come from the checkpoint."""
+        self._exec_round(r, jnp.asarray(x_bcast), commit=False)
+
+
+# ---------------------------------------------------------------------------
+# ElasticStarMaster: join/leave membership
+# ---------------------------------------------------------------------------
+
+class ElasticStarMaster(StarMaster):
+    """Flat sync star over a round-varying cohort.
+
+    The master mirrors each active client's H_i (seeded by its INIT_ACK,
+    advanced by the same ``+ alpha * S_i`` update the client applies — the
+    mirror is bitwise the client's state).  Membership events apply at the
+    start of their round: ``leave`` sends the client STOP, drops it from the
+    cohort and RECOMPUTES H_global as the mean of the remaining mirrors —
+    exact retirement, not an approximate subtraction; ``join`` sends a late
+    INIT at the *current* iterate (the client builds H_i there, per
+    ``hess0``), folds the mirror in the same way, and counts the T*64-bit
+    INIT_ACK into the round's uplink accounting exactly.
+    """
+
+    def __init__(
+        self,
+        conns: dict[int, Connection],
+        d: int,
+        cfg: FedNLConfig,
+        membership: MembershipSpec,
+        n_clients: int,
+        x0: jax.Array | None = None,
+        drive: Callable[[], None] | None = None,
+    ):
+        super().__init__(conns, d, cfg, x0=x0, drive=drive)
+        if sorted(conns) != list(range(n_clients)):
+            raise ValueError(
+                "elastic membership needs a connection per client id "
+                f"0..{n_clients - 1} (idle joiners stay connected), got "
+                f"{sorted(conns)}"
+            )
+        self.membership = membership
+        self.n_clients = n_clients
+        self._mirrors: dict[int, jax.Array] = {}
+        self._left: set[int] = set()
+        # base broadcast/collect/aggregate iterate self.order — point it at
+        # the active cohort and membership events mutate it in place
+        self.order = membership.initial_active(n_clients)
+
+    def _on_init_ack(self, cid: int, h_i: jax.Array) -> None:
+        self._mirrors[cid] = h_i
+
+    def _on_decoded(self, cid: int, s_i: jax.Array) -> None:
+        # the client's own H_i update, op for op (star.StarClient._handle_round)
+        self._mirrors[cid] = self._mirrors[cid] + self.alpha * s_i
+
+    def _recompute_invariant(self) -> None:
+        self.h_global = jnp.mean(
+            jnp.stack([self._mirrors[c] for c in self.order]), axis=0
+        )
+
+    def _apply_events(self, r: int, x_bcast: jax.Array) -> dict:
+        joined, left = [], []
+        join_pbits = join_fbytes = 0
+        for ev in self.membership.events_at(r):
+            if ev.action == "leave":
+                if ev.client not in self.order:
+                    raise ValueError(
+                        f"round {r}: client {ev.client} cannot leave — "
+                        "not active"
+                    )
+                send_frame(self.conns[ev.client], Frame(type=MsgType.STOP))
+                if self.drive is not None:
+                    self.drive()
+                self.order.remove(ev.client)
+                self._left.add(ev.client)
+                del self._mirrors[ev.client]
+                if not self.order:
+                    raise ValueError(
+                        f"round {r}: membership schedule empties the cohort"
+                    )
+                self._recompute_invariant()
+                left.append(ev.client)
+            else:  # join
+                if ev.client in self.order or ev.client in self._left:
+                    raise ValueError(
+                        f"round {r}: client {ev.client} cannot join — "
+                        "already active or already departed"
+                    )
+                send_frame(
+                    self.conns[ev.client],
+                    Frame(type=MsgType.INIT,
+                          payload=protocol.pack_vector(x_bcast)),
+                )
+                if self.drive is not None:
+                    self.drive()
+                ack = recv_frame(self.conns[ev.client])
+                if ack.type != MsgType.INIT_ACK or ack.client != ev.client:
+                    raise ValueError(
+                        f"expected INIT_ACK from joining client "
+                        f"{ev.client}, got {ack.type} from {ack.client}"
+                    )
+                h_i = protocol.unpack_vector(ack.payload)
+                self._on_init_ack(ev.client, h_i)
+                bisect.insort(self.order, ev.client)
+                self._recompute_invariant()
+                # the joined client's uplink, accounted exactly: T FP64
+                # state bits (payload == analytic) + the framed ack bytes
+                join_pbits += 8 * len(ack.payload)
+                join_fbytes += ack.wire_bytes
+                joined.append(ev.client)
+        return {
+            "joined": joined,
+            "left": left,
+            "pbits": join_pbits,
+            "fbytes": join_fbytes,
+        }
+
+    def step_round(self, r: int) -> dict:
+        ev = self._apply_events(r, self.x)
+        m = super().step_round(r)
+        m["sent_bits"] += ev["pbits"]  # T*64 state bits per join, exact
+        m["measured_payload_bits"] += ev["pbits"]
+        m["measured_frame_bytes"] += ev["fbytes"]
+        m["participants"] = tuple(self.order)
+        return m
+
+    def replay_round(self, r: int, x_bcast: np.ndarray) -> None:
+        """Replay the cohort history AND the mirror updates: events re-apply
+        (STOP/late-INIT traffic included), the round's uplinks are decoded
+        only to advance the mirrors — x and H come from the checkpoint."""
+        x_b = jnp.asarray(x_bcast)
+        self._apply_events(r, x_b)
+        self._broadcast(
+            Frame(type=MsgType.ROUND, round=r,
+                  payload=protocol.pack_vector(x_b))
+        )
+        self.x_hist.append(np.asarray(x_bcast))
+        self._decode_entries(self._gather_uplinks(r))
+
+    def stop(self) -> None:
+        """STOP every still-connected client — active or never-joined (a
+        plain broadcast would strand idle joiners on a blocking recv)."""
+        if not self._stopped:
+            self._stopped = True
+            for cid in sorted(self.conns):
+                if cid not in self._left:
+                    send_frame(self.conns[cid], Frame(type=MsgType.STOP))
+            if self.drive is not None:
+                self.drive()
+
+
+# ---------------------------------------------------------------------------
+# construction seams
+# ---------------------------------------------------------------------------
+
+def make_master(
+    conns: dict[int, Connection],
+    d: int,
+    cfg: FedNLConfig,
+    topology: TopologySpec | None = None,
+    membership: MembershipSpec | None = None,
+    n_clients: int | None = None,
+    x0: jax.Array | None = None,
+    drive: Callable[[], None] | None = None,
+) -> StarMaster:
+    """The one master factory: spec -> StarMaster | TreeMaster |
+    AsyncStarMaster | ElasticStarMaster.  ``conns`` lead to clients for star
+    kinds and to root aggregators for trees; ``n_clients`` is the leaf count
+    (required whenever it differs from ``len(conns)``)."""
+    n = len(conns) if n_clients is None else n_clients
+    if membership is not None and not membership.trivial:
+        if topology is not None and not topology.trivial:
+            raise ValueError(
+                "membership events compose with the flat sync star only"
+            )
+        return ElasticStarMaster(
+            conns, d, cfg, membership, n_clients=n, x0=x0, drive=drive
+        )
+    if topology is not None and topology.kind == "tree":
+        return TreeMaster(
+            conns, d, cfg, topology, n_clients=n, x0=x0, drive=drive
+        )
+    if topology is not None and topology.mode == "async":
+        return AsyncStarMaster(conns, d, cfg, topology, x0=x0, drive=drive)
+    return StarMaster(conns, d, cfg, x0=x0, drive=drive)
+
+
+def _selective_drive(clients: list[StarClient]) -> Callable[[], None]:
+    """Drive in-process clients by buffered-frame polling (the star_pp
+    discipline): only clients with pending frames are served, so partial
+    broadcasts (async assignment, membership events) never deadlock, and a
+    full broadcast serves everyone exactly once — same frames, same order,
+    bit-identical to the unconditional star drive."""
+    done = [False] * len(clients)
+
+    def drive() -> None:
+        for i, c in enumerate(clients):
+            while not done[i] and c.conn.pending():
+                if not c.serve_once():
+                    done[i] = True
+
+    return drive
+
+
+def make_selective_loopback_clients(
+    z: jax.Array, cfg: FedNLConfig, seed: int = 0
+) -> tuple[dict[int, Connection], Callable[[], None]]:
+    """In-process client fleet with the selective (pending-poll) drive —
+    the wiring for async/elastic masters, whose broadcasts are partial."""
+    n_clients = z.shape[0]
+    master_conns: dict[int, Connection] = {}
+    clients: list[StarClient] = []
+    for i in range(n_clients):
+        a, b = loopback_pair()
+        master_conns[i] = a
+        clients.append(StarClient(i, n_clients, z[i], cfg, b, seed=seed))
+    return master_conns, _selective_drive(clients)
+
+
+def _wire_subtree(
+    node_id: int,
+    subtree: tuple,
+    z: jax.Array,
+    cfg: FedNLConfig,
+    combine: str,
+    seed: int,
+) -> tuple[Connection, AggregatorNode]:
+    """Recursively build one in-process subtree; returns the parent-side
+    connection + the aggregator (its children drive hangs off it)."""
+    n_clients, _, d = z.shape
+    children: dict[int, Connection] = {}
+    agg_children: set[int] = set()
+    leaf_clients: list[StarClient] = []
+    sub_drives: list[Callable[[], None]] = []
+    for pos, node in enumerate(subtree):
+        if isinstance(node, (tuple, list)):
+            parent_side, sub_agg = _wire_subtree(
+                pos, tuple(node), z, cfg, combine, seed
+            )
+            children[pos] = parent_side
+            agg_children.add(pos)
+            sub_drives.append(_agg_drive(parent_side, sub_agg))
+        else:
+            cid = int(node)
+            a, b = loopback_pair()
+            children[cid] = a
+            leaf_clients.append(
+                StarClient(cid, n_clients, z[cid], cfg, b, seed=seed)
+            )
+    leaf_drive = _selective_drive(leaf_clients)
+
+    def drive() -> None:
+        leaf_drive()
+        for sub in sub_drives:
+            sub()
+
+    parent_a, parent_b = loopback_pair()
+    node = AggregatorNode(
+        node_id, parent_b, children, d, cfg,
+        combine=combine, agg_children=agg_children, drive=drive,
+    )
+    return parent_a, node
+
+
+def _agg_drive(
+    parent_side: Connection, node: AggregatorNode
+) -> Callable[[], None]:
+    """Serve an in-process aggregator whenever its parent-side buffer holds
+    frames (each serve_once consumes exactly one parent frame end-to-end)."""
+    done = [False]
+
+    def drive() -> None:
+        while not done[0] and node.parent.pending():
+            if not node.serve_once():
+                done[0] = True
+
+    return drive
+
+
+def make_loopback_tree(
+    z: jax.Array, cfg: FedNLConfig, topology: TopologySpec, seed: int = 0
+) -> tuple[dict[int, Connection], Callable[[], None]]:
+    """In-process tree-of-stars: one AggregatorNode per subtree, loopback
+    buffers everywhere; returns (root conns keyed by subtree index, drive)."""
+    shape = topology.resolve(z.shape[0])
+    conns: dict[int, Connection] = {}
+    drives: list[Callable[[], None]] = []
+    for i, subtree in enumerate(shape):
+        parent_side, agg = _wire_subtree(i, subtree, z, cfg,
+                                         topology.combine, seed)
+        conns[i] = parent_side
+        drives.append(_agg_drive(parent_side, agg))
+
+    def drive() -> None:
+        for sub in drives:
+            sub()
+
+    return conns, drive
+
+
+def open_loopback_master(
+    z: jax.Array,
+    cfg: FedNLConfig,
+    topology: TopologySpec | None = None,
+    membership: MembershipSpec | None = None,
+    seed: int = 0,
+) -> StarMaster:
+    """Wire an in-process fleet for (topology, membership) and return its
+    master, drive attached — the loopback construction seam the session
+    backend uses (rule 6: masters are built here, not at call sites)."""
+    from repro.comm.star import make_loopback_clients
+
+    n_clients, _, d = z.shape
+    if topology is not None and topology.kind == "tree":
+        if membership is not None and not membership.trivial:
+            raise ValueError(
+                "membership events compose with the flat sync star only"
+            )
+        conns, drive = make_loopback_tree(z, cfg, topology, seed=seed)
+        return make_master(
+            conns, d, cfg, topology=topology, n_clients=n_clients, drive=drive
+        )
+    needs_selective = (
+        (membership is not None and not membership.trivial)
+        or (topology is not None and topology.mode == "async")
+    )
+    if needs_selective:
+        conns, drive = make_selective_loopback_clients(z, cfg, seed=seed)
+    else:
+        # the PR-1 wiring, untouched: plain star runs keep their exact
+        # historical drive discipline
+        conns, drive = make_loopback_clients(z, cfg, seed=seed)
+    return make_master(
+        conns, d, cfg,
+        topology=topology, membership=membership,
+        n_clients=n_clients, drive=drive,
+    )

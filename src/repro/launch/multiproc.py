@@ -85,9 +85,129 @@ def _client_entry(
     client.run()
 
 
+def _aggregator_entry(
+    agg_id: int,
+    subtree,
+    n_clients: int,
+    d: int,
+    dataset: str,
+    shape,
+    cfg_dict: dict,
+    seed: int,
+    parent_host: str,
+    parent_port: int,
+    combine: str,
+    data_seed: int | None = None,
+) -> None:
+    """Aggregator process: bind a listener for the subtree, spawn its
+    children (leaf client processes and nested aggregators), dial the
+    parent, serve AGG rounds.
+
+    Teardown ordering is the contract (the PR 6 refcount fix, one level
+    deeper): the subtree's children are released — connections closed,
+    processes joined — BEFORE this node closes its own listener and parent
+    connection, so a tree tears down leaves-first and the root's
+    ``ClientCluster.close()`` never abandons a grandchild.
+    """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.comm.topology import build_aggregator
+    from repro.comm.transport import TCPMaster, connect_to_master
+
+    subtree = tuple(subtree)
+    listener = TCPMaster(len(subtree), host=parent_host)
+    procs: list = []
+    children: dict = {}
+    parent_conn = None
+    try:
+        agg_children = set()
+        to_spawn = []
+        for pos, node in enumerate(subtree):
+            if isinstance(node, (tuple, list)):
+                agg_children.add(pos)
+                # non-daemon: a daemonic process may not spawn its own
+                # children, and nested aggregators spawn a subtree
+                to_spawn.append(
+                    (
+                        _aggregator_entry,
+                        (
+                            pos, tuple(node), n_clients, d, dataset, shape,
+                            cfg_dict, seed, parent_host, listener.port,
+                            combine, data_seed,
+                        ),
+                        False,
+                    )
+                )
+            else:
+                to_spawn.append(
+                    (
+                        _client_entry,
+                        (
+                            int(node), n_clients, dataset, shape, cfg_dict,
+                            seed, parent_host, listener.port, False, None,
+                            data_seed,
+                        ),
+                        True,
+                    )
+                )
+        procs = _spawn_procs(to_spawn)
+        children = listener.accept_clients()
+        parent_conn = connect_to_master(parent_host, parent_port, agg_id)
+        cfg = FedNLConfig(**cfg_dict)
+        node = build_aggregator(
+            agg_id, parent_conn, children, d, cfg,
+            combine=combine, agg_children=agg_children,
+        )
+        node.run()
+    finally:
+        # children first: conns closed + procs joined before our own
+        # listener/parent sockets go away
+        for conn in children.values():
+            conn.close()
+        for p in procs:
+            p.join(timeout=60)
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+        listener.close()
+        if parent_conn is not None:
+            parent_conn.close()
+
+
 # serializes the PYTHONPATH mutate-spawn-restore window across threads
 # (solve_many dispatches star-tcp specs from a worker pool)
 _SPAWN_ENV_LOCK = threading.Lock()
+
+
+def _spawn_procs(targets) -> list:
+    """Start one spawn-context process per ``(target, args, daemon)`` triple
+    with ``src/`` on the children's PYTHONPATH (mutate-spawn-restore under
+    the shared lock).  Children capture os.environ at start(), so nested
+    spawns — aggregator processes spawning their own subtrees — inherit the
+    path without re-mutating anything.  ``daemon`` must be False for any
+    child that spawns processes of its own (aggregators)."""
+    ctx = mp.get_context("spawn")
+    src_dir = os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    procs: list = []
+    with _SPAWN_ENV_LOCK:
+        old_pp = os.environ.get("PYTHONPATH")
+        os.environ["PYTHONPATH"] = src_dir + (
+            os.pathsep + old_pp if old_pp else ""
+        )
+        try:
+            for target, args, daemon in targets:
+                p = ctx.Process(target=target, args=args, daemon=daemon)
+                p.start()
+                procs.append(p)
+        finally:
+            if old_pp is None:
+                os.environ.pop("PYTHONPATH", None)
+            else:
+                os.environ["PYTHONPATH"] = old_pp
+    return procs
 
 # every live (not yet closed) cluster, so a serving engine — or a test —
 # can prove no process fleet leaked after shutdown/eviction; guarded by its
@@ -144,62 +264,43 @@ class ClientCluster:
         ).dims()
         self.d = d
         self.n_clients = n_clients
-        self._refs = 1  # the creator holds the first reference
-        self._closed = False
-        self._lifecycle_lock = threading.Lock()
         self._master = TCPMaster(n_clients, host=host)
-        with _LIVE_LOCK:
-            _LIVE_CLUSTERS.add(self)
-        # spawn (not fork): children must re-initialize the JAX runtime cleanly
-        ctx = mp.get_context("spawn")
-        # make `repro` importable in the children regardless of parent's cwd
-        src_dir = os.path.dirname(
-            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        )
+        self._init_lifecycle()
+        cfg_dict = dataclasses.asdict(cfg) if cfg is not None else {}
         self.procs: list = []
         self.conns: dict = {}
         # spawn + accept under one guard: a mid-loop start() failure (fd/pid
         # exhaustion under solve_many's concurrent star-tcp pool) must not
         # leak the bound master socket or already-started children
         try:
-            # children capture os.environ at start(), so the PYTHONPATH
-            # mutation only needs to span the spawn loop; the lock makes
-            # concurrent runs safe against each other's mutate-and-restore
-            with _SPAWN_ENV_LOCK:
-                old_pp = os.environ.get("PYTHONPATH")
-                os.environ["PYTHONPATH"] = src_dir + (
-                    os.pathsep + old_pp if old_pp else ""
-                )
-                try:
-                    for i in range(n_clients):
-                        p = ctx.Process(
-                            target=_client_entry,
-                            args=(
-                                i,
-                                n_clients,
-                                dataset,
-                                shape,
-                                dataclasses.asdict(cfg) if cfg is not None else {},
-                                seed,
-                                host,
-                                self._master.port,
-                                pp,
-                                fault_dict,
-                                data_seed,
-                            ),
-                            daemon=True,
-                        )
-                        p.start()
-                        self.procs.append(p)
-                finally:
-                    if old_pp is None:
-                        os.environ.pop("PYTHONPATH", None)
-                    else:
-                        os.environ["PYTHONPATH"] = old_pp
+            self.procs = _spawn_procs(
+                [
+                    (
+                        _client_entry,
+                        (
+                            i, n_clients, dataset, shape, cfg_dict, seed,
+                            host, self._master.port, pp, fault_dict,
+                            data_seed,
+                        ),
+                        True,
+                    )
+                    for i in range(n_clients)
+                ]
+            )
             self.conns = self._master.accept_clients()
         except Exception:
             self.close(join_timeout=5)
             raise
+
+    def _init_lifecycle(self) -> None:
+        """Refcount + leak-registry bookkeeping shared with subclasses
+        (registration happens only after the master socket bound — a failed
+        bind must not leave a phantom entry in the _LIVE registry)."""
+        self._refs = 1  # the creator holds the first reference
+        self._closed = False
+        self._lifecycle_lock = threading.Lock()
+        with _LIVE_LOCK:
+            _LIVE_CLUSTERS.add(self)
 
     def acquire(self) -> "ClientCluster":
         """Register another holder of this (open) cluster."""
@@ -259,6 +360,72 @@ class ClientCluster:
         for c in stragglers:
             c.close(join_timeout=join_timeout)
         return len(stragglers)
+
+
+class TreeClientCluster(ClientCluster):
+    """A live process *tree* for a tree-of-stars run (repro.comm.topology).
+
+    The root binds one listener; each immediate child is an aggregator
+    process (``_aggregator_entry``) owning a subtree — which in turn spawns
+    its leaf client processes and any deeper aggregators.  ``conns`` are
+    keyed by root-subtree index (the aggregator node ids a TreeMaster
+    expects), not client ids.  Shares :class:`ClientCluster`'s refcounted
+    lifecycle and ``_LIVE`` registry, so ``live_count()``/``close_all()``
+    leak probes cover process trees too; teardown is leaves-first — each
+    aggregator releases its children before closing its own sockets, and
+    only then does the root's :meth:`close` join the aggregator processes.
+    """
+
+    def __init__(
+        self,
+        dataset: str,
+        shape,
+        seed: int,
+        topology,
+        host: str = "127.0.0.1",
+        data_seed: int | None = None,
+        cfg: FedNLConfig | None = None,
+    ):
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+        from repro.api.spec import DataSpec
+        from repro.comm.transport import TCPMaster
+
+        d, n_clients, _ = DataSpec(
+            dataset=dataset or "tiny",
+            shape=shape,
+            seed=seed if data_seed is None else data_seed,
+        ).dims()
+        self.d = d
+        self.n_clients = n_clients
+        tree = topology.resolve(n_clients)
+        self._master = TCPMaster(len(tree), host=host)
+        self._init_lifecycle()
+        cfg_dict = dataclasses.asdict(cfg) if cfg is not None else {}
+        self.procs = []
+        self.conns = {}
+        try:
+            self.procs = _spawn_procs(
+                [
+                    (
+                        _aggregator_entry,
+                        (
+                            i, subtree, n_clients, d, dataset, shape,
+                            cfg_dict, seed, host, self._master.port,
+                            topology.combine, data_seed,
+                        ),
+                        # aggregators spawn their own children, so they
+                        # cannot be daemonic
+                        False,
+                    )
+                    for i, subtree in enumerate(tree)
+                ]
+            )
+            self.conns = self._master.accept_clients()
+        except Exception:
+            self.close(join_timeout=5)
+            raise
 
 
 def _run_with_clients(

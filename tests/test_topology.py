@@ -1,0 +1,504 @@
+"""The topology layer (DESIGN.md §13): tree-of-stars, async, membership.
+
+The acceptance bar of the topology PR, pinned here:
+
+  * tree parity — a sync tree-of-stars (loopback and TCP, depth >= 2)
+    reproduces the single-star trajectory bit for bit for all six
+    compressors, measured wire accounting included, at depth 2, depth 3 and
+    under an explicit edge list — including mid-run checkpoint/resume
+    through an aggregator;
+  * async determinism — staleness=0 equals the sync barrier bit for bit;
+    replay(schedule) is bit-identical over hypothesis-random arrival
+    schedules, save/resume included;
+  * elastic membership — a join+leave schedule converges, the joined
+    client's uplink bits are accounted exactly (T*64-bit INIT_ACK), and a
+    leave retires the client's contribution from the invariant exactly
+    (recompute-from-mirrors, not approximate subtraction);
+  * lifecycle — the `_LIVE` cluster registry reports zero leaks after
+    depth-2 TCP trees tear down (the PR 6 refcount probe, one level deeper);
+  * validation — TopologySpec shape mismatches are restore-incompatible
+    with the exact subfield named; simulation backends and PP algorithms
+    reject non-trivial topology/membership loudly.
+"""
+
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CompressorSpec,
+    DataSpec,
+    ExperimentSpec,
+    MembershipEvent,
+    MembershipSpec,
+    TopologySpec,
+    load_state,
+    open_session,
+    solve,
+)
+from repro.comm.topology import subtree_leaves
+
+ALL_COMPRESSORS = ["identity", "topk", "randk", "randseqk", "toplek", "natural"]
+
+SHAPE = (12, 4, 20)  # d, n_clients, n_i — small enough for per-round stepping
+WIDE_SHAPE = (10, 8, 16)  # 8 clients: room for depth-3 trees + membership
+
+
+def full_spec(**overrides) -> ExperimentSpec:
+    base = dict(
+        data=DataSpec(shape=SHAPE, seed=1),
+        rounds=5,
+        seed=0,
+        backend="star-loopback",
+    )
+    base.update(overrides)
+    return ExperimentSpec(**base)
+
+
+def wide_spec(**overrides) -> ExperimentSpec:
+    return full_spec(data=DataSpec(shape=WIDE_SHAPE, seed=1), **overrides)
+
+
+def assert_reports_bit_identical(got, want):
+    assert got.rounds == want.rounds
+    for g, w in zip(got.records, want.records):
+        assert float(g.grad_norm).hex() == float(w.grad_norm).hex()
+        assert float(g.f).hex() == float(w.f).hex()
+        assert g.sent_bits == w.sent_bits
+        assert g.sent_bits_payload == w.sent_bits_payload
+        assert g.sent_bits_wire == w.sent_bits_wire
+    np.testing.assert_array_equal(got.x, want.x)
+
+
+# ---------------------------------------------------------------------------
+# TopologySpec / MembershipSpec: shape resolution + validation
+# ---------------------------------------------------------------------------
+
+def test_resolve_balanced_depth2():
+    shape = TopologySpec(kind="tree", fanout=2, depth=2).resolve(8)
+    assert shape == ((0, 1, 2, 3), (4, 5, 6, 7))
+
+
+def test_resolve_balanced_depth3_partitions_leaves():
+    shape = TopologySpec(kind="tree", fanout=2, depth=3).resolve(8)
+    assert len(shape) == 2
+    assert sorted(i for sub in shape for i in subtree_leaves(sub)) == list(
+        range(8)
+    )
+    # depth 3: the root's children are themselves subtrees, not leaves
+    assert all(isinstance(node, tuple) for sub in shape for node in sub)
+
+
+def test_resolve_explicit_edges_must_partition():
+    spec = TopologySpec(kind="tree", edges=((0, 2), (1, 3)))
+    assert spec.resolve(4) == ((0, 2), (1, 3))
+    with pytest.raises(ValueError, match="partition"):
+        TopologySpec(kind="tree", edges=((0, 1), (1, 2))).resolve(3)
+    with pytest.raises(ValueError, match="partition"):
+        TopologySpec(kind="tree", edges=((0, 1),)).resolve(3)
+
+
+def test_topology_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        TopologySpec(kind="ring")
+    with pytest.raises(ValueError, match="fanout"):
+        TopologySpec(kind="tree", fanout=1)
+    with pytest.raises(ValueError, match="async"):
+        TopologySpec(kind="tree", mode="async")
+    with pytest.raises(ValueError, match="staleness"):
+        TopologySpec(staleness=2)  # sync mode cannot bound staleness
+    assert TopologySpec().trivial
+    assert not TopologySpec(kind="tree").trivial
+    assert not TopologySpec(mode="async").trivial
+
+
+def test_membership_spec_validation():
+    with pytest.raises(ValueError, match="action"):
+        MembershipEvent(0, "pause", 1)
+    mem = MembershipSpec(events=(MembershipEvent(2, "join", 3),))
+    assert mem.initial_active(4) == [0, 1, 2]
+    with pytest.raises(ValueError, match="outside"):
+        mem.initial_active(2)
+    with pytest.raises(ValueError, match="empty"):
+        MembershipSpec(
+            events=tuple(MembershipEvent(0, "join", i) for i in range(3))
+        ).initial_active(3)
+
+
+def test_simulation_backends_reject_topology():
+    tree = TopologySpec(kind="tree", fanout=2, depth=2)
+    for backend in ("local", "sharded"):
+        with pytest.raises(ValueError, match="topology"):
+            solve(full_spec(backend=backend, topology=tree))
+
+
+def test_pp_rejects_topology_and_membership():
+    with pytest.raises(ValueError, match="participation"):
+        full_spec(
+            algorithm="fednl-pp", tau=2,
+            topology=TopologySpec(kind="tree", fanout=2, depth=2),
+        )
+    with pytest.raises(ValueError, match="participation"):
+        full_spec(
+            algorithm="fednl-pp", tau=2,
+            membership=MembershipSpec(events=(MembershipEvent(1, "leave", 0),)),
+        )
+
+
+def test_membership_excludes_nontrivial_topology():
+    with pytest.raises(ValueError, match="flat sync star"):
+        full_spec(
+            topology=TopologySpec(kind="tree", fanout=2, depth=2),
+            membership=MembershipSpec(events=(MembershipEvent(1, "leave", 0),)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# tree-of-stars: star bit-parity (the tentpole acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compressor", ALL_COMPRESSORS)
+def test_tree_loopback_matches_star_bitwise(compressor):
+    """Depth-2 loopback tree == flat star, all six compressors: trajectory,
+    analytic bits AND measured wire accounting, bit for bit."""
+    spec = full_spec(compressor=CompressorSpec(compressor))
+    want = solve(spec)
+    got = solve(
+        spec.replace(topology=TopologySpec(kind="tree", fanout=2, depth=2))
+    )
+    assert_reports_bit_identical(got, want)
+    np.testing.assert_array_equal(
+        got.extras["measured_payload_bits"],
+        want.extras["measured_payload_bits"],
+    )
+    np.testing.assert_array_equal(
+        got.extras["measured_frame_bytes"],
+        want.extras["measured_frame_bytes"],
+    )
+
+
+@pytest.mark.parametrize(
+    "topology",
+    [
+        TopologySpec(kind="tree", fanout=2, depth=3),
+        TopologySpec(kind="tree", edges=((0, 3), (1, 2, 5), (4, 6, 7))),
+    ],
+    ids=["depth3", "edges"],
+)
+def test_tree_shapes_match_star_bitwise(topology):
+    spec = wide_spec()
+    want = solve(spec)
+    got = solve(spec.replace(topology=topology))
+    assert_reports_bit_identical(got, want)
+
+
+def test_tree_sum_combine_is_close_not_bitwise():
+    """combine='sum' re-associates the FP mean — documented ulp drift, same
+    contract as the sweep engine's batch='vmap'."""
+    spec = wide_spec()
+    want = solve(spec)
+    got = solve(
+        spec.replace(
+            topology=TopologySpec(kind="tree", fanout=4, depth=2, combine="sum")
+        )
+    )
+    assert got.rounds == want.rounds
+    np.testing.assert_allclose(got.x, want.x, rtol=1e-12, atol=1e-12)
+    # the analytic uplink accounting is association-free and stays exact
+    np.testing.assert_array_equal(got.sent_bits_payload, want.sent_bits_payload)
+
+
+def test_tree_checkpoint_resume_through_aggregator(tmp_path):
+    """Mid-run save under an aggregator topology resumes bit-identically —
+    the broadcast replay crosses the aggregator layer."""
+    spec = full_spec(topology=TopologySpec(kind="tree", fanout=2, depth=2))
+    want = solve(spec)
+    ck = tmp_path / "tree.fnlsess"
+    with open_session(spec) as s:
+        s.step(2)
+        s.save(ck)
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+
+
+def test_tree_shape_is_restore_incompatible(tmp_path):
+    """Restoring a tree checkpoint into a different tree shape fails loudly,
+    naming the exact mismatched subfield (satellite: check_restore_from)."""
+    spec = full_spec(topology=TopologySpec(kind="tree", fanout=2, depth=2))
+    ck = tmp_path / "tree.fnlsess"
+    with open_session(spec) as s:
+        s.step(2)
+        s.save(ck)
+    with pytest.raises(ValueError, match=r"topology\.fanout"):
+        open_session(
+            spec.replace(topology=TopologySpec(kind="tree", fanout=3, depth=2)),
+            restore=ck,
+        )
+    with pytest.raises(ValueError, match=r"topology"):
+        open_session(spec.replace(topology=None), restore=ck)
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness async aggregation
+# ---------------------------------------------------------------------------
+
+def test_async_staleness_zero_equals_sync_bitwise():
+    spec = full_spec()
+    want = solve(spec)
+    got = solve(spec.replace(topology=TopologySpec(mode="async")))
+    assert_reports_bit_identical(got, want)
+
+
+def test_async_converges_and_is_deterministic():
+    topo = TopologySpec(mode="async", staleness=2, max_delay=3, schedule_seed=7)
+    spec = full_spec(topology=topo, rounds=12)
+    a = solve(spec)
+    b = solve(spec)
+    assert_reports_bit_identical(a, b)
+    assert a.grad_norms[-1] < a.grad_norms[0]
+    # staleness shows up as per-round participant sets, recorded in the report
+    assert all(r.participants is not None for r in a.records)
+
+
+def test_async_checkpoint_resume(tmp_path):
+    topo = TopologySpec(mode="async", staleness=1, max_delay=2, schedule_seed=3)
+    spec = full_spec(topology=topo, rounds=8)
+    want = solve(spec)
+    ck = tmp_path / "async.fnlsess"
+    with open_session(spec) as s:
+        s.step(4)  # checkpoint with updates still in flight
+        s.save(ck)
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+
+
+def test_async_replay_determinism_property():
+    """Hypothesis: for random (staleness, max_delay, schedule_seed), the run
+    is a pure function of the spec — rerun and mid-run save/resume are both
+    bit-identical (the arrival schedule is spec'd, not wall-clock)."""
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)",
+    )
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        staleness=st.integers(0, 3),
+        max_delay=st.integers(0, 4),
+        schedule_seed=st.integers(0, 1000),
+    )
+    def run(staleness, max_delay, schedule_seed):
+        topo = TopologySpec(
+            mode="async",
+            staleness=staleness,
+            max_delay=max_delay,
+            schedule_seed=schedule_seed,
+        )
+        spec = full_spec(topology=topo, rounds=5)
+        a = solve(spec)
+        b = solve(spec)
+        assert_reports_bit_identical(a, b)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# elastic membership
+# ---------------------------------------------------------------------------
+
+JOIN_LEAVE = MembershipSpec(
+    events=(
+        MembershipEvent(round=2, action="join", client=7),
+        MembershipEvent(round=4, action="leave", client=0),
+    )
+)
+
+
+def test_membership_join_leave_converges():
+    spec = wide_spec(membership=JOIN_LEAVE, rounds=10)
+    rep = solve(spec)
+    assert rep.grad_norms[-1] < 1e-6
+    assert rep.records[0].participants == tuple(range(7))  # 7 not joined yet
+    assert rep.records[2].participants == tuple(range(8))  # joined at round 2
+    assert rep.records[4].participants == tuple(range(1, 8))  # 0 left at r4
+
+
+def test_membership_join_bits_accounted_exactly():
+    """The joining client's state uplink is counted into that round's bits
+    exactly: T*64 payload bits for the late INIT_ACK (T = d(d+1)/2), plus
+    the 32-byte frame header in the framed accounting."""
+    d = WIDE_SHAPE[0]
+    t_bits = d * (d + 1) // 2 * 64
+    spec = wide_spec(membership=JOIN_LEAVE, rounds=10)
+    rep = solve(spec)
+    base = solve(wide_spec(rounds=10))
+    per_up_pay = base.records[1].sent_bits_payload // WIDE_SHAPE[1]
+    per_up_frame = (8 * base.extras["measured_frame_bytes"][1]) // WIDE_SHAPE[1]
+    # round 2 = 7 regular uplinks pre-join-count + the join ack + the new
+    # member's own uplink; vs round 1 (7 uplinks): delta == one uplink + ack
+    got_delta = (
+        rep.records[2].sent_bits_payload - rep.records[1].sent_bits_payload
+    )
+    assert got_delta == per_up_pay + t_bits
+    frame_delta = 8 * (
+        rep.extras["measured_frame_bytes"][2]
+        - rep.extras["measured_frame_bytes"][1]
+    )
+    assert frame_delta == per_up_frame + t_bits + 32 * 8
+
+
+def test_membership_leave_retires_contribution_exactly():
+    """After a leave, H_global is the mean of the REMAINING clients' mirrors
+    — bitwise what a fresh aggregation over the survivors would give (exact
+    retirement, not approximate subtraction)."""
+    import jax.numpy as jnp
+
+    from repro.comm.topology import open_loopback_master
+
+    spec = wide_spec(membership=JOIN_LEAVE)
+    z = spec.data.build()
+    m = open_loopback_master(
+        z, spec.fednl_config(), membership=JOIN_LEAVE, seed=spec.seed
+    )
+    m.init_handshake()
+    for r in range(4):
+        m.step_round(r)
+    # the leave fires at the start of round 4: client 0's STOP goes out and
+    # H_global is recomputed as the mean of the surviving mirrors
+    survivors = [c for c in m.order if c != 0]
+    want = jnp.mean(jnp.stack([m._mirrors[c] for c in survivors]), axis=0)
+    m._apply_events(4, m.x)
+    np.testing.assert_array_equal(np.asarray(m.h_global), np.asarray(want))
+    assert m.order == survivors and 0 not in m._mirrors
+    m.stop()
+
+
+def test_membership_checkpoint_resume(tmp_path):
+    spec = wide_spec(membership=JOIN_LEAVE, rounds=8)
+    want = solve(spec)
+    ck = tmp_path / "mem.fnlsess"
+    with open_session(spec) as s:
+        s.step(3)  # past the join, before the leave
+        s.save(ck)
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+    assert got.records[4].participants == tuple(range(1, 8))
+
+
+def test_membership_is_restore_incompatible_when_events_differ(tmp_path):
+    spec = wide_spec(membership=JOIN_LEAVE, rounds=8)
+    ck = tmp_path / "mem.fnlsess"
+    with open_session(spec) as s:
+        s.step(2)
+        s.save(ck)
+    with pytest.raises(ValueError, match="membership"):
+        open_session(spec.replace(membership=None), restore=ck)
+
+
+# ---------------------------------------------------------------------------
+# star-tcp: real process trees (net marker)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.net
+def test_tree_tcp_matches_star_bitwise_no_leaks():
+    """Depth-2 TCP process tree == flat star bitwise, and the _LIVE cluster
+    registry reports zero leaks after teardown (satellite: the PR 6 refcount
+    probe extended to trees — aggregators release children before the root
+    cluster closes)."""
+    from repro.launch.multiproc import ClientCluster
+
+    before = ClientCluster.live_count()
+    spec = full_spec(rounds=4)
+    want = solve(spec)
+    got = solve(
+        spec.replace(
+            backend="star-tcp",
+            topology=TopologySpec(kind="tree", fanout=2, depth=2),
+        )
+    )
+    assert_reports_bit_identical(got, want)
+    assert ClientCluster.live_count() == before
+
+
+@pytest.mark.net
+def test_tree_tcp_checkpoint_resume(tmp_path):
+    spec = full_spec(
+        backend="star-tcp",
+        topology=TopologySpec(kind="tree", fanout=2, depth=2),
+        rounds=4,
+    )
+    want = solve(spec)
+    ck = tmp_path / "treetcp.fnlsess"
+    with open_session(spec) as s:
+        s.step(2)
+        s.save(ck)
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
+
+
+_TREE_KILL_SCRIPT = """
+import sys, os
+
+# the __main__ guard matters: star-tcp spawns worker processes that re-import
+# this module under multiprocessing's spawn context
+if __name__ == "__main__":
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.api import DataSpec, ExperimentSpec, TopologySpec, open_session
+
+    spec = ExperimentSpec(data=DataSpec(shape=(12, 4, 20), seed=1), rounds=5,
+                          seed=0, backend="star-tcp",
+                          topology=TopologySpec(kind="tree", fanout=2, depth=2))
+    s = open_session(spec)
+    s.step(2)
+    s.save(sys.argv[1])
+    # die without closing anything: no STOP fan-down, no cluster join — the
+    # aggregators see EOF on their parent sockets and tear down their own
+    # subtrees (leaves-first), so nothing outlives the master
+    os._exit(17)
+"""
+
+
+@pytest.mark.net
+def test_tree_tcp_kill_and_resume_subprocess(tmp_path):
+    """A tree-of-stars master killed mid-run resumes from its checkpoint in
+    a fresh process tree, bit-identical to the uninterrupted run (and
+    bit-identical to the flat star, transitively)."""
+    script = tmp_path / "kill_tree_master.py"
+    script.write_text(_TREE_KILL_SCRIPT)
+    ck = tmp_path / "killed_tree.fnlsess"
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(
+        pathlib.Path(__file__).resolve().parent.parent / "src"
+    )
+    proc = subprocess.run(
+        [sys.executable, str(script), str(ck)],
+        capture_output=True,
+        text=True,
+        timeout=300,
+        env=env,
+    )
+    assert proc.returncode == 17, proc.stderr
+    assert ck.exists()
+    st = load_state(ck)
+    assert st.round == 2 and st.backend == "star-tcp"
+
+    spec = full_spec(
+        backend="star-tcp",
+        topology=TopologySpec(kind="tree", fanout=2, depth=2),
+        rounds=5,
+    )
+    want = solve(full_spec(rounds=5))
+    with open_session(spec, restore=ck) as s:
+        got = s.run()
+    assert_reports_bit_identical(got, want)
