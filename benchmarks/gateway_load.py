@@ -1,0 +1,218 @@
+"""Load test for the gateway: remote tenants, fair share, warm latency.
+
+Starts a real :class:`~repro.gateway.GatewayServer` on localhost, submits a
+fleet of backlogged tenants across the three default priority classes over
+TCP, and measures what the §14 contract promises:
+
+* **fair share**: with every class backlogged and the resident set spilling
+  each tick (``max_resident == admit_per_tick`` and 3x oversubscription),
+  admissions — and therefore rounds — are distributed by deficit
+  round-robin, so the measured per-class round rates must match the
+  configured 4/2/1 weights within 10%;
+* **warm latency**: engine tick p50/p99 measured only after the compile
+  counter stops moving (cold-start ticks are jit compiles, reported
+  separately — same methodology as benchmarks/serve_load.py);
+* **bit parity across the wire**: one reference tenant's RESULT is compared
+  record-for-record (hex floats) against a solo session.
+
+``python -m benchmarks.run --quick`` records the result to
+``BENCH_gateway.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+SHAPE = (12, 4, 20)
+CLASSES = ("high", "normal", "low")
+
+
+def _spec_of(seed: int, rounds: int):
+    from repro.api import CompressorSpec, DataSpec, ExperimentSpec
+
+    return ExperimentSpec(
+        data=DataSpec(shape=SHAPE, seed=1),
+        compressor=CompressorSpec("topk", 8.0),
+        rounds=rounds,
+        seed=seed,
+    )
+
+
+def gateway_load_benchmark(
+    per_class: int = 6,
+    fleet_rounds: int = 400,
+    measure_ticks: int = 48,
+    warmup_timeout_s: float = 120.0,
+) -> dict:
+    """Run the load test; returns the BENCH_gateway.json payload."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.api import open_session
+    from repro.gateway import GatewayClient, GatewayConfig, GatewayServer
+    from repro.serve_fednl import DEFAULT_PRIORITIES, ServeConfig
+
+    n_tenants = per_class * len(CLASSES)
+    server = GatewayServer(
+        GatewayConfig(
+            port=0,
+            serve=ServeConfig(
+                max_resident=4,
+                admit_per_tick=4,
+                priorities=dict(DEFAULT_PRIORITIES),
+            ),
+        )
+    )
+    ready = threading.Event()
+    addr: dict = {}
+
+    def announce(host, port):
+        addr["host"], addr["port"] = host, port
+        ready.set()
+
+    thread = threading.Thread(
+        target=server.run, kwargs={"ready": announce}, daemon=True
+    )
+    thread.start()
+    assert ready.wait(60), "gateway did not bind"
+
+    out: dict = {
+        "n_tenants": n_tenants,
+        "per_class": per_class,
+        "weights": dict(DEFAULT_PRIORITIES),
+    }
+    with GatewayClient(addr["host"], addr["port"]) as gwc:
+        # --- bit parity across the wire (one short reference tenant) ------
+        ref_spec = _spec_of(seed=999, rounds=6)
+        t0 = time.perf_counter()
+        ref = gwc.submit(ref_spec, priority="high")
+        out["submit_rtt_ms"] = round((time.perf_counter() - t0) * 1e3, 2)
+        got = gwc.result(ref.id)
+        with open_session(ref_spec) as s:
+            want = s.run()
+        out["bit_parity"] = bool(
+            [float(r.grad_norm).hex() for r in got.records]
+            == [float(r.grad_norm).hex() for r in want.records]
+            and np.array_equal(got.x, want.x)
+        )
+
+        # --- the backlogged fleet ------------------------------------------
+        handles = []
+        for i in range(n_tenants):
+            prio = CLASSES[i % len(CLASSES)]
+            handles.append(
+                gwc.submit(_spec_of(seed=i, rounds=fleet_rounds),
+                           priority=prio)
+            )
+
+        # warm up until the compile counter stops moving (two quiet polls)
+        deadline = time.monotonic() + warmup_timeout_s
+        prev = -1
+        quiet = 0
+        while quiet < 2:
+            time.sleep(0.5)
+            stats = gwc.status()
+            if stats["compiles"] == prev:
+                quiet += 1
+            else:
+                quiet = 0
+                prev = stats["compiles"]
+            if time.monotonic() > deadline:
+                break
+        warm_start_tick = stats["ticks"]
+        warm_start_idx = len(server.tick_latencies())
+        base_rounds = dict(stats["rounds_by_class"])
+        base_adm = dict(stats["admissions_by_class"])
+
+        # --- measurement window (all classes stay backlogged) --------------
+        while True:
+            time.sleep(0.25)
+            stats = gwc.status()
+            if stats["ticks"] - warm_start_tick >= measure_ticks:
+                break
+        measure_end_idx = len(server.tick_latencies())
+        d_rounds = {
+            c: stats["rounds_by_class"][c] - base_rounds[c] for c in CLASSES
+        }
+        d_adm = {
+            c: stats["admissions_by_class"][c] - base_adm[c] for c in CLASSES
+        }
+        ticks_measured = stats["ticks"] - warm_start_tick
+
+        # every tenant must still be mid-flight (otherwise a drained class
+        # skews the share measurement)
+        still_queued = sum(stats["backlog"].values())
+
+        for h in handles:
+            gwc.cancel(h.id)
+        final_stats = gwc.status()
+
+    server.request_stop()
+    thread.join(30)
+    lat = (
+        np.asarray(server.tick_latencies()[warm_start_idx:measure_end_idx])
+        * 1e3
+    )
+    cold = np.asarray(server.tick_latencies()[:warm_start_idx]) * 1e3
+
+    # fair-share ratio: per-class round rate normalized by weight should be
+    # flat; report the worst relative deviation from the weight-implied share
+    w = {c: DEFAULT_PRIORITIES[c] for c in CLASSES}
+    total_r = sum(d_rounds.values())
+    total_w = sum(w.values())
+    share_err = {
+        c: abs(d_rounds[c] / max(total_r, 1) - w[c] / total_w)
+        / (w[c] / total_w)
+        for c in CLASSES
+    }
+    out.update(
+        {
+            "concurrent_remote_tenants": n_tenants,
+            "ticks_measured": int(ticks_measured),
+            "rounds_by_class": d_rounds,
+            "admissions_by_class": d_adm,
+            "fair_share_max_rel_err": round(max(share_err.values()), 4),
+            "fair_share_rel_err": {
+                c: round(e, 4) for c, e in share_err.items()
+            },
+            "fair_share_within_10pct": bool(
+                max(share_err.values()) <= 0.10
+            ),
+            "all_classes_backlogged": bool(still_queued > 0),
+            # warm tick latency (compile ticks excluded by construction:
+            # the window opens after the compile counter goes quiet)
+            "p50_tick_ms": round(float(np.percentile(lat, 50)), 3)
+            if lat.size
+            else None,
+            "p99_tick_ms": round(float(np.percentile(lat, 99)), 3)
+            if lat.size
+            else None,
+            "cold_start_ticks": int(cold.size),
+            "cold_start_total_ms": round(float(cold.sum()), 1),
+            "spills": final_stats["spills"],
+            "resumes": final_stats["resumes"],
+            "cancelled": final_stats["cancelled"],
+        }
+    )
+    return out
+
+
+def main() -> int:
+    bench = {"schema": 1, **gateway_load_benchmark()}
+    for k, v in bench.items():
+        print(f"{k}: {v}")
+    ok = (
+        bench["bit_parity"]
+        and bench["fair_share_within_10pct"]
+        and bench["concurrent_remote_tenants"] >= 16
+    )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

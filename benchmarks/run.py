@@ -1,9 +1,10 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV and
 # record the machine-readable perf trajectory to BENCH_sweep.json +
-# BENCH_session.json + BENCH_serve.json.
+# BENCH_session.json + BENCH_serve.json + BENCH_gateway.json.
 #
 #   PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_sweep.json]
 #       [--json-session BENCH_session.json] [--json-serve BENCH_serve.json]
+#       [--json-gateway BENCH_gateway.json]
 #
 # --quick runs only the sweep-engine speedup benchmark, the session-mode
 # overhead benchmark, and the serving-engine load test (what CI records and
@@ -30,6 +31,9 @@ def main() -> int:
                     help="where to write the session-overhead benchmark record")
     ap.add_argument("--json-serve", default="BENCH_serve.json", metavar="PATH",
                     help="where to write the serving-engine load-test record")
+    ap.add_argument("--json-gateway", default="BENCH_gateway.json",
+                    metavar="PATH",
+                    help="where to write the gateway load-test record")
     ap.add_argument("--json-kernels", default="BENCH_kernels.json",
                     metavar="PATH",
                     help="where to write the fused-round kernel benchmark record")
@@ -117,7 +121,7 @@ def main() -> int:
     # serving engine: Poisson arrivals of mixed tenants vs sequential solos
     from benchmarks.serve_load import serve_load_benchmark
 
-    serve = {"schema": 1, **serve_load_benchmark()}
+    serve = {"schema": 2, **serve_load_benchmark()}
     rows.append((
         "serve/engine_vs_sequential",
         serve["p50_round_latency_ms"] * 1e3,
@@ -125,7 +129,22 @@ def main() -> int:
         f"ratio={serve['throughput_ratio']}x;"
         f"bit_parity={serve['bit_parity']};"
         f"p99={serve['p99_round_latency_ms']}ms;"
+        f"cold_ticks={serve['cold_start_ticks']};"
         f"occupancy={serve['batch_occupancy']};spills={serve['spills']}",
+    ))
+
+    # gateway: remote tenants over TCP, DRR fair share, warm tick latency
+    from benchmarks.gateway_load import gateway_load_benchmark
+
+    gateway = {"schema": 1, **gateway_load_benchmark()}
+    rows.append((
+        "gateway/fair_share_load",
+        gateway["p50_tick_ms"] * 1e3,
+        f"remote_tenants={gateway['concurrent_remote_tenants']};"
+        f"share_err={gateway['fair_share_max_rel_err']};"
+        f"within_10pct={gateway['fair_share_within_10pct']};"
+        f"bit_parity={gateway['bit_parity']};"
+        f"p99={gateway['p99_tick_ms']}ms",
     ))
 
     print("name,us_per_call,derived")
@@ -141,6 +160,9 @@ def main() -> int:
     with open(args.json_serve, "w") as f:
         json.dump(serve, f, indent=2)
         f.write("\n")
+    with open(args.json_gateway, "w") as f:
+        json.dump(gateway, f, indent=2)
+        f.write("\n")
     with open(args.json_kernels, "w") as f:
         json.dump(kernels, f, indent=2)
         f.write("\n")
@@ -149,7 +171,7 @@ def main() -> int:
         f.write("\n")
     print(
         f"# wrote {args.json}, {args.json_session}, {args.json_serve}, "
-        f"{args.json_kernels} and {args.json_topology}",
+        f"{args.json_gateway}, {args.json_kernels} and {args.json_topology}",
         file=sys.stderr,
     )
     return 0

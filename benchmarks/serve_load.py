@@ -5,6 +5,16 @@ Drives a Poisson arrival process of mixed-spec tenants into one
 sessions/sec, p50/p99 per-round latency, batch occupancy, spill/resume
 counts — plus the two bars the subsystem is accountable for:
 
+Latency methodology: ticks that trigger a jit compile (detected by the
+engine's compile counter advancing) are *cold-start* ticks — they cost
+hundreds of ms once per (branch table, slot bucket) and then never again.
+Folding them into the percentile stream made the reported p99 a compile
+benchmark, not a serving one (two compiles out of ~100 ticks landed
+exactly at the 99th percentile).  The steady-state p50/p99 therefore
+exclude them, and the cold-start ticks are reported separately
+(count / each / total) so the one-time cost stays visible instead of
+masquerading as tail latency.
+
 * **bit parity**: every served tenant's trajectory equals its solo
   ``open_session(spec).run()`` bit-for-bit (the solo runs double as the
   sequential baseline);
@@ -83,7 +93,8 @@ def serve_load_benchmark(
     # --- engine run under Poisson arrivals --------------------------------
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate_hz, n_tenants))
-    latencies_ms: list[float] = []
+    latencies_ms: list[float] = []  # warm ticks only (module docstring)
+    cold_ms: list[float] = []  # ticks that paid a jit compile
     concurrent_peak = 0
     handles = []
     with FedNLServer(
@@ -91,6 +102,7 @@ def serve_load_benchmark(
     ) as srv:
         t_start = time.perf_counter()
         next_i = 0
+        prev_compiles = 0
         while next_i < n_tenants or srv._has_work():
             now = time.perf_counter() - t_start
             while next_i < n_tenants and arrivals[next_i] <= now:
@@ -100,8 +112,13 @@ def serve_load_benchmark(
                 t1 = time.perf_counter()
                 out = srv.tick()
                 tick_ms = (time.perf_counter() - t1) * 1e3
-                # every session advanced this tick waited the whole tick
-                latencies_ms.extend([tick_ms] * max(out["slots"], 1))
+                compiles = sum(g.compiles for g in srv._groups.values())
+                if compiles > prev_compiles:
+                    prev_compiles = compiles
+                    cold_ms.append(tick_ms)
+                else:
+                    # every session advanced this tick waited the whole tick
+                    latencies_ms.extend([tick_ms] * max(out["slots"], 1))
                 in_flight = sum(1 for h in handles if not h.done)
                 concurrent_peak = max(concurrent_peak, in_flight)
             elif next_i < n_tenants:
@@ -129,8 +146,12 @@ def serve_load_benchmark(
         "total_rounds": total_rounds,
         "bit_parity": bool(bit_parity),
         "sessions_per_s": round(n_tenants / serve_wall, 3),
+        # steady-state percentiles: compile (cold-start) ticks excluded
         "p50_round_latency_ms": round(float(np.percentile(lat, 50)), 3),
         "p99_round_latency_ms": round(float(np.percentile(lat, 99)), 3),
+        "cold_start_ticks": len(cold_ms),
+        "cold_start_ms": [round(c, 1) for c in cold_ms],
+        "cold_start_total_ms": round(float(sum(cold_ms)), 1),
         "batch_occupancy": (
             round(stats["batch_occupancy"], 4)
             if stats["batch_occupancy"] is not None
@@ -149,7 +170,7 @@ def serve_load_benchmark(
 
 
 def main() -> int:
-    bench = {"schema": 1, **serve_load_benchmark()}
+    bench = {"schema": 2, **serve_load_benchmark()}
     for k, v in bench.items():
         print(f"{k}: {v}")
     ok = bench["bit_parity"] and bench["concurrent_peak"] >= 8

@@ -47,6 +47,17 @@ construction outside ``src/repro/comm/``.  Which master class a spec needs
 / ``build_aggregator`` are the sanctioned seams.  A call site hand-building
 a master bypasses topology/membership dispatch and the SUBTREE coverage
 handshake, so the run silently ignores those spec fields.
+
+Rule 7 flags raw socket / FNL1-frame construction outside ``repro/comm``
+and ``repro/gateway`` — ``socket.socket(`` / ``socket.create_connection(``
+/ ``asyncio.start_server(`` / ``pack_frame(`` / ``unpack_header(`` /
+``HEADER_FMT`` anywhere else.  Those two packages own the wire: framing
+invariants (magic, header layout, exact-bit accounting) and connection
+lifecycle (retry, NODELAY, shutdown) live behind ``send_frame`` /
+``recv_frame`` / ``GatewayClient`` / the transport classes.  A script or
+test hand-rolling a socket gets none of that and silently forks the
+protocol (tests/test_comm.py is allowlisted: it pins the framing contract
+itself).
 """
 
 from __future__ import annotations
@@ -112,6 +123,11 @@ SWEEP_ALLOWLIST = {
     # (one pair failing must not abort the others), and the sweep smoke's
     # parity reference deliberately IS the sequential path
     "scripts/smoke_api.py",
+    # star-vs-tree parity pairs on the star-loopback backend: each pair is
+    # an A/B comparison of two topologies over full wire protocols — no
+    # batch group can ever hold them, so solve_many buys nothing
+    "benchmarks/topology_bench.py",
+    "scripts/smoke_topology.py",
     # this checker's own pattern table
     "scripts/check_api_migration.py",
 }
@@ -186,6 +202,32 @@ MASTER_ALLOWLIST = {
     # this checker's own pattern table
     "scripts/check_api_migration.py",
 }
+
+
+# --- rule 7: raw sockets / FNL1 frames outside repro.comm + repro.gateway ---
+
+# hand-rolled wire plumbing: raw socket construction or direct use of the
+# frame packing primitives (send_frame/recv_frame/GatewayClient are the
+# sanctioned seams and do not match)
+WIRE_RAW = re.compile(
+    r"\bsocket\s*\.\s*(?:socket|create_connection)\s*\("
+    r"|\basyncio\s*\.\s*start_server\s*\("
+    r"|\bpack_frame\s*\(|\bunpack_header\s*\(|\bHEADER_FMT\b"
+)
+
+# the whole tree: entry points, library, and tests
+WIRE_SCANNED = ["examples", "scripts", "benchmarks", "src/repro", "tests"]
+
+WIRE_ALLOWLIST = {
+    # pins the framing contract itself (header layout, magic rejection)
+    "tests/test_comm.py",
+    # this checker's own pattern table
+    "scripts/check_api_migration.py",
+}
+
+
+def is_wire_internal(rel: str) -> bool:
+    return rel.startswith(("src/repro/comm/", "src/repro/gateway/"))
 
 
 def is_comm_internal(rel: str) -> bool:
@@ -277,6 +319,15 @@ def main() -> int:
             for lineno, line in enumerate(path.read_text().splitlines(), 1):
                 if MASTER_RAW.search(line) and not line.lstrip().startswith("#"):
                     master_bad.append(f"{rel}:{lineno}: {line.strip()}")
+    wire_bad: list[str] = []
+    for layer in WIRE_SCANNED:
+        for path in sorted((ROOT / layer).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in WIRE_ALLOWLIST or is_wire_internal(rel):
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if WIRE_RAW.search(line) and not line.lstrip().startswith("#"):
+                    wire_bad.append(f"{rel}:{lineno}: {line.strip()}")
     if bad:
         print("legacy driver calls reachable outside the facade "
               "(migrate to repro.api.solve or allowlist with a reason):")
@@ -307,14 +358,22 @@ def main() -> int:
               "repro.comm.topology.make_master / open_loopback_master / "
               "build_aggregator, or allowlist with a reason):")
         print("\n".join(f"  {b}" for b in master_bad))
-    if bad or sweep_bad or backend_bad or step_bad or kernel_bad or master_bad:
+    if wire_bad:
+        print("raw socket/frame construction outside repro/comm + "
+              "repro/gateway (hand-rolled wire plumbing forks the protocol "
+              "— use send_frame/recv_frame over a transport Connection, or "
+              "GatewayClient, or allowlist with a reason):")
+        print("\n".join(f"  {b}" for b in wire_bad))
+    if (bad or sweep_bad or backend_bad or step_bad or kernel_bad
+            or master_bad or wire_bad):
         return 1
     print(f"api migration clean: {', '.join(SCANNED)} go through solve(); "
           f"{', '.join(SWEEP_SCANNED)} sweep via solve_many(); no direct "
           "backend .run()/.open() outside repro.api; no hand-rolled "
           "session polling loops; raw hessian_syrk_pallas confined to "
           "src/repro/kernels/; masters/aggregators built only via the "
-          "repro.comm.topology seams")
+          "repro.comm.topology seams; raw sockets/frames confined to "
+          "repro/comm + repro/gateway")
     return 0
 
 

@@ -35,6 +35,7 @@ from repro.api.session import (
     save_state,
 )
 from repro.api.spec import CompressorSpec, DataSpec, ExperimentSpec
+from repro.api.specwire import SPEC_WIRE_VERSION, decode_spec, encode_spec
 from repro.api.sweep import SweepSpec
 from repro.comm.transport import FaultSpec
 
@@ -70,8 +71,11 @@ __all__ = [
     "SessionHandle",
     "SessionState",
     "StopPolicy",
+    "SPEC_WIRE_VERSION",
     "SweepReport",
     "SweepSpec",
+    "decode_spec",
+    "encode_spec",
     "load_state",
     "open_session",
     "save_state",

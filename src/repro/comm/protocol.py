@@ -60,6 +60,34 @@ Topology frames (tree-of-stars, repro.comm.topology; DESIGN.md §13):
               acks with the actual set; the root asserts the acks partition
               client ids exactly (a mis-wired process tree fails loudly
               before any algorithm state exists).
+
+Gateway RPC frames (repro.gateway; DESIGN.md §14).  Same 32-byte header,
+payloads defined by ``repro.gateway.protocol`` (versioned JSON header +
+raw little-endian array blobs, the FNLS1 idiom).  The ``round`` header
+field carries the round index on RECORD frames and is 0 elsewhere;
+``client`` is unused (tenant ids are strings and live in the payload):
+
+    SUBMIT      client -> gateway: serialized ExperimentSpec + SubmitOptions
+                (repro.api.specwire versioned encoding — unknown fields are
+                rejected loudly, naming the field).
+    STATUS      client -> gateway: one tenant's status, or engine stats.
+    STREAM      client -> gateway: subscribe to a tenant's RoundRecords;
+                the gateway replies GW_OK then streams RECORD frames and
+                closes the stream with STREAM_END.
+    EVICT       client -> gateway: checkpoint the tenant to the gateway's
+                spill dir and remove it from scheduling (path in the reply).
+    CANCEL      client -> gateway: drop the tenant without a checkpoint.
+    RESULT      client -> gateway: block until the tenant finishes, then
+                return its full serialized RunReport (records with hex-exact
+                floats + the final iterate as a raw f64 blob — bit-identical
+                across the wire).
+    RECORD      gateway -> client: one streamed RoundRecord.
+    RESULT      (reply direction) the packed report payload.
+    STREAM_END  gateway -> client: end of a record stream, carrying the
+                counted-drops notice of the bounded observer queue.
+    GW_OK       gateway -> client: generic success reply (JSON payload).
+    GW_ERR      gateway -> client: failure reply naming the offending field
+                where derivable ({"error": ..., "field": ...}).
 """
 
 from __future__ import annotations
@@ -95,6 +123,17 @@ class MsgType(enum.IntEnum):
     # hierarchical topology (repro.comm.topology)
     AGG = 10
     SUBTREE = 11
+    # gateway RPC (repro.gateway; DESIGN.md §14)
+    SUBMIT = 12
+    STATUS = 13
+    STREAM = 14
+    EVICT = 15
+    CANCEL = 16
+    RESULT = 17
+    RECORD = 18
+    STREAM_END = 19
+    GW_OK = 20
+    GW_ERR = 21
 
 
 @dataclasses.dataclass(frozen=True)

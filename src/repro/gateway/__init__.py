@@ -1,0 +1,37 @@
+"""repro.gateway — networked front-end for the FedNL serving engine.
+
+The gateway puts :class:`~repro.serve_fednl.FedNLServer` behind a TCP
+socket (DESIGN.md §14): remote clients SUBMIT serialized ExperimentSpecs,
+STREAM per-round records as they are produced, and fetch bit-exact
+RunReports with RESULT — while the gateway's asyncio loop owns the engine
+tick cadence and its deficit-round-robin fair-share scheduler arbitrates
+between priority classes.  The gateway is pure transport + policy: every
+trajectory it serves is bit-identical to a solo
+``open_session(spec).run()``.
+
+Server:  ``scripts/gateway_serve.py`` or::
+
+    from repro.gateway import GatewayConfig, GatewayServer
+    GatewayServer(GatewayConfig(port=9970)).run()
+
+Client::
+
+    from repro.gateway import GatewayClient
+    with GatewayClient("127.0.0.1", 9970) as gwc:
+        h = gwc.submit(spec, until=40, priority="high")
+        report = gwc.result(h.id)
+"""
+
+from repro.gateway.client import GatewayClient, RemoteTenant, stream_records
+from repro.gateway.protocol import GatewayError
+from repro.gateway.server import GatewayConfig, GatewayServer, serve_gateway
+
+__all__ = [
+    "GatewayClient",
+    "GatewayConfig",
+    "GatewayError",
+    "GatewayServer",
+    "RemoteTenant",
+    "serve_gateway",
+    "stream_records",
+]

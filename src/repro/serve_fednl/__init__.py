@@ -18,12 +18,23 @@ under memory pressure, and guaranteed bit-identical to a solo
 """
 
 from repro.serve_fednl.engine import FedNLServer, ServeConfig, serve_all
-from repro.serve_fednl.scheduler import serve_group_key, serve_lane
+from repro.serve_fednl.scheduler import (
+    DEFAULT_PRIORITIES,
+    DEFAULT_PRIORITY,
+    FairShareQueue,
+    SubmitOptions,
+    serve_group_key,
+    serve_lane,
+)
 from repro.serve_fednl.tenant import TenantHandle
 
 __all__ = [
+    "DEFAULT_PRIORITIES",
+    "DEFAULT_PRIORITY",
+    "FairShareQueue",
     "FedNLServer",
     "ServeConfig",
+    "SubmitOptions",
     "TenantHandle",
     "serve_all",
     "serve_group_key",

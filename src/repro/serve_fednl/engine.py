@@ -27,7 +27,6 @@ import dataclasses
 import pathlib
 import threading
 import time
-from collections import deque
 from typing import Any
 
 import jax
@@ -42,12 +41,17 @@ from repro.api.session import (
     resolve_policy,
 )
 from repro.serve_fednl.scheduler import (
+    DEFAULT_PRIORITIES,
+    DEFAULT_PRIORITY,
+    FairShareQueue,
     GroupRuntime,
+    SubmitOptions,
     serve_group_key,
     serve_lane,
 )
 from repro.serve_fednl.spill import SpillManager
 from repro.serve_fednl.tenant import (
+    CANCELLED,
     EVICTED,
     FINISHED,
     QUEUED,
@@ -69,7 +73,10 @@ class ServeConfig:
     the spill victim policy (``"lru"`` | ``"cost"``).  ``spill_dir`` is
     where checkpoints go (default: a private temporary directory, removed
     at shutdown).  ``pad_pow2`` pads batch slot counts to powers of two so
-    re-formed groups reuse compiled tick programs.
+    re-formed groups reuse compiled tick programs.  ``priorities`` names
+    the admission classes and their fair-share weights (deficit round-robin
+    over class queues — DESIGN.md §14; a single class degenerates to FIFO);
+    ``quantum`` scales the per-cycle DRR credit.
     """
 
     max_resident: int = 16
@@ -78,6 +85,10 @@ class ServeConfig:
     eviction: str = "lru"
     spill_dir: str | pathlib.Path | None = None
     pad_pow2: bool = True
+    priorities: dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_PRIORITIES)
+    )
+    quantum: float = 1.0
 
 
 class FedNLServer:
@@ -95,7 +106,15 @@ class FedNLServer:
             raise ValueError("max_resident must be >= 1")
         jax.config.update("jax_enable_x64", True)
         self._lock = threading.RLock()
-        self._queue: deque[Tenant] = deque()
+        self._queue = FairShareQueue(
+            self.config.priorities, quantum=self.config.quantum
+        )
+        # the class submit() falls back to when no SubmitOptions is given
+        self._default_priority = (
+            DEFAULT_PRIORITY
+            if DEFAULT_PRIORITY in self.config.priorities
+            else self._queue._order[0]
+        )
         self._tenants: dict[str, Tenant] = {}
         self._groups: dict[tuple, GroupRuntime] = {}
         self._spill = SpillManager(
@@ -107,21 +126,35 @@ class FedNLServer:
         self._finished = 0
         self._failed = 0
         self._evicted = 0
+        self._cancelled = 0
         self._launches = 0
         self._slots_live = 0
         self._slots_padded = 0
+        self._admissions_by_class = {p: 0 for p in self.config.priorities}
+        self._rounds_by_class = {p: 0 for p in self.config.priorities}
         self._thread: threading.Thread | None = None
         self._stop_evt = threading.Event()
         self._shut = False
 
     # --- intake -----------------------------------------------------------
 
-    def submit(self, spec, until=None, tenant_id: str | None = None) -> TenantHandle:
+    def submit(
+        self,
+        spec,
+        until=None,
+        tenant_id: str | None = None,
+        options: SubmitOptions | None = None,
+    ) -> TenantHandle:
         """Enqueue one experiment; returns immediately with a handle.
 
         ``until`` follows :meth:`repro.api.session.Session.run` (None | int
-        | float | StopPolicy).  Validation is upfront: a spec ``solve()``
-        would reject is rejected here, before it ever reaches a tick.
+        | float | StopPolicy); ``options`` picks the admission priority
+        class (:class:`~repro.serve_fednl.scheduler.SubmitOptions`).
+        Validation is upfront and SYNCHRONOUS: anything ``solve()`` would
+        reject — plus a bad compressor/k, an unresolvable alpha, a bad tau,
+        an unknown priority class — is rejected here, before it ever
+        reaches a tick (a remote SUBMIT gets an error frame naming the
+        field, not a dead tenant discovered ticks later).
         """
         from repro.api.facade import check_spec
         from repro.api.registry import get_algorithm, get_backend
@@ -131,12 +164,19 @@ class FedNLServer:
         check_spec(spec, algo, backend)
         # resolve the compressor upfront: a bad name/k must fail the submit,
         # not detonate inside a later tick that serves other tenants too
+        from repro.api.batch import resolved_alpha
         from repro.compressors import get_compressor
         from repro.linalg import triu_size
 
-        d = spec.data.dims()[0]
+        d, n_clients, _ = spec.data.dims()
         cfg = spec.fednl_config()
         get_compressor(cfg.compressor, triu_size(d), cfg.k_for(d))
+        # resolve everything else _admit would have resolved lazily: the
+        # Hessian learning rate (compressor-dependent default) and, for PP,
+        # the participation size — both must fail the SUBMIT, not the tick
+        resolved_alpha(spec, d)
+        if algo.kind == "pp":
+            spec.tau_for(n_clients)
         if not backend.supports_sessions:
             raise ValueError(
                 f"backend {spec.backend!r} does not support sessions and "
@@ -150,10 +190,17 @@ class FedNLServer:
                 "or a predicate on the records instead"
             )
         return self._enqueue(
-            spec, policy, serve_lane(spec, algo, backend), tenant_id
+            spec, policy, serve_lane(spec, algo, backend), tenant_id,
+            self._resolve_priority(options),
         )
 
-    def resume(self, checkpoint, until=None, tenant_id: str | None = None) -> TenantHandle:
+    def resume(
+        self,
+        checkpoint,
+        until=None,
+        tenant_id: str | None = None,
+        options: SubmitOptions | None = None,
+    ) -> TenantHandle:
         """Re-admit a spilled/evicted/external FNLS1 checkpoint (a path from
         :meth:`evict`, :meth:`Session.save`, or a
         :class:`~repro.api.session.SessionState`).  The run continues
@@ -172,14 +219,27 @@ class FedNLServer:
         lane = serve_lane(spec, algo, backend)
         if lane == "batch" and state.backend != "local":
             lane = "solo"  # foreign state layout: replay through its backend
-        handle = self._enqueue(spec, policy, lane, tenant_id)
+        handle = self._enqueue(
+            spec, policy, lane, tenant_id, self._resolve_priority(options)
+        )
         t = handle._tenant
         t.restore = state
         t.round = int(state.round)
         t.records = list(state.records)
         return handle
 
-    def _enqueue(self, spec, policy, lane, tenant_id) -> TenantHandle:
+    def _resolve_priority(self, options: SubmitOptions | None) -> str:
+        if options is None:
+            return self._default_priority
+        if not isinstance(options, SubmitOptions):
+            raise TypeError(
+                f"options must be a SubmitOptions, got "
+                f"{type(options).__name__}"
+            )
+        options.validate(self.config.priorities)
+        return options.priority
+
+    def _enqueue(self, spec, policy, lane, tenant_id, priority) -> TenantHandle:
         with self._lock:
             if self._shut:
                 raise RuntimeError("engine is shut down")
@@ -189,10 +249,11 @@ class FedNLServer:
             if tenant_id in self._tenants:
                 raise ValueError(f"tenant id {tenant_id!r} already in use")
             t = Tenant(
-                tenant_id=tenant_id, spec=spec, policy=policy, lane=lane
+                tenant_id=tenant_id, spec=spec, policy=policy, lane=lane,
+                priority=priority,
             )
             self._tenants[tenant_id] = t
-            self._queue.append(t)
+            self._queue.push(t)
             return TenantHandle(t)
 
     # --- the tick ---------------------------------------------------------
@@ -211,7 +272,8 @@ class FedNLServer:
                    "slots": 0, "slots_padded": 0, "finished": 0}
 
             # 1. memory pressure: make room for queued tenants by spilling
-            # resident ones (victims re-queue at the back -> round-robin)
+            # resident ones (victims re-queue at the back of their class
+            # queue -> round-robin time-slicing within each class)
             resident = [
                 t for t in self._tenants.values() if t.status == RUNNING
             ]
@@ -223,10 +285,11 @@ class FedNLServer:
                 )
                 for v in victims:
                     self._spill.spill(v)
-                    self._queue.append(v)
+                    self._queue.push(v)
                     out["spilled"] += 1
 
-            # 2. admission (FIFO; resumes restore their checkpointed state)
+            # 2. admission: deficit round-robin over the priority classes
+            # (FIFO within a class; resumes restore their checkpointed state)
             n_res = sum(
                 1 for t in self._tenants.values() if t.status == RUNNING
             )
@@ -236,11 +299,12 @@ class FedNLServer:
                 and admitted < self.config.admit_per_tick
                 and n_res < self.config.max_resident
             ):
-                t = self._queue.popleft()
-                if t.status == EVICTED:
-                    continue  # evicted while queued
+                t = self._queue.pop()
+                if t is None or t.status in (EVICTED, CANCELLED):
+                    continue  # evicted/cancelled while queued
                 self._admit(t, now)
                 admitted += 1
+                self._admissions_by_class[t.priority] += 1
                 if t.status == RUNNING:
                     n_res += 1
                 elif t.status == FINISHED:
@@ -275,6 +339,7 @@ class FedNLServer:
                         rec = full_round_record(t.round, m)
                         t.records.append(rec)
                         t.round += 1
+                        self._rounds_by_class[t.priority] += 1
                         t.last_active_tick = now
                         if t.policy.hit(rec) or t.round >= t.policy.max_rounds:
                             self._finish_batch(t)
@@ -299,6 +364,7 @@ class FedNLServer:
                     rec = recs[0]
                     t.records.append(rec)
                     t.round = t.session.round
+                    self._rounds_by_class[t.priority] += 1
                 if (
                     not recs
                     or t.policy.hit(recs[0])
@@ -423,6 +489,38 @@ class FedNLServer:
             t.done_event.set()
             return t.spill_path
 
+    def cancel(self, tenant_id: str) -> None:
+        """Drop one tenant without a checkpoint: its device/session state is
+        released, any spill file is deleted, and the id leaves scheduling.
+        Unlike :meth:`evict` nothing survives — ``result()`` raises and the
+        spec must be resubmitted to run again.  Finished/failed tenants keep
+        their outcome (cancelling them is an error)."""
+        with self._lock:
+            t = self._tenants.get(tenant_id)
+            if t is None:
+                raise KeyError(f"no tenant {tenant_id!r}")
+            if t.status not in (QUEUED, RUNNING, SPILLED):
+                raise ValueError(
+                    f"tenant {tenant_id!r} is {t.status!r}; only queued/"
+                    "running/spilled tenants can be cancelled"
+                )
+            if t.status == RUNNING and t.session is not None:
+                try:
+                    t.session.close()
+                except Exception:
+                    pass
+            if t.spill_path is not None:
+                try:
+                    t.spill_path.unlink(missing_ok=True)
+                except OSError:
+                    pass
+            t.session = None
+            t.state = None
+            t.restore = None
+            t.status = CANCELLED
+            self._cancelled += 1
+            t.done_event.set()
+
     # --- driving ----------------------------------------------------------
 
     def _has_work(self) -> bool:
@@ -522,7 +620,11 @@ class FedNLServer:
                 "finished": self._finished,
                 "failed": self._failed,
                 "evicted": self._evicted,
+                "cancelled": self._cancelled,
                 "queued": len(self._queue),
+                "backlog": self._queue.backlog(),
+                "admissions_by_class": dict(self._admissions_by_class),
+                "rounds_by_class": dict(self._rounds_by_class),
                 "statuses": statuses,
                 "spills": self._spill.spill_count,
                 "resumes": self._spill.resume_count,

@@ -34,15 +34,166 @@ slot counts are padded up to powers of two by duplicating slot 0.  Safe
 because ``lax.map`` applies one per-element program to every slot — a pad
 slot's values can never shape a live slot's bits (§9 again) — and it bounds
 compile count at O(log max_group) per group key.
+
+Admission (DESIGN.md §14): tenants wait in per-priority-class queues served
+by deficit round-robin (:class:`FairShareQueue`).  Each class ``c`` has a
+configured weight ``w_c``; per DRR cycle a class earns ``quantum * w_c``
+admission credit and spends 1 credit per admitted tenant, so under
+saturation class admission rates converge to the weight ratios exactly.
+An empty class's deficit resets to zero (no credit hoarding), FIFO order
+holds within a class (one class degenerates to the PR-6 FIFO queue), and
+the head of a backlogged class ``c`` waits at most
+
+    ceil(1 / (quantum * w_c)) * sum_{j != c} (quantum * w_j + 1)
+
+foreign admissions — the starvation bound pinned by
+tests/test_serve_fednl.py's hypothesis property.  Spill victims re-enter
+the *back* of their class queue, so round-robin time-slicing now happens
+per class and the fair share composes with memory pressure.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 
 from repro.api.batch import resolved_alpha
 from repro.core.fednl_batch import BatchRoundTable
+
+# default priority classes (ServeConfig.priorities overrides); weights are
+# admission shares under saturation, not absolute rates
+DEFAULT_PRIORITIES = {"high": 4.0, "normal": 2.0, "low": 1.0}
+
+DEFAULT_PRIORITY = "normal"
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmitOptions:
+    """Per-submission scheduling choices (``FedNLServer.submit(options=...)``,
+    and the SUBMIT payload over the gateway).
+
+    ``priority`` names one of the engine's configured priority classes
+    (``ServeConfig.priorities``; defaults high/normal/low at weights 4/2/1).
+    Validation happens at submission — an unknown class is a synchronous
+    error naming the field, never a dead tenant discovered ticks later.
+    """
+
+    priority: str = DEFAULT_PRIORITY
+
+    def validate(self, classes: dict[str, float]) -> None:
+        if not isinstance(self.priority, str) or self.priority not in classes:
+            raise ValueError(
+                f"options.priority: unknown priority class "
+                f"{self.priority!r}; this engine's configured classes are "
+                f"{' | '.join(sorted(classes))}"
+            )
+
+
+class FairShareQueue:
+    """Deficit-round-robin admission queue over weighted priority classes.
+
+    ``push`` appends to the tenant's class queue (FIFO within class);
+    ``pop`` returns the next tenant under DRR (module docstring).  Class
+    iteration order is fixed (descending weight, then name) so the service
+    pattern — and therefore the starvation bound — is deterministic.
+    All state mutation happens under the engine lock (the engine is the
+    only caller); this class itself is not thread-safe.
+    """
+
+    def __init__(self, classes: dict[str, float], quantum: float = 1.0):
+        if not classes:
+            raise ValueError("need at least one priority class")
+        for name, w in classes.items():
+            if not (isinstance(w, (int, float)) and w > 0):
+                raise ValueError(
+                    f"priority class {name!r} needs a positive weight, "
+                    f"got {w!r}"
+                )
+        if quantum <= 0:
+            raise ValueError(f"quantum must be > 0, got {quantum}")
+        self.weights = {name: float(w) for name, w in classes.items()}
+        self.quantum = float(quantum)
+        self._order = sorted(self.weights, key=lambda n: (-self.weights[n], n))
+        self._queues: dict[str, deque] = {n: deque() for n in self._order}
+        self._deficit: dict[str, float] = {n: 0.0 for n in self._order}
+        self._ptr = 0
+        self._in_service = False
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+    def push(self, tenant, priority: str | None = None) -> None:
+        """Enqueue ``tenant`` at the back of its class queue.  ``priority``
+        overrides ``tenant.priority`` (used by tests driving bare objects)."""
+        name = priority if priority is not None else tenant.priority
+        if name not in self._queues:
+            raise ValueError(
+                f"unknown priority class {name!r}; configured classes are "
+                f"{' | '.join(sorted(self.weights))}"
+            )
+        self._queues[name].append(tenant)
+        self._n += 1
+
+    def _advance(self) -> None:
+        self._ptr = (self._ptr + 1) % len(self._order)
+        self._in_service = False
+
+    def pop(self):
+        """Dequeue the next tenant under DRR, or None when empty."""
+        if self._n == 0:
+            return None
+        while True:
+            name = self._order[self._ptr]
+            q = self._queues[name]
+            if not q:
+                # empty class: reset credit (no hoarding) and move on
+                self._deficit[name] = 0.0
+                self._advance()
+                continue
+            if not self._in_service:
+                # entering this class's service turn: earn one quantum
+                self._deficit[name] += self.quantum * self.weights[name]
+                self._in_service = True
+            if self._deficit[name] >= 1.0:
+                self._deficit[name] -= 1.0
+                self._n -= 1
+                return q.popleft()
+            # credit exhausted for this turn; next class
+            self._advance()
+
+    def clear(self) -> None:
+        for q in self._queues.values():
+            q.clear()
+        for name in self._deficit:
+            self._deficit[name] = 0.0
+        self._n = 0
+        self._ptr = 0
+        self._in_service = False
+
+    def backlog(self) -> dict[str, int]:
+        """Queued tenants per class (introspection / stats)."""
+        return {n: len(q) for n, q in self._queues.items()}
+
+    def starvation_bound(self, priority: str) -> int:
+        """Max foreign admissions before the head of ``priority``'s queue is
+        admitted, per the DRR analysis in the module docstring."""
+        import math
+
+        w = self.weights[priority]
+        cycles = math.ceil(1.0 / (self.quantum * w))
+        per_cycle = sum(
+            self.quantum * wj + 1
+            for n, wj in self.weights.items()
+            if n != priority
+        )
+        return int(math.ceil(cycles * per_cycle))
 
 
 def serve_lane(spec, algo, backend) -> str:

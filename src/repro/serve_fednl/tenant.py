@@ -19,13 +19,15 @@ from repro.api.report import RoundRecord, RunReport
 from repro.api.session import StopPolicy
 
 # tenant lifecycle: queued -> running <-> spilled -> finished
-#                                    \-> evicted (explicit, leaves the engine)
+#                                    \-> evicted (explicit, checkpointed, leaves the engine)
+#                                    \-> cancelled (explicit, state dropped, no checkpoint)
 #                                    \-> failed  (solo-lane step exception)
 QUEUED = "queued"
 RUNNING = "running"
 SPILLED = "spilled"
 FINISHED = "finished"
 EVICTED = "evicted"
+CANCELLED = "cancelled"
 FAILED = "failed"
 
 
@@ -37,6 +39,7 @@ class Tenant:
     spec: Any  # ExperimentSpec
     policy: StopPolicy
     lane: str  # "batch" | "solo"
+    priority: str = "normal"  # admission class (scheduler.FairShareQueue)
     status: str = QUEUED
     round: int = 0
     records: list[RoundRecord] = dataclasses.field(default_factory=list)
@@ -122,8 +125,12 @@ class TenantHandle:
         return tuple(self._tenant.records)
 
     @property
+    def priority(self) -> str:
+        return self._tenant.priority
+
+    @property
     def done(self) -> bool:
-        return self._tenant.status in (FINISHED, FAILED, EVICTED)
+        return self._tenant.status in (FINISHED, FAILED, EVICTED, CANCELLED)
 
     def wait(self, timeout: float | None = None) -> bool:
         """Block until the tenant finishes or fails (True) or the timeout
@@ -144,6 +151,11 @@ class TenantHandle:
                 f"tenant {t.tenant_id!r} was evicted to "
                 f"{t.spill_path} — resume it with "
                 "FedNLServer.resume(path) or open_session(spec, restore=path)"
+            )
+        if t.status == CANCELLED:
+            raise RuntimeError(
+                f"tenant {t.tenant_id!r} was cancelled (state dropped, no "
+                "checkpoint); resubmit the spec to run it again"
             )
         if t.report is None:
             raise RuntimeError(

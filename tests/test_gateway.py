@@ -1,0 +1,380 @@
+"""The gateway RPC layer (repro.gateway) — DESIGN.md §14.
+
+The acceptance bar extends §11 across a socket: every trajectory observed
+through the gateway — streamed RECORD frames, RESULT reports, resumes of a
+killed gateway's spill files — is bit-identical to a solo
+``open_session(spec).run()``.  Plus the transport mechanics the gateway is
+accountable for: synchronous submission errors naming the offending field,
+bounded observer queues with counted drops that never stall the engine
+tick, and strict versioned spec serialization.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CompressorSpec,
+    DataSpec,
+    ExperimentSpec,
+    decode_spec,
+    encode_spec,
+    open_session,
+)
+from repro.gateway import (
+    GatewayClient,
+    GatewayConfig,
+    GatewayError,
+    GatewayServer,
+)
+from repro.gateway import protocol as gw
+from repro.comm.protocol import Frame, MsgType
+from repro.serve_fednl import ServeConfig, SubmitOptions
+
+SHAPE = (12, 4, 20)
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def spec_of(seed=0, comp="topk", rounds=6, km=8.0, **overrides):
+    return ExperimentSpec(
+        data=DataSpec(shape=SHAPE, seed=1),
+        algorithm="fednl",
+        compressor=CompressorSpec(comp, km),
+        rounds=rounds,
+        seed=seed,
+        **overrides,
+    )
+
+
+_SOLO_CACHE: dict = {}
+
+
+def solo_report(spec):
+    if spec not in _SOLO_CACHE:
+        with open_session(spec) as s:
+            _SOLO_CACHE[spec] = s.run()
+    return _SOLO_CACHE[spec]
+
+
+def hex_traj(records):
+    return [
+        (
+            float(r.grad_norm).hex() if r.grad_norm is not None else None,
+            r.sent_bits,
+            r.sent_bits_payload,
+            r.sent_bits_wire,
+        )
+        for r in records
+    ]
+
+
+@pytest.fixture
+def gateway():
+    """An in-process gateway on an ephemeral localhost port."""
+    server = GatewayServer(
+        GatewayConfig(
+            port=0, serve=ServeConfig(max_resident=2, admit_per_tick=2)
+        )
+    )
+    ready = threading.Event()
+    addr = {}
+
+    def announce(host, port):
+        addr["host"], addr["port"] = host, port
+        ready.set()
+
+    thread = threading.Thread(
+        target=server.run, kwargs={"ready": announce}, daemon=True
+    )
+    thread.start()
+    assert ready.wait(60), "gateway did not bind"
+    yield addr["host"], addr["port"], server
+    server.request_stop()
+    thread.join(30)
+
+
+# ---------------------------------------------------------------------------
+# the wire itself: versioned spec serialization (tier-1, no sockets)
+# ---------------------------------------------------------------------------
+
+def test_specwire_roundtrip_is_exact():
+    spec = spec_of(seed=3, comp="randk", rounds=7, lam=1e-3, mu=0.0)
+    back = decode_spec(encode_spec(spec))
+    assert back == spec  # frozen dataclass equality covers every float
+
+
+def test_specwire_rejects_unknown_fields_by_dotted_name():
+    import json
+
+    payload = json.loads(encode_spec(spec_of()).decode())
+    payload["spec"]["frobnicate"] = 1
+    with pytest.raises(ValueError, match="frobnicate"):
+        gw.decode_spec_dict(payload)
+
+    payload = json.loads(encode_spec(spec_of()).decode())
+    payload["spec"]["data"]["warp"] = 9
+    with pytest.raises(ValueError, match=r"data\.warp"):
+        gw.decode_spec_dict(payload)
+
+
+def test_specwire_rejects_version_skew():
+    import json
+
+    payload = json.loads(encode_spec(spec_of()).decode())
+    payload["spec_wire_version"] = 99
+    with pytest.raises(ValueError, match="version 99"):
+        gw.decode_spec_dict(payload)
+    with pytest.raises(ValueError, match="spec_wire_version"):
+        decode_spec(b'{"spec": {}}')
+    with pytest.raises(ValueError, match="not valid JSON"):
+        decode_spec(b"\xff\xfe not json")
+
+
+def test_record_and_report_payloads_roundtrip_bit_exact():
+    spec = spec_of(seed=0, rounds=4)
+    want = solo_report(spec)
+    for i, rec in enumerate(want.records):
+        frame = gw.pack_record("t0000", i, rec)
+        tid, idx, back = gw.unpack_record(frame.payload)
+        assert (tid, idx) == ("t0000", i)
+        assert hex_traj([back]) == hex_traj([rec])
+    report = gw.unpack_report(gw.pack_report(want))
+    assert report.spec == spec
+    assert hex_traj(report.records) == hex_traj(want.records)
+    np.testing.assert_array_equal(report.x, want.x)
+    assert float(report.wall_time_s).hex() == float(want.wall_time_s).hex()
+
+
+# ---------------------------------------------------------------------------
+# RPC round trips over real TCP
+# ---------------------------------------------------------------------------
+
+def test_submit_stream_result_bit_parity(gateway):
+    host, port, _server = gateway
+    specs = [
+        spec_of(seed=0, comp="topk", rounds=6),
+        spec_of(seed=1, comp="randk", rounds=4),
+        spec_of(seed=2, comp="randseqk", rounds=7),
+    ]
+    prios = ["high", "normal", "low"]
+    with GatewayClient(host, port) as gwc:
+        handles = [
+            gwc.submit(s, priority=p) for s, p in zip(specs, prios)
+        ]
+        assert [h.priority for h in handles] == prios
+        # stream one tenant on a second connection while results arrive
+        with GatewayClient(host, port) as obs:
+            streamed = list(obs.stream(handles[0].id))
+            assert obs.stream_drops == 0
+        reports = [gwc.result(h.id) for h in handles]
+    for spec, rep in zip(specs, reports):
+        want = solo_report(spec)
+        assert hex_traj(rep.records) == hex_traj(want.records)
+        np.testing.assert_array_equal(rep.x, want.x)
+        assert rep.spec == spec
+    want0 = solo_report(specs[0])
+    assert hex_traj(streamed) == hex_traj(want0.records)
+
+
+def test_submit_errors_are_synchronous_and_name_the_field(gateway):
+    host, port, _server = gateway
+    with GatewayClient(host, port) as gwc:
+        # unknown priority class -> names options.priority
+        with pytest.raises(GatewayError, match="unknown priority class"):
+            gwc.submit(spec_of(), priority="platinum")
+        try:
+            gwc.submit(spec_of(), priority="platinum")
+        except GatewayError as e:
+            assert e.field == "options.priority"
+        # unknown spec field injected at the wire level -> names it
+        import json
+
+        raw = json.loads(encode_spec(spec_of()).decode())
+        raw["spec"]["frobnicate"] = 1
+        payload = gw._pack(
+            {
+                "spec_wire_version": raw["spec_wire_version"],
+                "spec": raw["spec"],
+                "until": None,
+                "tenant_id": None,
+                "options": None,
+            }
+        )
+        with pytest.raises(GatewayError, match="frobnicate"):
+            gwc._rpc(Frame(type=MsgType.SUBMIT, payload=payload))
+        # bad compressor k: rejected at SUBMIT, not ticks later
+        with pytest.raises(GatewayError):
+            gwc.submit(spec_of(comp="no-such-compressor"))
+        # the engine is still healthy after all those rejections
+        h = gwc.submit(spec_of(seed=5, rounds=3))
+        rep = gwc.result(h.id)
+        assert rep.rounds == 3
+
+
+def test_status_cancel_evict_over_the_wire(gateway):
+    host, port, server = gateway
+    with GatewayClient(host, port) as gwc:
+        h1 = gwc.submit(spec_of(seed=0, rounds=60))
+        h2 = gwc.submit(spec_of(seed=1, rounds=60))
+        st = gwc.status(h1.id)
+        assert st["tenant_id"] == h1.id
+        assert st["status"] in ("queued", "running", "spilled")
+        gwc.cancel(h1.id)
+        with pytest.raises(GatewayError, match="cancelled"):
+            gwc.result(h1.id)
+        path = gwc.evict(h2.id)
+        with pytest.raises(GatewayError, match="evicted"):
+            gwc.result(h2.id)
+        stats = gwc.status()
+        assert stats["cancelled"] == 1 and stats["evicted"] == 1
+        with pytest.raises(GatewayError, match="no tenant"):
+            gwc.status("t9999")
+    # the evicted checkpoint resumes bit-identically server-side; the
+    # gateway's own tick loop (still running) drives it to completion
+    spec = spec_of(seed=1, rounds=60)
+    h3 = server.engine.resume(path)
+    assert h3.wait(180), "resumed tenant never finished"
+    want = solo_report(spec)
+    got = h3.result()
+    assert hex_traj(got.records) == hex_traj(want.records)
+    np.testing.assert_array_equal(got.x, want.x)
+
+
+# ---------------------------------------------------------------------------
+# backpressure: bounded observer queues never stall the engine
+# ---------------------------------------------------------------------------
+
+def test_slow_observer_bounded_queue_counts_drops():
+    # subscription layer driven synchronously: a stalled writer (never
+    # drains) must cost the tick exactly O(1) deque appends — bounded
+    # memory, newest records kept, drops counted
+    from repro.gateway.server import _Subscription
+
+    rounds = 30
+    server = GatewayServer(GatewayConfig(stream_queue=4))
+    try:
+        h = server.engine.submit(spec_of(seed=0, rounds=rounds))
+        sub = _Subscription(h.id, maxlen=4)
+        server._subs.append(sub)
+        pump_wall = []
+        while server.engine._has_work():
+            server.engine.tick()
+            t0 = time.perf_counter()
+            server._pump()
+            pump_wall.append(time.perf_counter() - t0)
+        assert h.result().rounds == rounds  # engine never waited
+        assert sub.closed
+        assert len(sub.queue) == 4  # bounded
+        assert sub.drops == rounds - 4  # every drop counted
+        # the queue holds exactly the NEWEST records (drop-oldest)
+        assert [i for i, _ in sub.queue] == list(range(rounds - 4, rounds))
+        # pumping a stalled subscription is queue bookkeeping, not I/O
+        assert max(pump_wall) < 0.05
+    finally:
+        server.engine.shutdown()
+
+
+def test_stalled_tcp_observer_does_not_block_completion(gateway):
+    host, port, _server = gateway
+    rounds = 12
+    with GatewayClient(host, port) as gwc:
+        h = gwc.submit(spec_of(seed=0, rounds=rounds))
+        # subscribe on a second connection and then stall: read NOTHING
+        obs = GatewayClient(host, port)
+        obs._rpc(
+            gw.pack_json(
+                MsgType.STREAM, {"tenant_id": h.id, "from_start": True}
+            )
+        )
+        # the engine must finish while the observer is stalled
+        rep = gwc.result(h.id)
+        assert rep.rounds == rounds
+        # the stalled observer can still drain everything afterwards
+        got = []
+        from repro.comm.protocol import recv_frame
+
+        while True:
+            frame = recv_frame(obs._conn)
+            if frame.type == MsgType.STREAM_END:
+                end = gw.unpack_stream_end(frame.payload)
+                break
+            got.append(gw.unpack_record(frame.payload)[2])
+        obs.close()
+        assert len(got) + end["drops"] == rounds
+        want = solo_report(spec_of(seed=0, rounds=rounds))
+        assert hex_traj(got) == hex_traj(want.records[rounds - len(got):])
+
+
+# ---------------------------------------------------------------------------
+# kill the gateway, resume from its spills (net: subprocess + TCP)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.net
+def test_kill_gateway_resume_from_spill_dir(tmp_path):
+    from repro.serve_fednl import FedNLServer
+
+    spill_dir = tmp_path / "spills"
+    proc = subprocess.Popen(
+        [
+            sys.executable,
+            "scripts/gateway_serve.py",
+            "--port", "0",
+            "--max-resident", "1",  # constant spill churn
+            "--admit-per-tick", "1",
+            "--spill-dir", str(spill_dir),
+        ],
+        stdout=subprocess.PIPE,
+        text=True,
+        cwd=REPO_ROOT,
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"},
+    )
+    try:
+        line = proc.stdout.readline().strip()
+        assert line.startswith("LISTENING"), line
+        _, host, port = line.split()
+        specs = [spec_of(seed=0, rounds=30), spec_of(seed=1, rounds=30)]
+        with GatewayClient(host, int(port), connect_retry_s=30) as gwc:
+            handles = [gwc.submit(s) for s in specs]
+            ids = [h.id for h in handles]
+            # wait until both tenants have made progress AND spilled at
+            # least once (max_resident=1 guarantees churn)
+            deadline = time.monotonic() + 120
+            while time.monotonic() < deadline:
+                stats = gwc.status()
+                rounds = [gwc.status(t)["round"] for t in ids]
+                if stats["spills"] >= 2 and all(r >= 3 for r in rounds):
+                    break
+                time.sleep(0.2)
+            else:
+                pytest.fail("tenants never progressed/spilled")
+        proc.kill()  # SIGKILL: no graceful spill, only what's on disk
+        proc.wait(30)
+
+        # resume each tenant's NEWEST checkpoint locally, bit-identically
+        with FedNLServer() as srv:
+            resumed = []
+            for tid, spec in zip(ids, specs):
+                cks = sorted(
+                    spill_dir.glob(f"{tid}.r*.fnlsess"),
+                    key=lambda p: int(p.name.split(".r")[1].split(".")[0]),
+                )
+                assert cks, f"no spill files for {tid}"
+                h = srv.resume(cks[-1])
+                assert h.round >= 1
+                resumed.append(h)
+            srv.serve_until_idle(max_ticks=500)
+            for h, spec in zip(resumed, specs):
+                want = solo_report(spec)
+                got = h.result()
+                assert hex_traj(got.records) == hex_traj(want.records)
+                np.testing.assert_array_equal(got.x, want.x)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(10)

@@ -447,3 +447,218 @@ def test_random_admit_evict_tick_schedules_preserve_parity(schedule=None):
         srv.serve_until_idle(max_ticks=300)
         for i, h in handles.items():
             assert_served_bit_identical(h.result(), _POOL[i])
+
+
+# ---------------------------------------------------------------------------
+# fair-share admission: deficit round-robin over weighted priority classes
+# ---------------------------------------------------------------------------
+
+def test_fair_share_queue_admits_in_exact_weight_ratio():
+    from repro.serve_fednl import FairShareQueue
+
+    q = FairShareQueue({"high": 4.0, "normal": 2.0, "low": 1.0}, quantum=1.0)
+    for i in range(40):
+        for cls in ("high", "normal", "low"):
+            q.push(f"{cls}-{i}", priority=cls)
+    got = [q.pop() for _ in range(70)]  # 10 full DRR cycles of 4+2+1
+    counts = {
+        c: sum(1 for t in got if t.startswith(c))
+        for c in ("high", "normal", "low")
+    }
+    assert counts == {"high": 40, "normal": 20, "low": 10}
+    # FIFO within each class
+    for c in ("high", "normal", "low"):
+        mine = [t for t in got if t.startswith(c)]
+        assert mine == [f"{c}-{i}" for i in range(len(mine))]
+    assert len(q) == 120 - 70 and bool(q)
+
+
+def test_fair_share_queue_single_class_degenerates_to_fifo():
+    from repro.serve_fednl import FairShareQueue
+
+    q = FairShareQueue({"only": 3.0})
+    for i in range(10):
+        q.push(i, priority="only")
+    assert [q.pop() for _ in range(10)] == list(range(10))
+    assert q.pop() is None and not q
+
+
+def test_fair_share_queue_empty_class_hoards_no_credit():
+    from repro.serve_fednl import FairShareQueue
+
+    q = FairShareQueue({"high": 4.0, "low": 1.0}, quantum=1.0)
+    # a long low-only phase: high's turns come and go while it is empty,
+    # so its deficit must reset each pass, not accumulate
+    for i in range(20):
+        q.push(f"low-{i}", priority="low")
+    for _ in range(20):
+        assert q.pop().startswith("low")
+    # now both classes backlogged: admissions snap straight to the 4:1
+    # weights — history bought neither class a burst
+    for i in range(20):
+        q.push(f"high-{i}", priority="high")
+        q.push(f"xlow-{i}", priority="low")
+    got = [q.pop() for _ in range(20)]  # 4 DRR cycles of 4+1
+    assert sum(1 for t in got if t.startswith("high")) == 16
+    assert sum(1 for t in got if t.startswith("xlow")) == 4
+
+
+def test_fair_share_queue_validates_classes_and_pushes():
+    from repro.serve_fednl import FairShareQueue
+
+    with pytest.raises(ValueError, match="at least one"):
+        FairShareQueue({})
+    with pytest.raises(ValueError, match="positive weight"):
+        FairShareQueue({"bad": 0.0})
+    with pytest.raises(ValueError, match="quantum"):
+        FairShareQueue({"a": 1.0}, quantum=0.0)
+    q = FairShareQueue({"a": 1.0})
+    with pytest.raises(ValueError, match="unknown priority class"):
+        q.push("x", priority="b")
+
+
+def test_submit_options_validated_synchronously():
+    from repro.serve_fednl import SubmitOptions
+
+    with FedNLServer(ServeConfig(max_resident=2)) as srv:
+        with pytest.raises(ValueError, match=r"options\.priority"):
+            srv.submit(spec_of(), options=SubmitOptions(priority="vip"))
+        with pytest.raises(TypeError):
+            srv.submit(spec_of(), options={"priority": "high"})
+        # failed submissions left nothing behind
+        assert srv.stats()["tenants"] == 0
+        # a valid class is accepted and recorded on the handle
+        h = srv.submit(spec_of(rounds=2),
+                       options=SubmitOptions(priority="low"))
+        assert h.priority == "low"
+        srv.serve_until_idle(max_ticks=50)
+        assert_served_bit_identical(h.result(), spec_of(rounds=2))
+
+
+def test_cancel_drops_tenant_and_isolates_neighbors():
+    s1, s2 = spec_of(seed=30, rounds=8), spec_of(seed=31, rounds=4)
+    with FedNLServer(ServeConfig(max_resident=2, admit_per_tick=2)) as srv:
+        h1, h2 = srv.submit(s1), srv.submit(s2)
+        srv.tick()
+        srv.cancel(h1.id)
+        assert h1.status == "cancelled" and h1.done
+        with pytest.raises(RuntimeError, match="cancelled"):
+            h1.result()
+        srv.serve_until_idle(max_ticks=100)
+        # the co-batched neighbor is untouched, bit for bit
+        assert_served_bit_identical(h2.result(), s2)
+        stats = srv.stats()
+        assert stats["cancelled"] == 1
+        # terminal tenants keep their outcome: cancelling again is an error
+        with pytest.raises(ValueError, match="only queued"):
+            srv.cancel(h2.id)
+        with pytest.raises(KeyError):
+            srv.cancel("t9999")
+
+
+def test_engine_admissions_track_priority_weights_under_churn():
+    # 3x oversubscription with max_resident == admit_per_tick keeps every
+    # class backlogged and the resident set churning, so DRR admission
+    # counts must track the configured 2:1 weights
+    from repro.serve_fednl import SubmitOptions
+
+    cfg = ServeConfig(
+        max_resident=2,
+        admit_per_tick=2,
+        priorities={"gold": 2.0, "bronze": 1.0},
+        quantum=1.0,
+    )
+    with FedNLServer(cfg) as srv:
+        handles = []
+        for i in range(3):
+            handles.append(srv.submit(
+                spec_of(seed=40 + i, rounds=60),
+                options=SubmitOptions(priority="gold")))
+            handles.append(srv.submit(
+                spec_of(seed=50 + i, rounds=60),
+                options=SubmitOptions(priority="bronze")))
+        for _ in range(12):
+            srv.tick()
+        stats = srv.stats()
+        adm = stats["admissions_by_class"]
+        assert adm["gold"] + adm["bronze"] == 24  # 2 per tick, saturated
+        assert abs(adm["gold"] - 2 * adm["bronze"]) <= 2
+        assert sum(stats["backlog"].values()) > 0  # still saturated
+        for h in handles:
+            srv.cancel(h.id)
+        assert srv.stats()["cancelled"] == len(handles)
+        srv.tick()  # cancelled queue entries are discarded lazily at pop
+        assert not srv._has_work()
+
+
+def test_default_priority_used_when_no_options():
+    # an engine with custom classes and no "normal": submit() without
+    # options lands in the highest-weight class, deterministically
+    cfg = ServeConfig(priorities={"fast": 3.0, "slow": 1.0})
+    with FedNLServer(cfg) as srv:
+        h = srv.submit(spec_of(rounds=2))
+        assert h.priority == "fast"
+        srv.serve_until_idle(max_ticks=50)
+        assert_served_bit_identical(h.result(), spec_of(rounds=2))
+
+
+# the DRR starvation bound, as a property over random weight tables and
+# push/pop schedules: while a class stays backlogged, the number of foreign
+# admissions between two of its own admissions (or before its first) never
+# exceeds FairShareQueue.starvation_bound
+if HAVE_HYPOTHESIS:
+    _CLS = ("a", "b", "c", "d")
+    # dyadic weights/quanta keep the deficit arithmetic exact in binary
+    # floating point, so the analytic bound applies without rounding slack
+    _DYADIC = [0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 8.0]
+    drr_strategy = st.tuples(
+        st.lists(st.sampled_from(_DYADIC), min_size=1, max_size=4),
+        st.sampled_from([0.25, 0.5, 1.0, 2.0, 4.0]),
+        st.lists(
+            st.one_of(
+                st.tuples(st.just("push"), st.integers(0, 3)),
+                st.tuples(st.just("pop"), st.just(0)),
+            ),
+            min_size=1, max_size=300,
+        ),
+    )
+else:
+    drr_strategy = None
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(wqs=drr_strategy)
+def test_drr_starvation_bound_holds(wqs=None):
+    from repro.serve_fednl import FairShareQueue
+
+    weights_list, quantum, schedule = wqs
+    classes = {c: w for c, w in zip(_CLS, weights_list)}
+    names = sorted(classes)
+    q = FairShareQueue(classes, quantum=quantum)
+    bound = {c: q.starvation_bound(c) for c in classes}
+    foreign = {c: 0 for c in classes}
+    pushed = 0
+    for op, i in schedule:
+        if op == "push":
+            c = names[i % len(names)]
+            q.push(f"{c}#{pushed}", priority=c)
+            pushed += 1
+            continue
+        backlogged = {c for c, n in q.backlog().items() if n > 0}
+        t = q.pop()
+        if t is None:
+            continue
+        winner = t.split("#")[0]
+        for c in backlogged:
+            if c == winner:
+                foreign[c] = 0
+            else:
+                foreign[c] += 1
+                assert foreign[c] <= bound[c], (
+                    f"class {c!r} (w={classes[c]}, Q={quantum}) waited "
+                    f"{foreign[c]} foreign admissions; bound {bound[c]}"
+                )
+        for c in classes:
+            if c not in backlogged:
+                foreign[c] = 0  # not waiting; worst case restarts
