@@ -1,10 +1,10 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV and
 # record the machine-readable perf trajectory to BENCH_sweep.json +
-# BENCH_session.json + BENCH_serve.json + BENCH_gateway.json.
+# BENCH_session.json + BENCH_serve.json + BENCH_gateway.json + BENCH_obs.json.
 #
 #   PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_sweep.json]
 #       [--json-session BENCH_session.json] [--json-serve BENCH_serve.json]
-#       [--json-gateway BENCH_gateway.json]
+#       [--json-gateway BENCH_gateway.json] [--json-obs BENCH_obs.json]
 #
 # --quick runs only the sweep-engine speedup benchmark, the session-mode
 # overhead benchmark, and the serving-engine load test (what CI records and
@@ -40,6 +40,9 @@ def main() -> int:
     ap.add_argument("--json-topology", default="BENCH_topology.json",
                     metavar="PATH",
                     help="where to write the topology-layer benchmark record")
+    ap.add_argument("--json-obs", default="BENCH_obs.json", metavar="PATH",
+                    help="where to write the observability overhead/parity "
+                         "record")
     args = ap.parse_args()
 
     bench: dict = {"schema": 1, "tables": {}}
@@ -121,7 +124,7 @@ def main() -> int:
     # serving engine: Poisson arrivals of mixed tenants vs sequential solos
     from benchmarks.serve_load import serve_load_benchmark
 
-    serve = {"schema": 2, **serve_load_benchmark()}
+    serve = {"schema": 3, **serve_load_benchmark()}
     rows.append((
         "serve/engine_vs_sequential",
         serve["p50_round_latency_ms"] * 1e3,
@@ -131,6 +134,20 @@ def main() -> int:
         f"p99={serve['p99_round_latency_ms']}ms;"
         f"cold_ticks={serve['cold_start_ticks']};"
         f"occupancy={serve['batch_occupancy']};spills={serve['spills']}",
+    ))
+
+    # observability: enabled-vs-disabled throughput + bit parity (repro.obs)
+    from benchmarks.obs_bench import obs_overhead_benchmark
+
+    obs_bench = {"schema": 1, **obs_overhead_benchmark()}
+    rows.append((
+        "obs/enabled_overhead",
+        obs_bench["overhead_pct"] * 1e3,  # milli-% — keep the CSV numeric
+        f"overhead={obs_bench['overhead_pct']}%;"
+        f"bar={obs_bench['overhead_bar_pct']}%;"
+        f"bit_parity={obs_bench['bit_parity']};"
+        f"disabled_call_ns={obs_bench['disabled_call_ns']};"
+        f"verified={obs_bench['verified']}",
     ))
 
     # gateway: remote tenants over TCP, DRR fair share, warm tick latency
@@ -169,9 +186,13 @@ def main() -> int:
     with open(args.json_topology, "w") as f:
         json.dump(topo, f, indent=2)
         f.write("\n")
+    with open(args.json_obs, "w") as f:
+        json.dump(obs_bench, f, indent=2)
+        f.write("\n")
     print(
         f"# wrote {args.json}, {args.json_session}, {args.json_serve}, "
-        f"{args.json_gateway}, {args.json_kernels} and {args.json_topology}",
+        f"{args.json_gateway}, {args.json_kernels}, {args.json_topology} "
+        f"and {args.json_obs}",
         file=sys.stderr,
     )
     return 0

@@ -5,24 +5,28 @@ Drives a Poisson arrival process of mixed-spec tenants into one
 sessions/sec, p50/p99 per-round latency, batch occupancy, spill/resume
 counts — plus the two bars the subsystem is accountable for:
 
-Latency methodology: ticks that trigger a jit compile (detected by the
-engine's compile counter advancing) are *cold-start* ticks — they cost
-hundreds of ms once per (branch table, slot bucket) and then never again.
-Folding them into the percentile stream made the reported p99 a compile
-benchmark, not a serving one (two compiles out of ~100 ticks landed
-exactly at the 99th percentile).  The steady-state p50/p99 therefore
-exclude them, and the cold-start ticks are reported separately
-(count / each / total) so the one-time cost stays visible instead of
-masquerading as tail latency.
-
 * **bit parity**: every served tenant's trajectory equals its solo
   ``open_session(spec).run()`` bit-for-bit (the solo runs double as the
-  sequential baseline);
+  sequential baseline — and they run with the recorder OFF while the
+  engine runs with it ON, so parity here also exercises the §15
+  never-touch-numerics invariant);
 * **throughput**: serving N tenants through the engine beats running them
   back-to-back as solo sessions on round throughput — the win is shared
   compiled tick kernels (a handful of compiles for the whole fleet vs one
   jit per session) exactly as in-flight batching amortizes prefill in an
   LLM engine.
+
+Timing methodology (schema 3): all tick and queue timings come from a
+private ``repro.obs`` recorder installed around the engine phase — the
+``engine.tick`` span ring (duration + slots + the jit-compile delta per
+tick) and the ``engine.queue.wait_s`` histogram — not from hand-rolled
+``time.perf_counter()`` bookkeeping in this harness.  Ticks whose span
+reports a compile delta are *cold-start* ticks: they cost hundreds of ms
+once per (branch table, slot bucket) and then never again, so they are
+excluded from the steady-state percentiles and reported separately
+(count / each / total).  The queue-wait histogram is allocation-free
+log2 buckets, so its p50/p99 are bucket upper bounds (factor-2
+resolution, keys suffixed ``_le``); its mean/max are exact.
 
 ``python -m benchmarks.run --quick`` records the result to
 ``BENCH_serve.json``.
@@ -64,6 +68,34 @@ def _hex_traj(report):
     )
 
 
+def _hist_summary(hists) -> dict:
+    """Merge same-name log2 histograms (one per label set) into one
+    mean/max-exact, percentile-approximate summary in milliseconds."""
+    from repro.obs import HIST_BUCKETS, Histogram
+
+    merged = Histogram("merged", ())
+    for h in hists:
+        for i in range(HIST_BUCKETS):
+            merged.buckets[i] += h.buckets[i]
+        merged.count += h.count
+        merged.sum += h.sum
+        merged.min = min(merged.min, h.min)
+        merged.max = max(merged.max, h.max)
+    if merged.count == 0:
+        return {"count": 0, "mean_ms": 0.0, "max_ms": 0.0,
+                "p50_le_ms": 0.0, "p99_le_ms": 0.0}
+    p50 = merged.quantile_le(0.5)
+    p99 = merged.quantile_le(0.99)
+    return {
+        "count": merged.count,
+        "mean_ms": round(merged.sum / merged.count * 1e3, 3),
+        "max_ms": round(merged.max * 1e3, 3),
+        # log-bucket upper bounds — factor-2 resolution, hence the _le keys
+        "p50_le_ms": round(min(p50, merged.max) * 1e3, 3),
+        "p99_le_ms": round(min(p99, merged.max) * 1e3, 3),
+    }
+
+
 def serve_load_benchmark(
     n_tenants: int = 16,
     rounds: int = 24,
@@ -75,13 +107,14 @@ def serve_load_benchmark(
     import jax
 
     jax.config.update("jax_enable_x64", True)
+    from repro import obs
     from repro.api import open_session
     from repro.serve_fednl import FedNLServer, ServeConfig
 
     specs = _build_specs(n_tenants, rounds)
     z = specs[0].data.build()
 
-    # --- sequential baseline (and the bit-parity reference) ---------------
+    # --- sequential baseline (and the bit-parity reference), obs OFF ------
     t0 = time.perf_counter()
     solo_reports = []
     for spec in specs:
@@ -90,44 +123,55 @@ def serve_load_benchmark(
     seq_wall = time.perf_counter() - t0
     total_rounds = sum(r.rounds for r in solo_reports)
 
-    # --- engine run under Poisson arrivals --------------------------------
+    # --- engine run under Poisson arrivals, obs ON -------------------------
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate_hz, n_tenants))
-    latencies_ms: list[float] = []  # warm ticks only (module docstring)
-    cold_ms: list[float] = []  # ticks that paid a jit compile
     concurrent_peak = 0
     handles = []
-    with FedNLServer(
-        ServeConfig(max_resident=max_resident, admit_per_tick=max_resident)
-    ) as srv:
-        t_start = time.perf_counter()
-        next_i = 0
-        prev_compiles = 0
-        while next_i < n_tenants or srv._has_work():
-            now = time.perf_counter() - t_start
-            while next_i < n_tenants and arrivals[next_i] <= now:
-                handles.append(srv.submit(specs[next_i]))
-                next_i += 1
-            if srv._has_work():
-                t1 = time.perf_counter()
-                out = srv.tick()
-                tick_ms = (time.perf_counter() - t1) * 1e3
-                compiles = sum(g.compiles for g in srv._groups.values())
-                if compiles > prev_compiles:
-                    prev_compiles = compiles
-                    cold_ms.append(tick_ms)
-                else:
-                    # every session advanced this tick waited the whole tick
-                    latencies_ms.extend([tick_ms] * max(out["slots"], 1))
-                in_flight = sum(1 for h in handles if not h.done)
-                concurrent_peak = max(concurrent_peak, in_flight)
-            elif next_i < n_tenants:
-                time.sleep(
-                    max(0.0, arrivals[next_i] - (time.perf_counter() - t_start))
-                )
-        serve_wall = time.perf_counter() - t_start
-        stats = srv.stats()
-        served_reports = [h.result() for h in handles]
+    prev = obs.core.CURRENT
+    rec = obs.Recorder(span_capacity=16384)
+    obs.set_current(rec)
+    try:
+        with FedNLServer(
+            ServeConfig(max_resident=max_resident, admit_per_tick=max_resident)
+        ) as srv:
+            t_start = time.perf_counter()
+            next_i = 0
+            while next_i < n_tenants or srv._has_work():
+                now = time.perf_counter() - t_start
+                while next_i < n_tenants and arrivals[next_i] <= now:
+                    handles.append(srv.submit(specs[next_i]))
+                    next_i += 1
+                if srv._has_work():
+                    srv.tick()
+                    in_flight = sum(1 for h in handles if not h.done)
+                    concurrent_peak = max(concurrent_peak, in_flight)
+                elif next_i < n_tenants:
+                    time.sleep(
+                        max(
+                            0.0,
+                            arrivals[next_i]
+                            - (time.perf_counter() - t_start),
+                        )
+                    )
+            serve_wall = time.perf_counter() - t_start
+            stats = srv.stats()
+            served_reports = [h.result() for h in handles]
+    finally:
+        obs.set_current(prev)
+
+    # --- tick/queue timings: read back from the recorder (schema 3) -------
+    latencies_ms: list[float] = []  # steady-state, slot-weighted
+    cold_ms: list[float] = []  # ticks whose span saw a compile delta
+    for span in rec.spans("engine.tick"):
+        tick_ms = span.dur_s * 1e3
+        if span.labels.get("compiles", 0) > 0:
+            cold_ms.append(tick_ms)
+        else:
+            # every session advanced this tick waited the whole tick
+            latencies_ms.extend([tick_ms] * max(span.labels.get("slots", 0), 1))
+    queue_wait = _hist_summary(rec.hists("engine.queue.wait_s"))
+    service = _hist_summary(rec.hists("engine.batch.launch_s"))
 
     # --- bit parity (all tenants; the bar requires >= 8 concurrent) -------
     bit_parity = all(
@@ -152,6 +196,10 @@ def serve_load_benchmark(
         "cold_start_ticks": len(cold_ms),
         "cold_start_ms": [round(c, 1) for c in cold_ms],
         "cold_start_total_ms": round(float(sum(cold_ms)), 1),
+        # where a round's time goes: admission queue vs batched service
+        # (engine.queue.wait_s / engine.batch.launch_s — repro.obs recorder)
+        "queue_wait_ms": queue_wait,
+        "service_time_ms": service,
         "batch_occupancy": (
             round(stats["batch_occupancy"], 4)
             if stats["batch_occupancy"] is not None
@@ -170,7 +218,7 @@ def serve_load_benchmark(
 
 
 def main() -> int:
-    bench = {"schema": 2, **serve_load_benchmark()}
+    bench = {"schema": 3, **serve_load_benchmark()}
     for k, v in bench.items():
         print(f"{k}: {v}")
     ok = bench["bit_parity"] and bench["concurrent_peak"] >= 8

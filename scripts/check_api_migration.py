@@ -58,6 +58,15 @@ lifecycle (retry, NODELAY, shutdown) live behind ``send_frame`` /
 test hand-rolling a socket gets none of that and silently forks the
 protocol (tests/test_comm.py is allowlisted: it pins the framing contract
 itself).
+
+Rule 8 flags raw ``time.perf_counter()`` / ``time.monotonic()`` calls in
+the instrumented hot layers (``src/repro/serve_fednl``,
+``src/repro/gateway``, ``src/repro/comm``).  Timing instrumentation there
+goes through ``repro.obs`` (``obs.now()`` / ``obs.monotonic()`` plus
+recorder counters/histograms/spans — DESIGN.md §15): one clock discipline,
+one export surface, and no ad-hoc perf bookkeeping drifting away from what
+the METRICS verb reports.  ``time.sleep`` and the obs package itself (which
+owns the clock aliases) are out of scope.
 """
 
 from __future__ import annotations
@@ -226,6 +235,21 @@ WIRE_ALLOWLIST = {
 }
 
 
+# --- rule 8: raw clocks in the instrumented hot layers ----------------------
+
+# raw perf_counter/monotonic calls; repro.obs owns the clock aliases
+TIME_RAW = re.compile(r"\btime\s*\.\s*(?:perf_counter|monotonic)\s*\(")
+
+# the layers whose timing is obs-instrumented (DESIGN.md §15)
+TIME_SCANNED = [
+    "src/repro/serve_fednl",
+    "src/repro/gateway",
+    "src/repro/comm",
+]
+
+TIME_ALLOWLIST: set[str] = set()
+
+
 def is_wire_internal(rel: str) -> bool:
     return rel.startswith(("src/repro/comm/", "src/repro/gateway/"))
 
@@ -328,6 +352,15 @@ def main() -> int:
             for lineno, line in enumerate(path.read_text().splitlines(), 1):
                 if WIRE_RAW.search(line) and not line.lstrip().startswith("#"):
                     wire_bad.append(f"{rel}:{lineno}: {line.strip()}")
+    time_bad: list[str] = []
+    for layer in TIME_SCANNED:
+        for path in sorted((ROOT / layer).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in TIME_ALLOWLIST:
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if TIME_RAW.search(line) and not line.lstrip().startswith("#"):
+                    time_bad.append(f"{rel}:{lineno}: {line.strip()}")
     if bad:
         print("legacy driver calls reachable outside the facade "
               "(migrate to repro.api.solve or allowlist with a reason):")
@@ -364,8 +397,14 @@ def main() -> int:
               "— use send_frame/recv_frame over a transport Connection, or "
               "GatewayClient, or allowlist with a reason):")
         print("\n".join(f"  {b}" for b in wire_bad))
+    if time_bad:
+        print("raw time.perf_counter()/time.monotonic() in the instrumented "
+              "hot layers (timing there goes through repro.obs — use "
+              "obs.now()/obs.monotonic() and recorder instruments, or "
+              "allowlist with a reason):")
+        print("\n".join(f"  {b}" for b in time_bad))
     if (bad or sweep_bad or backend_bad or step_bad or kernel_bad
-            or master_bad or wire_bad):
+            or master_bad or wire_bad or time_bad):
         return 1
     print(f"api migration clean: {', '.join(SCANNED)} go through solve(); "
           f"{', '.join(SWEEP_SCANNED)} sweep via solve_many(); no direct "
@@ -373,7 +412,8 @@ def main() -> int:
           "session polling loops; raw hessian_syrk_pallas confined to "
           "src/repro/kernels/; masters/aggregators built only via the "
           "repro.comm.topology seams; raw sockets/frames confined to "
-          "repro/comm + repro/gateway")
+          "repro/comm + repro/gateway; raw clocks in the hot layers "
+          "confined to repro.obs")
     return 0
 
 

@@ -33,6 +33,12 @@ def main(argv=None) -> int:
     ap.add_argument("--quantum", type=float, default=1.0)
     ap.add_argument("--stream-queue", type=int, default=256,
                     help="bounded per-observer record queue (drop-oldest)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the repro.obs recorder (serve live metrics "
+                         "over the METRICS verb — watch with "
+                         "scripts/obs_top.py)")
+    ap.add_argument("--obs-spans", type=int, default=8192,
+                    help="span ring-buffer capacity when --obs is set")
     args = ap.parse_args(argv)
 
     import jax
@@ -40,6 +46,11 @@ def main(argv=None) -> int:
     jax.config.update("jax_enable_x64", True)
     from repro.gateway import GatewayConfig, GatewayServer
     from repro.serve_fednl import DEFAULT_PRIORITIES, ServeConfig
+
+    if args.obs:
+        from repro import obs
+
+        obs.enable(span_capacity=args.obs_spans)
 
     priorities = (
         {k: float(v) for k, v in json.loads(args.priorities).items()}

@@ -1,0 +1,231 @@
+"""CI gate for repro.obs: parity, disabled default, overhead sanity, export.
+
+    PYTHONPATH=src python scripts/smoke_obs.py [--skip-net]
+
+Asserts the §15 observability contract end to end:
+
+* the process default is the no-op recorder (``obs.CURRENT is obs.NULL``);
+* **bit parity, engine path**: with a live recorder installed, an
+  engine-served fleet (spill churn included, ``max_resident=2``) is
+  bit-identical to solo ``open_session(spec).run()`` references taken
+  with the recorder off — and the recorder actually saw the run
+  (``engine.tick`` spans, admission counters, queue-wait samples);
+* **bit parity, gateway path**: the same bar over localhost TCP through a
+  ``GatewayServer`` whose process recorder is enabled, plus the METRICS
+  RPC verb returning the live snapshot and the per-verb RPC histograms
+  (``--skip-net`` skips this phase for socketless environments);
+* **overhead sanity**: obs-on vs obs-off fleet wall time on a warm engine
+  stays under a loose 1.5x bound — the real ≤3% bar lives in
+  ``benchmarks/obs_bench.py`` / BENCH_obs.json where repeated
+  measurement makes it stable, this gate only catches a catastrophic
+  regression (an allocation or sync smuggled into the hot path);
+* **export sanity**: Prometheus text renders every series, and the span
+  ring round-trips through JSONL losslessly.
+
+Exits nonzero on any failure.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import threading
+import time
+
+
+def _hex_traj(report):
+    return (
+        [float(r.grad_norm).hex() for r in report.records],
+        [r.sent_bits for r in report.records],
+    )
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--skip-net", action="store_true",
+                    help="skip the localhost-TCP gateway phase")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro import obs
+    from repro.api import CompressorSpec, DataSpec, ExperimentSpec, open_session
+    from repro.serve_fednl import FedNLServer, ServeConfig
+
+    failures: list[str] = []
+    shape = (12, 4, 20)
+
+    def spec_of(seed, comp, rounds):
+        return ExperimentSpec(
+            data=DataSpec(shape=shape, seed=1),
+            compressor=CompressorSpec(comp, 8.0),
+            rounds=rounds,
+            seed=seed,
+        )
+
+    specs = [
+        spec_of(0, "topk", 6),
+        spec_of(1, "randk", 7),
+        spec_of(2, "randseqk", 5),
+        spec_of(3, "identity", 6),
+    ]
+
+    # --- phase 0: the disabled default -------------------------------------
+    if obs.core.CURRENT is not obs.NULL:
+        failures.append("process default recorder is not obs.NULL")
+    if obs.NULL.enabled:
+        failures.append("NullRecorder.enabled must be False")
+    if obs.bucket_index(1.0) != 31 or obs.bucket_le(31) != 2.0:
+        failures.append("histogram bucket geometry drifted from the §15 pin")
+
+    # --- solo references, recorder off -------------------------------------
+    z = specs[0].data.build()
+    solos = []
+    for spec in specs:
+        with open_session(spec, z=z) as s:
+            solos.append(s.run())
+
+    # --- phase 1: engine-served parity, recorder ON ------------------------
+    rec = obs.enable(span_capacity=4096)
+    try:
+        with FedNLServer(
+            ServeConfig(max_resident=2, admit_per_tick=4)
+        ) as srv:
+            handles = [srv.submit(spec) for spec in specs]
+            srv.serve_until_idle()
+            stats = srv.stats()
+            for spec, h, want in zip(specs, handles, solos):
+                got = h.result()
+                label = f"{spec.compressor.name}/r{spec.rounds}"
+                if _hex_traj(got) != _hex_traj(want):
+                    failures.append(f"{label}: obs-on served trajectory "
+                                    "diverged from obs-off solo")
+                if not np.array_equal(got.x, want.x):
+                    failures.append(f"{label}: final iterate diverged")
+        if stats["spills"] == 0:
+            failures.append("spill churn not exercised under max_resident=2")
+        ticks = rec.spans("engine.tick")
+        if not ticks:
+            failures.append("no engine.tick spans recorded")
+        elif not any(s.labels.get("compiles", 0) > 0 for s in ticks):
+            failures.append("no tick span carries a compile delta")
+        if not rec.value("engine.admissions", cls="normal"):
+            failures.append("engine.admissions{cls=normal} never incremented")
+        qw = rec.hists("engine.queue.wait_s")
+        if not qw or sum(h.count for h in qw) == 0:
+            failures.append("engine.queue.wait_s histogram is empty")
+
+        # --- export sanity on the populated recorder -----------------------
+        text = obs.export.prometheus_text(rec)
+        if "engine_tick_bucket{" not in text or "_total" not in text:
+            failures.append("prometheus export missing expected series")
+        with tempfile.NamedTemporaryFile(suffix=".jsonl") as f:
+            rec.dump_spans_jsonl(f.name)
+            back = obs.load_spans_jsonl(f.name)
+        if back != rec.spans():
+            failures.append("span JSONL round-trip is lossy")
+    finally:
+        obs.disable()
+
+    # --- phase 2: overhead sanity on a warm engine -------------------------
+    def fleet_wall(srv) -> float:
+        t0 = time.perf_counter()
+        hs = [srv.submit(spec) for spec in specs]
+        srv.serve_until_idle()
+        for h in hs:
+            h.result()
+        return time.perf_counter() - t0
+
+    with FedNLServer(ServeConfig(max_resident=4, admit_per_tick=4)) as srv:
+        fleet_wall(srv)  # warm-up: compiles land here
+        off = min(fleet_wall(srv) for _ in range(2))
+        obs.enable()
+        try:
+            on = min(fleet_wall(srv) for _ in range(2))
+        finally:
+            obs.disable()
+    if on > off * 1.5:
+        failures.append(
+            f"obs-on fleet took {on:.3f}s vs {off:.3f}s off — catastrophic "
+            "overhead (loose 1.5x sanity bound; the 3% bar is BENCH_obs)"
+        )
+
+    # --- phase 3: gateway-served parity + METRICS verb over TCP ------------
+    if not args.skip_net:
+        from repro.gateway import GatewayClient, GatewayConfig, GatewayServer
+
+        rec = obs.enable(span_capacity=4096)
+        try:
+            server = GatewayServer(
+                GatewayConfig(
+                    port=0,
+                    serve=ServeConfig(max_resident=2, admit_per_tick=4),
+                )
+            )
+            ready = threading.Event()
+            addr = {}
+
+            def announce(host, port):
+                addr["host"], addr["port"] = host, port
+                ready.set()
+
+            thread = threading.Thread(
+                target=server.run, kwargs={"ready": announce}, daemon=True
+            )
+            thread.start()
+            if not ready.wait(60):
+                failures.append("gateway did not bind within 60s")
+            else:
+                with GatewayClient(addr["host"], addr["port"]) as gwc:
+                    hs = [gwc.submit(spec) for spec in specs[:2]]
+                    reports = [gwc.result(h.id) for h in hs]
+                    snap = gwc.metrics()
+                    prom = gwc.metrics(format="prometheus")
+                for got, want in zip(reports, solos[:2]):
+                    if _hex_traj(got) != _hex_traj(want) or not np.array_equal(
+                        got.x, want.x
+                    ):
+                        failures.append(
+                            "gateway-served (obs on) diverged from obs-off solo"
+                        )
+                if not snap.get("enabled"):
+                    failures.append("METRICS verb says recorder disabled")
+                else:
+                    m = snap["metrics"]
+                    if not any(
+                        k.startswith("gateway.rpc.s") for k in m["histograms"]
+                    ):
+                        failures.append("no gateway.rpc.s histograms in METRICS")
+                    if "gateway.tick.s" not in m["histograms"]:
+                        failures.append("no gateway.tick.s histogram in METRICS")
+                if "engine_tick" not in prom.get("prometheus", ""):
+                    failures.append("prometheus format missing engine_tick")
+                server.request_stop()
+                thread.join(30)
+        finally:
+            obs.disable()
+
+    if obs.core.CURRENT is not obs.NULL:
+        failures.append("recorder not restored to NULL after the smoke")
+
+    if failures:
+        print("smoke_obs FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    net = "skipped" if args.skip_net else "included"
+    print(
+        "smoke_obs OK: obs-on engine-served == obs-off solo bit-for-bit "
+        f"(spill churn included), gateway phase {net}, overhead within the "
+        "sanity bound, exports render and round-trip"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

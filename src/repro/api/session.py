@@ -43,6 +43,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.api.report import RoundRecord, RunReport, RunReportBuilder
+from repro.obs import core as _obs
 from repro.api.spec import CompressorSpec, DataSpec, ExperimentSpec
 
 _MAGIC = b"FNLSESS1"
@@ -367,7 +368,18 @@ class Session:
             raise RuntimeError("session is closed")
         if n < 0:
             raise ValueError(f"step count must be >= 0, got {n}")
-        recs = self._handle.step_rounds(n) if n > 0 else []
+        if n == 0:
+            return []
+        rec = _obs.CURRENT
+        t0 = _obs.now()
+        recs = self._handle.step_rounds(n)
+        if rec.enabled:
+            # one step_rounds call == one device->host sync of its records
+            rec.observe(
+                "session.step.s", _obs.now() - t0, backend=self.spec.backend
+            )
+            rec.add("session.rounds", len(recs), backend=self.spec.backend)
+            rec.add("session.host_syncs", backend=self.spec.backend)
         self._builder.extend(recs)
         for rec in recs:
             for fn in self._observers:

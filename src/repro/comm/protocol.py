@@ -100,6 +100,7 @@ import jax
 import numpy as np
 
 from repro.comm.wire import EncodedMessage
+from repro.obs import core as _obs
 
 MAGIC = b"FNL1"
 HEADER_FMT = "<4sBBBBIIIQI"
@@ -134,6 +135,8 @@ class MsgType(enum.IntEnum):
     STREAM_END = 19
     GW_OK = 20
     GW_ERR = 21
+    # observability (repro.obs; DESIGN.md §15)
+    METRICS = 22
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,6 +195,10 @@ def send_frame(conn, frame: Frame) -> int:
     """Write one frame to a transport connection; returns bytes sent."""
     data = pack_frame(frame)
     conn.send(data)
+    rec = _obs.CURRENT
+    if rec.enabled:
+        rec.add("comm.frames.sent", type=frame.type.name)
+        rec.add("comm.bytes.sent", len(data), type=frame.type.name)
     return len(data)
 
 
@@ -199,6 +206,10 @@ def recv_frame(conn) -> Frame:
     """Read exactly one frame from a transport connection."""
     frame, plen = unpack_header(conn.recv_exact(HEADER_SIZE))
     payload = conn.recv_exact(plen) if plen else b""
+    rec = _obs.CURRENT
+    if rec.enabled:
+        rec.add("comm.frames.recv", type=frame.type.name)
+        rec.add("comm.bytes.recv", HEADER_SIZE + plen, type=frame.type.name)
     return dataclasses.replace(frame, payload=payload)
 
 

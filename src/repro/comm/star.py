@@ -23,7 +23,6 @@ against real TCP client processes.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import jax
@@ -31,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import protocol, wire
+from repro.obs import core as _obs
 from repro.comm.protocol import Frame, MsgType, recv_frame, send_frame
 from repro.comm.transport import Connection, loopback_pair
 from repro.compressors import get_compressor
@@ -317,12 +317,29 @@ class StarMaster:
 
     def step_round(self, r: int) -> dict:
         """One full protocol round: broadcast x, collect uplinks, aggregate,
-        Newton step.  Returns the round's scalar metrics + bit counters."""
-        self._broadcast(
-            Frame(type=MsgType.ROUND, round=r, payload=protocol.pack_vector(self.x))
-        )
-        self.x_hist.append(np.asarray(self.x))
-        return self._aggregate(self._gather_uplinks(r))
+        Newton step.  Returns the round's scalar metrics + bit counters.
+        With a live ``repro.obs`` recorder the round is wrapped in a
+        ``comm.round`` span carrying the round index and the measured wire
+        counters (host scalars only — the trajectory is untouched)."""
+        with _obs.CURRENT.span(
+            "comm.round", master=type(self).__name__
+        ) as sp:
+            self._broadcast(
+                Frame(
+                    type=MsgType.ROUND,
+                    round=r,
+                    payload=protocol.pack_vector(self.x),
+                )
+            )
+            self.x_hist.append(np.asarray(self.x))
+            m = self._aggregate(self._gather_uplinks(r))
+            sp.set(
+                round=r,
+                clients=len(self.order),
+                wire_bytes=m["measured_frame_bytes"],
+                payload_bits=m["measured_payload_bits"],
+            )
+            return m
 
     def replay_round(self, r: int, x_bcast: np.ndarray) -> None:
         """Resume support: re-broadcast a recorded iterate so clients replay
@@ -363,7 +380,7 @@ def run_star_master(
 
     grad_norms, f_vals = [], []
     bits_analytic, bits_measured, frame_bytes = [], [], []
-    t_start = time.perf_counter()
+    t_start = _obs.now()
     for r in range(rounds):
         m = master.step_round(r)
         grad_norms.append(m["grad_norm"])
@@ -375,7 +392,7 @@ def run_star_master(
             break
 
     master.stop()
-    wall = time.perf_counter() - t_start
+    wall = _obs.now() - t_start
     return StarRunResult(
         x=np.asarray(master.x),
         grad_norms=np.asarray(grad_norms),

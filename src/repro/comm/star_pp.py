@@ -38,7 +38,6 @@ per Algorithm 3's replaceable-client semantics:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import jax
@@ -46,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import protocol, wire
+from repro.obs import core as _obs
 from repro.comm.protocol import Frame, MsgType, recv_frame, send_frame
 from repro.comm.transport import (
     Connection,
@@ -408,6 +408,20 @@ class StarPPMaster:
         """One Algorithm-3 round: solve x from the invariants, sample tau
         clients, collect their deltas (dropout fallbacks included), update
         the invariants.  Returns the round's record data."""
+        with _obs.CURRENT.span(
+            "comm.round", master=type(self).__name__
+        ) as sp:
+            m = self._step_round_inner(r)
+            sp.set(
+                round=r,
+                participants=m["participants"],
+                dropped=m["dropped"],
+                wire_bytes=m["measured_frame_bytes"],
+                payload_bits=m["measured_payload_bits"],
+            )
+            return m
+
+    def _step_round_inner(self, r: int) -> dict:
         n = self.n_clients
         x = self._solve_x()
         l_pre = float(jnp.asarray(self.l_global))
@@ -462,7 +476,7 @@ class StarPPMaster:
         x_hist, l_hist = [], []
         parts_hist, drops_hist = [], []
         bits_analytic, bits_measured, frame_bytes = [], [], []
-        t_start = time.perf_counter()
+        t_start = _obs.now()
         for r in range(rounds):
             m = self.step_round(r)
             x_hist.append(m["x"])
@@ -474,7 +488,7 @@ class StarPPMaster:
             frame_bytes.append(m["measured_frame_bytes"])
 
         self.stop()
-        wall = time.perf_counter() - t_start
+        wall = _obs.now() - t_start
         return StarPPRunResult(
             x=np.asarray(self._solve_x()),
             x_hist=np.asarray(x_hist),

@@ -53,6 +53,7 @@ import numpy as np
 from repro.comm import protocol, wire
 from repro.comm.protocol import Frame, MsgType, recv_frame, send_frame
 from repro.comm.star import StarClient, StarMaster, UplinkEntry
+from repro.obs import core as _obs
 from repro.comm.transport import Connection, loopback_pair
 from repro.compressors import get_compressor
 from repro.compressors.core import message_bits
@@ -378,6 +379,18 @@ class AggregatorNode:
         self._reply(frame.round, protocol.pack_agg_hsum(count, self.h_sub))
 
     def _handle_round(self, frame: Frame) -> None:
+        # per-hop latency span: fan-down + child collection + combined reply
+        # (host-side timing only; the aggregation ops are untouched)
+        with _obs.CURRENT.span(
+            "comm.hop",
+            node=self.node_id,
+            round=frame.round,
+            children=len(self.corder),
+            combine=self.combine,
+        ):
+            self._handle_round_inner(frame)
+
+    def _handle_round_inner(self, frame: Frame) -> None:
         self._fan_down(frame)
         if self.combine == "exact":
             entries = self._collect_entries(MsgType.UPLINK)

@@ -25,6 +25,7 @@ import time
 import numpy as np
 
 from repro.comm import protocol
+from repro.obs import core as _obs
 
 
 class Connection:
@@ -187,13 +188,13 @@ def connect_to_master(
     host: str, port: int, client_id: int, timeout: float = 120.0
 ) -> SocketConnection:
     """Dial the master, retrying until it is listening; send HELLO."""
-    deadline = time.monotonic() + timeout
+    deadline = _obs.monotonic() + timeout
     while True:
         try:
             sock = socket.create_connection((host, port), timeout=timeout)
             break
         except (ConnectionRefusedError, OSError):
-            if time.monotonic() >= deadline:
+            if _obs.monotonic() >= deadline:
                 raise
             time.sleep(0.05)
     conn = SocketConnection(sock)

@@ -26,6 +26,7 @@ from repro.comm.protocol import Frame, MsgType, recv_frame, send_frame
 from repro.comm.transport import SocketConnection
 from repro.gateway import protocol as gw
 from repro.gateway.protocol import GatewayError
+from repro.obs import core as _obs
 from repro.serve_fednl.scheduler import SubmitOptions
 
 
@@ -72,7 +73,7 @@ class GatewayClient:
 
     def __init__(self, host: str, port: int, timeout: float = 120.0,
                  connect_retry_s: float = 10.0):
-        deadline = time.monotonic() + connect_retry_s
+        deadline = _obs.monotonic() + connect_retry_s
         last: Exception | None = None
         while True:
             try:
@@ -82,7 +83,7 @@ class GatewayClient:
                 break
             except OSError as exc:  # gateway may still be binding
                 last = exc
-                if time.monotonic() >= deadline:
+                if _obs.monotonic() >= deadline:
                     raise ConnectionError(
                         f"gateway {host}:{port} not reachable after "
                         f"{connect_retry_s:.0f}s: {last}"
@@ -91,6 +92,10 @@ class GatewayClient:
         self._conn = SocketConnection(sock)
         self.host, self.port = host, port
         self.stream_drops = 0  # drops notice of the most recent stream()
+        # cumulative across every stream() on this client: records the
+        # gateway's bounded queues dropped before we could read them — the
+        # caller-visible face of the server's gateway.stream.dropped counter
+        self.dropped_records = 0
 
     # --- plumbing ---------------------------------------------------------
 
@@ -178,6 +183,7 @@ class GatewayClient:
                 elif frame.type == MsgType.STREAM_END:
                     end = gw.unpack_stream_end(frame.payload)
                     self.stream_drops = int(end["drops"])
+                    self.dropped_records += self.stream_drops
                     self.stream_status = end["status"]
                     return
                 else:  # pragma: no cover - protocol violation
@@ -198,6 +204,18 @@ class GatewayClient:
 
     def cancel(self, tenant_id: str) -> None:
         self._rpc(gw.pack_json(MsgType.CANCEL, {"tenant_id": tenant_id}))
+
+    def metrics(self, format: str | None = None) -> dict:
+        """Snapshot of the gateway process's ``repro.obs`` recorder (the
+        METRICS verb; DESIGN.md §15).  Returns ``{"enabled": bool,
+        "metrics": snapshot}`` — with ``format="prometheus"`` the reply also
+        carries the text exposition under ``"prometheus"``.  Safe against a
+        gateway that never enabled observability (``enabled: false``)."""
+        body: dict = {}
+        if format is not None:
+            body["format"] = format
+        reply = self._rpc(gw.pack_json(MsgType.METRICS, body))
+        return gw.unpack_json(reply.payload)
 
     def evict(self, tenant_id: str) -> str:
         """Checkpoint + deschedule the tenant; returns the gateway-side

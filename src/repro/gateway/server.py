@@ -35,6 +35,7 @@ from collections import deque
 
 from repro.comm.protocol import Frame, MsgType
 from repro.gateway import protocol as gw
+from repro.obs import core as _obs
 from repro.serve_fednl.engine import FedNLServer, ServeConfig
 from repro.serve_fednl.tenant import CANCELLED, EVICTED, FAILED, FINISHED
 
@@ -152,13 +153,15 @@ class GatewayServer:
         """Own the engine cadence: tick in a worker thread while there is
         work, then pump subscriptions/waiters ON the loop thread (single-
         threaded access to the subscription structures — no locks)."""
-        import time
-
         while not self._stopping:
             if self.engine._has_work():
-                t0 = time.perf_counter()
+                t0 = _obs.now()
                 await asyncio.to_thread(self.engine.tick)
-                self._tick_wall.append(time.perf_counter() - t0)
+                dt = _obs.now() - t0
+                self._tick_wall.append(dt)
+                rec = _obs.CURRENT
+                if rec.enabled:
+                    rec.observe("gateway.tick.s", dt)
                 self._pump()
             else:
                 self._pump()  # flush terminal states for late subscribers
@@ -173,6 +176,7 @@ class GatewayServer:
         completion events.  Appends to bounded deques only — never a socket
         write, so the engine tick cadence is independent of observers."""
         tenants = self.engine._tenants
+        rec = _obs.CURRENT
         for sub in self._subs:
             t = tenants.get(sub.tenant_id)
             if t is None or sub.closed:
@@ -183,6 +187,8 @@ class GatewayServer:
                     if len(sub.queue) == sub.queue.maxlen:
                         sub.queue.popleft()  # drop-oldest, counted
                         sub.drops += 1
+                        if rec.enabled:
+                            rec.add("gateway.stream.dropped")
                     sub.queue.append((i, recs[i]))
                 sub.sent = len(recs)
                 sub.event.set()
@@ -218,6 +224,20 @@ class GatewayServer:
                 await writer.wait_closed()
 
     async def _dispatch(self, frame: Frame, writer) -> None:
+        # RPC latency is a plain labeled observation, not a span: spans nest
+        # through a per-thread stack, and concurrent coroutines on the loop
+        # thread would interleave their frames (DESIGN.md §15)
+        rec = _obs.CURRENT
+        t0 = _obs.now()
+        try:
+            await self._dispatch_inner(frame, writer)
+        finally:
+            if rec.enabled:
+                rec.observe(
+                    "gateway.rpc.s", _obs.now() - t0, verb=frame.type.name
+                )
+
+    async def _dispatch_inner(self, frame: Frame, writer) -> None:
         if frame.type == MsgType.SUBMIT:
             await self._rpc_submit(frame, writer)
         elif frame.type == MsgType.STATUS:
@@ -230,6 +250,8 @@ class GatewayServer:
             await self._rpc_evict(frame, writer)
         elif frame.type == MsgType.CANCEL:
             await self._rpc_cancel(frame, writer)
+        elif frame.type == MsgType.METRICS:
+            await self._rpc_metrics(frame, writer)
         else:
             raise ValueError(
                 f"unexpected frame type {frame.type.name} on a gateway "
@@ -340,10 +362,13 @@ class GatewayServer:
             sub.event.set()
             return
         recs = t.records
+        rec = _obs.CURRENT
         for i in range(sub.sent, len(recs)):
             if len(sub.queue) == sub.queue.maxlen:
                 sub.queue.popleft()
                 sub.drops += 1
+                if rec.enabled:
+                    rec.add("gateway.stream.dropped")
             sub.queue.append((i, recs[i]))
         sub.sent = len(recs)
         if t.status in (FINISHED, FAILED, EVICTED, CANCELLED):
@@ -400,6 +425,26 @@ class GatewayServer:
                 MsgType.GW_OK, {"tenant_id": tid, "checkpoint": str(path)}
             ),
         )
+
+    async def _rpc_metrics(self, frame: Frame, writer) -> None:
+        """METRICS verb (DESIGN.md §15): snapshot of the process recorder.
+
+        Reply body: ``{"enabled": bool, "metrics": snapshot}`` — plus
+        ``"prometheus"`` (text exposition) when the request asks
+        ``{"format": "prometheus"}``.  Works against a disabled recorder
+        (``enabled: false``, empty snapshot) so dashboards can poll
+        unconditionally."""
+        req = gw.unpack_json(frame.payload)
+        rec = _obs.CURRENT
+        if not rec.enabled:
+            body = {"enabled": False, "metrics": {"enabled": False}}
+        else:
+            body = {"enabled": True, "metrics": rec.snapshot()}
+            if req.get("format") == "prometheus":
+                from repro.obs import export
+
+                body["prometheus"] = export.prometheus_text(rec)
+        await gw.write_frame_async(writer, gw.pack_json(MsgType.GW_OK, body))
 
     async def _rpc_cancel(self, frame: Frame, writer) -> None:
         req = gw.unpack_json(frame.payload)

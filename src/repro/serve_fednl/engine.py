@@ -26,11 +26,12 @@ from __future__ import annotations
 import dataclasses
 import pathlib
 import threading
-import time
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.obs import core as obs
 
 from repro.api.backends import full_round_record, restored_state
 from repro.api.report import RunReport, RunReportBuilder
@@ -253,6 +254,7 @@ class FedNLServer:
                 priority=priority,
             )
             self._tenants[tenant_id] = t
+            t.enqueued_at = obs.now()
             self._queue.push(t)
             return TenantHandle(t)
 
@@ -262,12 +264,23 @@ class FedNLServer:
         """One scheduling round: pressure -> admit -> batch -> solo.
 
         Returns a small stats dict for this tick (admitted, spilled, groups,
-        live/padded slot counts, finished)."""
-        with self._lock:
+        live/padded slot counts, finished).  With a live ``repro.obs``
+        recorder installed the tick is wrapped in an ``engine.tick`` span
+        (fields: admitted/spilled/groups/slots/finished plus the jit-compile
+        delta, so consumers can split cold ticks out) and feeds the
+        engine.* counters/gauges/histograms listed in DESIGN.md §15 — all
+        host-side scalars, never touching tenant numerics."""
+        rec = obs.CURRENT
+        with self._lock, rec.span("engine.tick") as sp:
             if self._shut:
                 raise RuntimeError("engine is shut down")
             self._ticks += 1
             now = self._ticks
+            compiles0 = (
+                sum(g.compiles for g in self._groups.values())
+                if rec.enabled
+                else 0
+            )
             out = {"tick": now, "admitted": 0, "spilled": 0, "groups": 0,
                    "slots": 0, "slots_padded": 0, "finished": 0}
 
@@ -285,6 +298,7 @@ class FedNLServer:
                 )
                 for v in victims:
                     self._spill.spill(v)
+                    v.enqueued_at = obs.now()
                     self._queue.push(v)
                     out["spilled"] += 1
 
@@ -302,6 +316,13 @@ class FedNLServer:
                 t = self._queue.pop()
                 if t is None or t.status in (EVICTED, CANCELLED):
                     continue  # evicted/cancelled while queued
+                if rec.enabled and t.enqueued_at:
+                    rec.observe(
+                        "engine.queue.wait_s",
+                        obs.now() - t.enqueued_at,
+                        cls=t.priority,
+                    )
+                    rec.add("engine.admissions", cls=t.priority)
                 self._admit(t, now)
                 admitted += 1
                 self._admissions_by_class[t.priority] += 1
@@ -323,11 +344,16 @@ class FedNLServer:
                 rt = self._groups[key]
                 for lo in range(0, len(members), self.config.max_group):
                     chunk = members[lo : lo + self.config.max_group]
-                    t1 = time.perf_counter()
+                    t1 = obs.now()
                     metrics, n_pad = rt.tick_group(
                         chunk, pad_pow2=self.config.pad_pow2
                     )
-                    per = (time.perf_counter() - t1) / len(chunk)
+                    launch_s = obs.now() - t1
+                    per = launch_s / len(chunk)
+                    if rec.enabled:
+                        rec.observe("engine.batch.launch_s", launch_s)
+                        rec.observe("engine.group.slots", len(chunk))
+                        rec.add("engine.rounds", len(chunk), lane="batch")
                     self._launches += 1
                     self._slots_live += len(chunk)
                     self._slots_padded += n_pad
@@ -336,12 +362,12 @@ class FedNLServer:
                     out["slots_padded"] += n_pad
                     for t, m in zip(chunk, metrics):
                         t.wall_time_s += per
-                        rec = full_round_record(t.round, m)
-                        t.records.append(rec)
+                        rr = full_round_record(t.round, m)
+                        t.records.append(rr)
                         t.round += 1
                         self._rounds_by_class[t.priority] += 1
                         t.last_active_tick = now
-                        if t.policy.hit(rec) or t.round >= t.policy.max_rounds:
+                        if t.policy.hit(rr) or t.round >= t.policy.max_rounds:
                             self._finish_batch(t)
                             out["finished"] += 1
 
@@ -361,10 +387,11 @@ class FedNLServer:
                     continue
                 t.last_active_tick = now
                 if recs:
-                    rec = recs[0]
-                    t.records.append(rec)
+                    t.records.append(recs[0])
                     t.round = t.session.round
                     self._rounds_by_class[t.priority] += 1
+                    if rec.enabled:
+                        rec.add("engine.rounds", lane="solo")
                 if (
                     not recs
                     or t.policy.hit(recs[0])
@@ -372,6 +399,30 @@ class FedNLServer:
                 ):
                     self._finish_solo(t)
                     out["finished"] += 1
+
+            if rec.enabled:
+                if out["spilled"]:
+                    rec.add("engine.spills", out["spilled"])
+                for cls_name, depth in self._queue.backlog().items():
+                    rec.gauge("engine.queue.depth", depth, cls=cls_name)
+                rec.gauge(
+                    "engine.resident",
+                    sum(
+                        1
+                        for t in self._tenants.values()
+                        if t.status == RUNNING
+                    ),
+                )
+                sp.set(
+                    tick=now,
+                    admitted=out["admitted"],
+                    spilled=out["spilled"],
+                    groups=out["groups"],
+                    slots=out["slots"],
+                    finished=out["finished"],
+                    compiles=sum(g.compiles for g in self._groups.values())
+                    - compiles0,
+                )
             return out
 
     def _z_for(self, spec):
@@ -390,9 +441,9 @@ class FedNLServer:
             backend = get_backend(t.spec.backend)
             z = self._z_for(t.spec) if backend.needs_problem else None
             restore = t.spill_path if t.status == SPILLED else t.restore
-            t0 = time.perf_counter()
+            t0 = obs.now()
             t.session = open_session(t.spec, z=z, restore=restore)
-            t.init_time_s += time.perf_counter() - t0
+            t.init_time_s += obs.now() - t0
             t.restore = None
             t.round = t.session.round
             t.records = list(t.session.records)
@@ -402,7 +453,7 @@ class FedNLServer:
             z = self._z_for(t.spec)
             d = int(z.shape[-1])
             cfg = t.spec.fednl_config()
-            t0 = time.perf_counter()
+            t0 = obs.now()
             state = algo.init(z, cfg, x0=None, seed=t.spec.seed)
             restore = None
             if t.status == SPILLED:
@@ -416,7 +467,7 @@ class FedNLServer:
                 t.round = int(restore.round)
                 t.restore = None
             t.state = state
-            t.init_time_s += time.perf_counter() - t0
+            t.init_time_s += obs.now() - t0
             t.comp_branch = (cfg.compressor, cfg.k_for(d))
             t.group_key = serve_group_key(t.spec, d)
             if t.group_key not in self._groups:

@@ -60,6 +60,9 @@ class Tenant:
     spill_count: int = 0
     wall_time_s: float = 0.0
     init_time_s: float = 0.0
+    # obs.now() timestamp of the last queue entry (submit or spill re-queue);
+    # feeds the engine.queue.wait_s histogram at admission
+    enqueued_at: float = 0.0
     # result / failure
     report: RunReport | None = None
     error: BaseException | None = None

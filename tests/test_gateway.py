@@ -378,3 +378,89 @@ def test_kill_gateway_resume_from_spill_dir(tmp_path):
         if proc.poll() is None:
             proc.kill()
             proc.wait(10)
+
+
+# ---------------------------------------------------------------------------
+# observability at the gateway: drop accounting + the METRICS verb (§15)
+# ---------------------------------------------------------------------------
+
+def test_stream_drops_counted_in_obs_and_surfaced_to_client():
+    # subscribing from_start AFTER the run finished replays the whole
+    # history through the bounded per-subscription queue synchronously
+    # (the catch-up path), so all but the newest ``stream_queue`` records
+    # are deterministically dropped; the loss must be (a) counted in the
+    # process recorder (gateway.stream.dropped) and (b) surfaced to the
+    # caller as GatewayClient.dropped_records — never silent
+    from repro import obs
+
+    rounds = 20
+    queue = 4
+    rec = obs.enable(span_capacity=256)
+    try:
+        server = GatewayServer(
+            GatewayConfig(
+                port=0,
+                stream_queue=queue,
+                serve=ServeConfig(max_resident=2, admit_per_tick=2),
+            )
+        )
+        ready = threading.Event()
+        addr = {}
+
+        def announce(host, port):
+            addr["host"], addr["port"] = host, port
+            ready.set()
+
+        thread = threading.Thread(
+            target=server.run, kwargs={"ready": announce}, daemon=True
+        )
+        thread.start()
+        assert ready.wait(60), "gateway did not bind"
+        try:
+            with GatewayClient(addr["host"], addr["port"]) as gwc:
+                h = gwc.submit(spec_of(seed=0, rounds=rounds))
+                rep = gwc.result(h.id)
+                assert rep.rounds == rounds
+                with GatewayClient(addr["host"], addr["port"]) as sub:
+                    got = list(sub.stream(h.id, from_start=True))
+                    # bounded queue: newest records kept, loss accounted
+                    assert len(got) == queue
+                    assert sub.stream_drops == rounds - queue
+                    assert sub.dropped_records == sub.stream_drops
+                    want = solo_report(spec_of(seed=0, rounds=rounds))
+                    assert hex_traj(got) == hex_traj(
+                        want.records[rounds - queue:]
+                    )
+                    # a second, keeping-up stream accumulates (cumulative
+                    # per-client counter, per-stream count in stream_drops)
+                    got2 = list(sub.stream(h.id, from_start=True))
+                    assert len(got2) == queue  # catch-up replay again
+                    assert sub.dropped_records == 2 * (rounds - queue)
+                    drops = 2 * (rounds - queue)
+
+                # the METRICS verb sees the same count, live over TCP
+                snap = gwc.metrics()
+                assert snap["enabled"] is True
+                assert (
+                    snap["metrics"]["counters"]["gateway.stream.dropped"]
+                    == drops
+                )
+                prom = gwc.metrics(format="prometheus")
+                assert (
+                    f"gateway_stream_dropped_total {drops}"
+                    in prom["prometheus"]
+                )
+        finally:
+            server.request_stop()
+            thread.join(30)
+    finally:
+        obs.disable()
+    assert rec.value("gateway.stream.dropped") == drops
+
+
+def test_metrics_verb_with_recorder_disabled(gateway):
+    # the verb must answer (not error) when observability is off
+    host, port, _server = gateway
+    with GatewayClient(host, port) as gwc:
+        snap = gwc.metrics()
+    assert snap["enabled"] is False

@@ -1,0 +1,346 @@
+"""Tests for repro.obs — the zero-overhead observability subsystem (§15).
+
+Covers the contracts DESIGN.md §15 pins: the no-op default (and that the
+disabled guard allocates nothing), the log2 histogram bucket geometry,
+span nesting + JSONL round-trip, recorder install/restore, the Prometheus
+exposition format, and — the bar everything else hangs off — bit parity:
+running with the recorder enabled never changes a single bit of any
+trajectory, solo or engine-served.
+"""
+
+import gc
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import core
+
+
+@pytest.fixture(autouse=True)
+def _null_recorder():
+    """Every test starts and ends at the process default (NULL)."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+# ---------------------------------------------------------------- no-op path
+
+
+def test_default_recorder_is_null_singleton():
+    assert core.CURRENT is obs.NULL
+    assert obs.CURRENT is obs.NULL
+    assert obs.get() is obs.NULL
+    assert obs.NULL.enabled is False
+    assert isinstance(obs.NULL, obs.NullRecorder)
+
+
+def test_null_recorder_accepts_full_api_and_returns_singletons():
+    n = obs.NULL
+    n.add("c", 3, cls="x")
+    n.gauge("g", 1.5)
+    n.observe("h", 0.25, verb="SUBMIT")
+    assert n.counter("c") is n.counter("other")  # shared no-op instrument
+    n.counter("c").add(5)
+    n.histogram("h").observe(1.0)
+    with n.span("s", tenant=7) as sp:
+        assert sp.set(x=1) is sp  # chainable, still no-op
+        with n.span("inner") as sp2:
+            assert sp2 is sp  # the one shared null span
+
+
+def test_disabled_guard_is_allocation_free():
+    # the instrumentation idiom is `if rec.enabled: rec.add(...)` — with the
+    # NULL recorder the guard must not allocate (no closures, no dicts)
+    rec = core.CURRENT
+    assert not rec.enabled
+    gc.collect()
+    gc.disable()
+    try:
+        before = len(gc.get_objects())
+        for _ in range(1000):
+            if rec.enabled:  # pragma: no cover - disabled path
+                rec.add("x", cls="normal")
+        after = len(gc.get_objects())
+    finally:
+        gc.enable()
+    assert after == before
+
+
+# ---------------------------------------------------------- histogram buckets
+
+
+def test_bucket_geometry_pins():
+    # 64 log2 buckets, bucket i upper bound = 2**(HIST_LO_EXP + i)
+    assert obs.HIST_BUCKETS == 64
+    assert obs.HIST_LO_EXP == -30
+    assert obs.bucket_index(1.0) == 31  # frexp(1.0) -> (0.5, 1)
+    assert obs.bucket_index(0.75) == 30
+    assert obs.bucket_index(2.0**-31) == 0  # clamped at the low end
+    assert obs.bucket_index(0.0) == 0
+    assert obs.bucket_index(-1.0) == 0
+    assert obs.bucket_index(1e300) == 63  # clamped overflow bucket
+    assert obs.bucket_le(31) == 2.0
+    assert obs.bucket_le(0) == 2.0**-30
+    assert obs.bucket_le(63) == float("inf")
+
+
+def test_bucket_index_brackets_value():
+    # every positive value lands in a bucket whose upper bound covers it
+    # and is at most one octave above (exact powers of two land in the
+    # bucket ABOVE their own bound: frexp(0.5) == (0.5, 0))
+    for v in [1e-12, 3e-7, 0.001, 0.02, 0.5, 1.0, 7.3, 1e6]:
+        i = obs.bucket_index(v)
+        assert v <= obs.bucket_le(i)
+        if 0 < i < obs.HIST_BUCKETS - 1:
+            assert v >= obs.bucket_le(i) / 2
+
+
+def test_histogram_exact_and_approx_stats():
+    rec = obs.Recorder()
+    for v in [0.001, 0.002, 0.004, 0.004, 1.5]:
+        rec.observe("lat", v, verb="STEP")
+    h = rec.hist("lat", verb="STEP")
+    assert h.count == 5
+    assert h.sum == pytest.approx(1.511)
+    assert h.min == 0.001 and h.max == 1.5
+    # quantile_le returns a bucket upper bound covering >= q of the mass
+    assert h.quantile_le(0.5) >= 0.004
+    assert h.quantile_le(1.0) >= 1.5
+    assert rec.hist("lat", verb="OTHER") is None
+    assert rec.hists("lat") == [h]
+
+
+def test_counter_gauge_value_and_label_keying():
+    rec = obs.Recorder()
+    rec.add("rounds", 3, lane="batch")
+    rec.add("rounds", 1, lane="batch")
+    rec.add("rounds", 1, lane="solo")
+    rec.gauge("depth", 7, cls="normal")
+    assert rec.value("rounds", lane="batch") == 4
+    assert rec.value("rounds", lane="solo") == 1
+    assert rec.value("rounds", lane="nope") is None
+    assert rec.value("depth", cls="normal") == 7
+    # bound handles hit the same series as the convenience calls
+    rec.counter("rounds", lane="batch").add(2)
+    assert rec.value("rounds", lane="batch") == 6
+
+
+# ------------------------------------------------------------------- spans
+
+
+def test_span_nesting_parent_and_depth():
+    rec = obs.Recorder()
+    with rec.span("outer", round=1):
+        with rec.span("inner", tenant=3) as sp:
+            sp.set(extra=9)
+    inner, outer = rec.spans("inner")[0], rec.spans("outer")[0]
+    assert inner.parent == "outer" and inner.depth == 1
+    assert outer.parent is None and outer.depth == 0
+    assert inner.labels == {"tenant": 3, "extra": 9}
+    assert outer.labels == {"round": 1}
+    assert 0 <= inner.dur_s <= outer.dur_s
+    # inner closed first: ring is completion-ordered
+    assert [s.name for s in rec.spans()] == ["inner", "outer"]
+    # each span exit feeds the label-free duration histogram (§15: high-
+    # cardinality labels ride on spans, never on metric series)
+    assert rec.hist("inner").count == 1
+    assert rec.hists("inner") == [rec.hist("inner")]
+
+
+def test_span_ring_bounded_drop_oldest_counted():
+    rec = obs.Recorder(span_capacity=4)
+    for i in range(10):
+        with rec.span("s", i=i):
+            pass
+    kept = rec.spans("s")
+    assert len(kept) == 4
+    assert [s.labels["i"] for s in kept] == [6, 7, 8, 9]  # newest kept
+    assert rec.spans_dropped == 6
+    assert rec.snapshot()["spans_dropped"] == 6
+
+
+def test_span_jsonl_round_trip(tmp_path):
+    rec = obs.Recorder()
+    with rec.span("a", round=2, backend="local"):
+        with rec.span("b", tenant=11):
+            pass
+    path = tmp_path / "spans.jsonl"
+    n = rec.dump_spans_jsonl(path)
+    assert n == 2
+    lines = path.read_text().splitlines()
+    assert len(lines) == 2
+    assert all(isinstance(json.loads(ln), dict) for ln in lines)
+    back = obs.load_spans_jsonl(path)
+    assert back == rec.spans()
+    assert back[0].labels == {"tenant": 11}
+
+
+def test_exception_inside_span_still_records_and_propagates():
+    rec = obs.Recorder()
+    with pytest.raises(ValueError):
+        with rec.span("boom"):
+            raise ValueError("x")
+    assert len(rec.spans("boom")) == 1
+    # the thread-local stack unwound: a new span is root again
+    with rec.span("after"):
+        pass
+    assert rec.spans("after")[0].depth == 0
+
+
+# ------------------------------------------------- install/restore + export
+
+
+def test_enable_disable_swaps_both_module_attrs():
+    rec = obs.enable(span_capacity=16)
+    assert core.CURRENT is rec and obs.CURRENT is rec
+    assert rec.enabled
+    assert obs.disable() is obs.NULL
+    assert core.CURRENT is obs.NULL and obs.CURRENT is obs.NULL
+
+
+def test_set_current_restores_previous():
+    mine = obs.Recorder()
+    prev = core.CURRENT
+    obs.set_current(mine)
+    try:
+        core.CURRENT.add("x")
+        assert mine.value("x") == 1
+    finally:
+        obs.set_current(prev)
+    assert core.CURRENT is prev
+
+
+def test_snapshot_formats_series_keys():
+    rec = obs.Recorder()
+    rec.add("engine.rounds", 2, lane="batch")
+    rec.gauge("engine.resident", 3)
+    rec.observe("engine.tick", 0.5)
+    snap = rec.snapshot()
+    assert snap["counters"]["engine.rounds{lane=batch}"] == 2
+    assert snap["gauges"]["engine.resident"] == 3
+    h = snap["histograms"]["engine.tick"]
+    assert h["count"] == 1
+    assert h["p50_le"] >= 0.5 and h["p99_le"] >= 0.5
+
+
+def test_prometheus_text_format():
+    from repro.obs.export import prometheus_text
+
+    rec = obs.Recorder()
+    rec.add("engine.rounds", 5, lane="batch")
+    rec.gauge("engine.resident", 2)
+    for v in [0.001, 0.5, 2.0]:
+        rec.observe("gateway.rpc.s", v, verb="SUBMIT")
+    text = prometheus_text(rec)
+    assert 'engine_rounds_total{lane="batch"} 5' in text
+    assert "engine_resident 2" in text
+    assert '# TYPE gateway_rpc_s histogram' in text
+    assert 'gateway_rpc_s_bucket{verb="SUBMIT",le="+Inf"} 3' in text
+    assert 'gateway_rpc_s_count{verb="SUBMIT"} 3' in text
+    # exactly one +Inf bucket per series (the overflow bucket is not
+    # rendered twice)
+    assert text.count('le="+Inf"') == 1
+    assert "obs_spans_dropped_total 0" in text
+    # cumulative counts are monotone non-decreasing
+    counts = [
+        int(ln.rsplit(" ", 1)[1])
+        for ln in text.splitlines()
+        if ln.startswith("gateway_rpc_s_bucket")
+    ]
+    assert counts == sorted(counts)
+    assert counts[-1] == 3
+
+
+def test_reset_clears_everything():
+    rec = obs.Recorder()
+    rec.add("c", 1)
+    rec.observe("h", 1.0)
+    with rec.span("s"):
+        pass
+    rec.reset()
+    assert rec.value("c") is None
+    assert rec.spans() == []
+    assert rec.snapshot()["counters"] == {}
+
+
+# ------------------------------------------------------------- bit parity
+
+
+def _spec(seed, comp, rounds):
+    from repro.api import CompressorSpec, DataSpec, ExperimentSpec
+
+    return ExperimentSpec(
+        data=DataSpec(shape=(8, 4, 12), seed=1),
+        compressor=CompressorSpec(comp, 6.0),
+        rounds=rounds,
+        seed=seed,
+    )
+
+
+def _traj(report):
+    return (
+        [float(r.grad_norm).hex() for r in report.records],
+        [r.sent_bits for r in report.records],
+    )
+
+
+def test_bit_parity_solo_session_obs_on_vs_off():
+    from repro.api import open_session
+
+    spec = _spec(0, "topk", 5)
+    with open_session(spec) as s:
+        off = s.run()
+    obs.enable()
+    try:
+        with open_session(spec) as s:
+            on = s.run()
+    finally:
+        obs.disable()
+    assert _traj(on) == _traj(off)
+    assert np.array_equal(on.x, off.x)
+
+
+def test_bit_parity_engine_served_obs_on_vs_off_solo():
+    from repro.api import open_session
+    from repro.serve_fednl import FedNLServer, ServeConfig
+
+    specs = [_spec(0, "topk", 5), _spec(1, "randk", 6), _spec(2, "identity", 4)]
+    solos = []
+    for spec in specs:
+        with open_session(spec) as s:
+            solos.append(s.run())
+    rec = obs.enable(span_capacity=512)
+    try:
+        with FedNLServer(ServeConfig(max_resident=2, admit_per_tick=3)) as srv:
+            handles = [srv.submit(spec) for spec in specs]
+            srv.serve_until_idle()
+            served = [h.result() for h in handles]
+    finally:
+        obs.disable()
+    for got, want in zip(served, solos):
+        assert _traj(got) == _traj(want)
+        assert np.array_equal(got.x, want.x)
+    # and the recorder actually observed the run
+    assert rec.spans("engine.tick")
+    assert rec.value("engine.rounds", lane="batch") or rec.value(
+        "engine.rounds", lane="solo"
+    )
+
+
+def test_session_step_metrics_recorded():
+    from repro.api import open_session
+
+    spec = _spec(3, "randseqk", 4)
+    rec = obs.enable()
+    try:
+        with open_session(spec) as s:
+            s.step(2)
+            s.step(2)
+    finally:
+        obs.disable()
+    assert rec.value("session.rounds", backend="local") == 4
+    assert rec.value("session.host_syncs", backend="local") == 2
+    assert rec.hist("session.step.s", backend="local").count == 2
